@@ -1,0 +1,41 @@
+"""Fig. 1 — application performance across GPU counts (3 systems).
+
+Emits per-(system, app) normalized runtime at g ∈ {1..4} and the
+performance-optimal count, demonstrating heterogeneous / non-monotonic
+scaling (miniweather optimal at 1 on H100 vs 4 on V100 etc.).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Csv
+from repro.core import calibration as C
+
+REPRESENTATIVE = (
+    "miniweather", "gpt2", "pot3d", "resnet50", "lbm", "vgg16", "MonteCarlo",
+)
+
+
+def run(csv: Csv, verbose: bool = True):
+    t0 = time.perf_counter()
+    opt_counts = {}
+    for system in ("h100", "a100", "v100"):
+        truth = C.build_system(system)
+        for app in REPRESENTATIVE:
+            prof = truth[app]
+            t1 = prof.runtime[1]
+            curve = [round(prof.runtime[g] / t1, 3) for g in (1, 2, 3, 4)]
+            opt_counts[(system, app)] = prof.optimal_count()
+            if verbose:
+                print(f"fig1 {system:5s} {app:14s} t(g)/t(1)={curve} optimal={prof.optimal_count()}")
+    # headline checks from Fig. 1: miniweather optimal 1 on H100, 4 on V100
+    assert opt_counts[("h100", "miniweather")] == 1
+    assert opt_counts[("v100", "miniweather")] == 4
+    us = (time.perf_counter() - t0) * 1e6
+    csv.add("fig1_scaling", us, "miniweather_opt_h100=1;v100=4")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.emit()

@@ -1,0 +1,47 @@
+"""Fig. 2 — per-application perf/energy tradeoff of one-fewer-GPU (H100).
+
+For gpt2 (3→2), pot3d (4→3), resnet50 (4→3): performance loss, active
+energy saving, and EDP change between the performance-optimal count and
+one fewer GPU.  Paper anchor: gpt2 ≈ 3–8% perf loss for ~24% energy
+saving.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Csv
+from repro.core import calibration as C
+
+CASES = [("gpt2", 3, 2), ("pot3d", 4, 3), ("resnet50", 4, 3)]
+
+
+def run(csv: Csv, verbose: bool = True):
+    t0 = time.perf_counter()
+    truth = C.build_system("h100")
+    derived = []
+    for app, g_opt, g_less in CASES:
+        prof = truth[app]
+        perf_loss = prof.runtime[g_less] / prof.runtime[g_opt] - 1.0
+        e_opt = prof.energy(g_opt)
+        e_less = prof.energy(g_less)
+        saving = 1.0 - e_less / e_opt
+        edp_opt = e_opt * prof.runtime[g_opt]
+        edp_less = e_less * prof.runtime[g_less]
+        edp_save = 1.0 - edp_less / edp_opt
+        if verbose:
+            print(
+                f"fig2 {app:9s} {g_opt}→{g_less}: perf_loss={perf_loss*100:5.1f}% "
+                f"energy_saving={saving*100:5.1f}% edp_saving={edp_save*100:5.1f}%"
+            )
+        derived.append(f"{app}:{perf_loss*100:.0f}%loss/{saving*100:.0f}%save")
+    gpt2 = truth["gpt2"]
+    assert 0.02 < gpt2.runtime[2] / gpt2.runtime[3] - 1 < 0.12  # 3–8% band
+    assert 1 - gpt2.energy(2) / gpt2.energy(3) > 0.15  # ~24% band
+    us = (time.perf_counter() - t0) * 1e6
+    csv.add("fig2_tradeoff", us, ";".join(derived))
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.emit()

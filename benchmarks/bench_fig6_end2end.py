@@ -1,0 +1,54 @@
+"""Fig. 6 — end-to-end policy comparison on H100 / A100 / V100.
+
+Energy saving, makespan improvement and EDP saving for Marble, EcoSched
+and the Oracle, relative to BOTH sequential baselines
+(sequential_optimal_gpu and sequential_max_gpu), plus the paper's
+reported numbers side by side.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Csv, run_system
+from repro.core import calibration as C
+from repro.core import summarize
+
+
+def run(csv: Csv, verbose: bool = True, with_oracle: bool = True, oracle_budget_s: float = 25.0):
+    derived = []
+    for system in ("h100", "a100", "v100"):
+        t0 = time.perf_counter()
+        res, truth = run_system(system, with_oracle=with_oracle, oracle_budget_s=oracle_budget_s)
+        for base_name in ("sequential_optimal_gpu", "sequential_max_gpu"):
+            base = res[base_name]
+            for pol in ("marble", "ecosched", "oracle"):
+                if pol not in res:
+                    continue
+                s = summarize(base, res[pol])
+                paper = C.PAPER_HEADLINE.get(system, {}).get(pol.rstrip("~"), {})
+                ref = ""
+                if base_name == "sequential_optimal_gpu" and paper:
+                    ref = (
+                        f"  [paper: e={paper.get('energy', float('nan'))*100:.1f}%"
+                        f" m={paper.get('makespan', float('nan'))*100 if 'makespan' in paper else float('nan'):.1f}%"
+                        f" edp={paper.get('edp', float('nan'))*100 if 'edp' in paper else float('nan'):.1f}%]"
+                    )
+                if verbose:
+                    print(
+                        f"fig6 {system:5s} {res[pol].policy:10s} vs {base_name:22s}: "
+                        f"energy {s['energy_saving']*100:5.1f}%  "
+                        f"makespan {s['makespan_improvement']*100:5.1f}%  "
+                        f"EDP {s['edp_saving']*100:5.1f}%{ref}"
+                    )
+                if base_name == "sequential_optimal_gpu" and pol == "ecosched":
+                    derived.append(
+                        f"{system}:e{s['energy_saving']*100:.1f}/m{s['makespan_improvement']*100:.1f}/d{s['edp_saving']*100:.1f}"
+                    )
+        us = (time.perf_counter() - t0) * 1e6
+        csv.add(f"fig6_end2end_{system}", us, derived[-1] if derived else "")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.emit()

@@ -1,0 +1,42 @@
+"""Fig. 9 — per-application performance loss under EcoSched vs solo
+execution at the performance-optimal count, across all systems.
+
+Paper anchors: moderate losses for downsized apps (gpt2/pot3d/resnet101 on
+H100); miniweather on V100 ≈ 40% (4→1, traded for ~20% energy saving).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Csv, run_system
+from repro.core import perf_loss
+
+
+def run(csv: Csv, verbose: bool = True):
+    t0 = time.perf_counter()
+    worst = {}
+    for system in ("h100", "a100", "v100"):
+        res, truth = run_system(system)
+        losses = perf_loss(res["ecosched"], truth)
+        mean_loss = sum(losses.values()) / len(losses)
+        w = max(losses.items(), key=lambda kv: kv[1])
+        worst[system] = w
+        if verbose:
+            print(f"fig9 {system}: mean loss {mean_loss*100:.1f}%, worst {w[0]} {w[1]*100:.1f}%")
+            for app, l in sorted(losses.items(), key=lambda kv: -kv[1])[:6]:
+                print(f"    {app:24s} {l*100:6.1f}%")
+    # paper: miniweather V100 ~40%
+    res_v, truth_v = run_system("v100")
+    l_v = perf_loss(res_v["ecosched"], truth_v)
+    assert 0.30 < l_v["miniweather"] < 0.50, l_v["miniweather"]
+    us = (time.perf_counter() - t0) * 1e6
+    csv.add(
+        "fig9_perf_loss", us,
+        ";".join(f"{s}:worst={a}@{l*100:.0f}%" for s, (a, l) in worst.items()),
+    )
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.emit()

@@ -1,0 +1,62 @@
+"""§Roofline — the three-term table for every dry-run cell.
+
+Reads ``benchmarks/results/dryrun/*.json`` (produced by
+``python -m repro.launch.dryrun --all --both-meshes``) and prints, per
+(arch × shape × mesh): compute / memory / collective terms in seconds,
+the dominant term, MODEL_FLOPS/HLO ratio, HBM fit, and a one-line
+bottleneck note.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Csv, load_dryrun
+from repro.configs import SHAPES, get_config
+from repro.roofline import analysis as RA
+from repro.roofline.hw import TPU_V5E
+
+NOTES = {
+    "compute": "compute-bound: raise MXU efficiency (remat policy, fusion)",
+    "memory": "HBM-bound: shrink activation traffic (microbatch, dtype, fusion)",
+    "collective": "ICI-bound: reshard (reduce-scatter, EP locality, overlap)",
+}
+
+
+def run(csv: Csv, verbose: bool = True, mesh: str = "16x16"):
+    t0 = time.perf_counter()
+    recs = [r for r in load_dryrun(f"*__{mesh}.json") if not r.get("tag")]
+    recs.sort(key=lambda r: (r["arch"], r["shape"]))
+    n_ok = n_skip = 0
+    dominants = {"compute": 0, "memory": 0, "collective": 0}
+    if verbose:
+        print(f"roofline table ({mesh} mesh, {len(recs)} cells): terms in ms/step")
+        print(f"{'arch':18s} {'shape':12s} {'compute':>9s} {'memory':>9s} {'collectv':>9s} {'dom':>10s} {'MF/HLO':>7s} {'frac':>6s} {'fitsHBM':>7s}")
+    for r in recs:
+        if not r.get("applicable"):
+            n_skip += 1
+            if verbose:
+                print(f"{r['arch']:18s} {r['shape']:12s} {'SKIP: ' + r['skip_reason']}")
+            continue
+        n_ok += 1
+        t = RA.derive_terms(r, get_config(r["arch"]), SHAPES[r["shape"]], TPU_V5E)
+        dominants[t["dominant"]] += 1
+        if verbose:
+            print(
+                f"{r['arch']:18s} {r['shape']:12s} "
+                f"{t['t_compute']*1e3:9.2f} {t['t_memory']*1e3:9.2f} {t['t_collective']*1e3:9.2f} "
+                f"{t['dominant']:>10s} {t['useful_flops_ratio']:7.2f} {t['roofline_fraction']:6.2f} "
+                f"{str(r['fits_hbm']):>7s}"
+            )
+    if verbose:
+        print(f"roofline dominant-term census: {dominants}  ({n_ok} cells, {n_skip} skipped)")
+    us = (time.perf_counter() - t0) * 1e6
+    csv.add(
+        "roofline_table", us,
+        f"cells={n_ok};skipped={n_skip};" + ";".join(f"{k}={v}" for k, v in dominants.items()),
+    )
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.emit()

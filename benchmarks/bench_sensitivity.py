@@ -1,0 +1,104 @@
+"""Robustness ablations the paper leaves implicit (§III-C, §VI).
+
+* λ / τ sensitivity — the headline H100 result across the hyperparameter
+  grid (the paper gives no values; we verify the result is a plateau, not
+  a cherry-picked point),
+* Phase-I noise sweep — how much profiling error EcoSched tolerates
+  before Table II choices and energy savings degrade,
+* bounded-window sweep — §VI's streaming setting: EcoSched restricted to
+  the first W waiting jobs,
+* queue-shuffle robustness — mean ± spread over 10 random arrival orders,
+* lookahead ablation (beyond-paper) — completion-alignment penalty.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Csv
+from repro.core import (
+    EcoSched, Node, ProfiledPerfModel, SequentialOptimal, simulate, summarize,
+)
+from repro.core import calibration as C
+
+
+def _run(lam=0.35, tau=0.45, noise=0.02, seed=1, window=None, lookahead=0.0, queue=None):
+    truth = C.build_system("h100")
+    node = Node(units=4, domains=2, idle_power_per_unit=C.idle_power("h100"))
+    q = list(queue if queue is not None else C.APP_ORDER)
+    base = simulate(SequentialOptimal(truth), node, truth, queue=q)
+    pm = ProfiledPerfModel(truth, noise=noise, seed=seed)
+    eco = simulate(
+        EcoSched(pm, lam=lam, tau=tau, window=window, lookahead=lookahead),
+        node, truth, queue=q,
+        charge_profiling=True, slowdown_model=C.cross_numa_slowdown,
+    )
+    return summarize(base, eco)
+
+
+def run(csv: Csv, verbose: bool = True):
+    t0 = time.perf_counter()
+
+    if verbose:
+        print("sensitivity λ×τ grid (H100 energy/makespan/EDP savings %):")
+    grid_vals = []
+    for lam in (0.15, 0.35, 0.7):
+        for tau in (0.25, 0.45, 0.7):
+            s = _run(lam=lam, tau=tau)
+            grid_vals.append(s["edp_saving"])
+            if verbose:
+                print(
+                    f"  λ={lam:4.2f} τ={tau:4.2f}: "
+                    f"e={s['energy_saving']*100:5.1f} m={s['makespan_improvement']*100:5.1f} "
+                    f"d={s['edp_saving']*100:5.1f}"
+                )
+    plateau = min(grid_vals) > 0.25  # every grid point keeps >25% EDP saving
+
+    if verbose:
+        print("sensitivity Phase-I noise sweep:")
+    noise_last = None
+    for noise in (0.0, 0.02, 0.05, 0.10, 0.20):
+        s = _run(noise=noise)
+        noise_last = s
+        if verbose:
+            print(f"  σ={noise:4.2f}: e={s['energy_saving']*100:5.1f} d={s['edp_saving']*100:5.1f}")
+
+    if verbose:
+        print("sensitivity window sweep (§VI streaming):")
+    for w in (4, 8, 12, None):
+        s = _run(window=w)
+        if verbose:
+            print(f"  W={str(w):>4s}: e={s['energy_saving']*100:5.1f} d={s['edp_saving']*100:5.1f}")
+
+    rng = np.random.default_rng(0)
+    shuf = []
+    for i in range(10):
+        q = list(C.APP_ORDER)
+        rng.shuffle(q)
+        shuf.append(_run(queue=q, seed=i)["edp_saving"])
+    if verbose:
+        print(
+            f"sensitivity shuffle robustness: EDP saving {np.mean(shuf)*100:.1f}% "
+            f"± {np.std(shuf)*100:.1f}% over 10 arrival orders"
+        )
+
+    s_base = _run()
+    s_look = _run(lookahead=0.3)
+    if verbose:
+        print(
+            f"sensitivity lookahead ablation: EDP {s_base['edp_saving']*100:.1f}% -> "
+            f"{s_look['edp_saving']*100:.1f}% (beyond-paper, §Perf)"
+        )
+
+    us = (time.perf_counter() - t0) * 1e6
+    csv.add(
+        "sensitivity", us,
+        f"plateau={plateau};shuffle_edp={np.mean(shuf)*100:.1f}±{np.std(shuf)*100:.1f}%",
+    )
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.emit()

@@ -1,0 +1,36 @@
+"""Table II — EcoSched's GPU-count choices across platforms vs the paper."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Csv, run_system
+from repro.core import calibration as C
+
+
+def run(csv: Csv, verbose: bool = True):
+    t0 = time.perf_counter()
+    matches = {}
+    for system in ("h100", "a100", "v100"):
+        res, truth = run_system(system)
+        chosen = {rec.job: rec.g for rec in res["ecosched"].records}
+        ok = sum(1 for a, t in C.TABLE_II.items() if chosen.get(a) == t[system])
+        matches[system] = ok
+        if verbose:
+            print(f"table2 {system}: {ok}/17 choices match the paper")
+            for app in sorted(C.TABLE_II):
+                want = C.TABLE_II[app][system]
+                got = chosen.get(app)
+                flag = "" if got == want else "  <-- MISMATCH"
+                print(f"    {app:24s} ours={got} paper={want}{flag}")
+    us = (time.perf_counter() - t0) * 1e6
+    csv.add(
+        "table2_choices", us,
+        ";".join(f"{s}:{m}/17" for s, m in matches.items()),
+    )
+    return matches
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.emit()

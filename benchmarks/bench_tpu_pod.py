@@ -1,0 +1,160 @@
+"""Beyond-paper deployment: EcoSched on a TPU v5e pod (DESIGN.md §2).
+
+The workload pool is the 10 assigned architectures; each job's scaling
+curve across sub-slice sizes comes from its dry-run roofline cell
+(RooflinePerfModel — ONE compiled profile per job instead of the paper's
+per-count profiling).  Node: 256-chip pod = 16 allocation units of 16
+chips, K = 4 host-group isolation domains, sub-slices ICI-contiguous.
+
+Ground truth = roofline scaling × a per-arch perturbation the scheduler
+does not see (collective-growth exponent mismatch), so Phase I is
+genuinely approximate.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Csv, load_dryrun
+from repro.configs import SHAPES, get_config
+from repro.roofline import analysis as RA
+from repro.core import (
+    EcoSched,
+    JobProfile,
+    Marble,
+    Node,
+    ProfiledPerfModel,
+    RooflinePerfModel,
+    SequentialMax,
+    SequentialOptimal,
+    simulate,
+    summarize,
+)
+from repro.roofline.hw import TPU_V5E
+
+UNITS = 16  # 16 units x 16 chips = 256-chip pod
+CHIPS_PER_UNIT = 16
+DOMAINS = 4
+COUNTS = (2, 4, 8, 16)  # units -> 32..256 chips
+STEPS = {  # steps per job: sized for ~1-3h at 256 chips
+    "train_4k": 2000,
+    "prefill_32k": 20_000,
+    "decode_32k": 500_000,
+    "long_500k": 200_000,
+}
+
+
+def build_cells():
+    """name -> roofline reference terms from the single-pod dry-run."""
+    cells = {}
+    for rec in load_dryrun("*__16x16.json"):
+        if not rec.get("applicable") or "roofline" not in rec:
+            continue
+        name = f"{rec['arch']}@{rec['shape']}"
+        r = RA.derive_terms(rec, get_config(rec["arch"]), SHAPES[rec["shape"]], TPU_V5E)
+        cells[name] = {
+            "chips_ref": rec["chips"],
+            "t_compute": r["t_compute"],
+            "t_memory": r["t_memory"],
+            "t_collective": r["t_collective"],
+            "steps": STEPS[rec["shape"]],
+            "shape": rec["shape"],
+            "hbm_ref": rec["hbm_per_device_tpu_model"],
+        }
+    return cells
+
+
+def feasible_counts(cell) -> tuple:
+    """Sub-slice sizes whose per-chip HBM stays under capacity (state
+    shards with the chips: hbm(g) ≈ hbm_ref · chips_ref / chips)."""
+    out = []
+    for g in COUNTS:
+        chips = g * CHIPS_PER_UNIT
+        if cell["hbm_ref"] * cell["chips_ref"] / chips <= TPU_V5E.hbm_bytes:
+            out.append(g)
+    return tuple(out)
+
+
+def build_truth(cells, pm: RooflinePerfModel):
+    """Ground truth: model curves with a hidden per-arch perturbation."""
+    truth = {}
+    for i, (name, cell) in enumerate(sorted(cells.items())):
+        # scheduler assumes alpha_coll=0.3; reality varies by arch
+        real = dict(cell)
+        real["alpha_coll"] = 0.2 + 0.05 * (i % 5)
+        runtime, power = {}, {}
+        for g in feasible_counts(cell):
+            chips = g * CHIPS_PER_UNIT
+            tc, tm, tl = RooflinePerfModel(
+                {name: real}, counts=COUNTS, chip=TPU_V5E,
+                units_to_chips=CHIPS_PER_UNIT,
+            )._terms_at(real, chips)
+            step_t = max(tc, tm, tl)
+            runtime[g] = step_t * cell["steps"]
+            util = tc / step_t
+            per_chip = TPU_V5E.power_idle + (TPU_V5E.power_peak - TPU_V5E.power_idle) * (
+                0.3 + 0.7 * util
+            )
+            power[g] = per_chip * chips
+        truth[name] = JobProfile(name=name, runtime=runtime, busy_power=power)
+    return truth
+
+
+def run(csv: Csv, verbose: bool = True, workload: str = "train_4k"):
+    t0 = time.perf_counter()
+    cells = build_cells()
+    picked = {n: c for n, c in cells.items() if c["shape"] == workload}
+    # add the sub-quadratic long-context serving jobs for diversity
+    picked.update({n: c for n, c in cells.items() if c["shape"] == "long_500k"})
+    if len(picked) < 4:
+        print("bench_tpu_pod: dry-run results not available yet — skipping")
+        csv.add("tpu_pod_end2end", 0.0, "skipped_no_dryrun")
+        return
+    infeasible = {n: c for n, c in picked.items() if not feasible_counts(c)}
+    for n in infeasible:
+        del picked[n]
+    if infeasible and verbose:
+        print(f"tpu_pod: {sorted(infeasible)} exceed single-pod HBM at every "
+              f"sub-slice size -> scheduled on the multi-pod tier (excluded here)")
+    pm = RooflinePerfModel(
+        picked, counts=COUNTS, chip=TPU_V5E, units_to_chips=CHIPS_PER_UNIT
+    )
+    pm.counts_for = {n: feasible_counts(c) for n, c in picked.items()}
+    truth = build_truth(picked, pm)
+    node = Node(
+        units=UNITS, domains=DOMAINS,
+        idle_power_per_unit=TPU_V5E.power_idle * CHIPS_PER_UNIT,
+    )
+    queue = sorted(truth)
+    res = {}
+    for pol in [
+        SequentialMax(truth),
+        SequentialOptimal(truth),
+        Marble(truth),
+        EcoSched(pm, lam=0.35, tau=0.45),
+    ]:
+        r = simulate(pol, node, truth, queue=queue)
+        res[r.policy] = r
+    base = res["sequential_optimal_gpu"]
+    derived = []
+    for n in ("marble", "ecosched"):
+        s = summarize(base, res[n])
+        if verbose:
+            print(
+                f"tpu_pod {n:9s} vs seq_opt ({len(queue)} jobs, {UNITS}x{CHIPS_PER_UNIT} chips): "
+                f"energy {s['energy_saving']*100:5.1f}%  makespan {s['makespan_improvement']*100:5.1f}%  "
+                f"EDP {s['edp_saving']*100:5.1f}%"
+            )
+        derived.append(f"{n}:e{s['energy_saving']*100:.1f}/m{s['makespan_improvement']*100:.1f}")
+    if verbose:
+        chosen = {r.job: r.g for r in res["ecosched"].records}
+        print("tpu_pod EcoSched sub-slice choices (units of 16 chips):")
+        for j, g in sorted(chosen.items()):
+            print(f"    {j:34s} {g:2d} units = {g*CHIPS_PER_UNIT} chips")
+    us = (time.perf_counter() - t0) * 1e6
+    csv.add("tpu_pod_end2end", us, ";".join(derived))
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.emit()

@@ -1,0 +1,99 @@
+"""Shared benchmark helpers: runners, timing, CSV emission."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+from repro.core import (
+    EcoSched,
+    Marble,
+    Node,
+    OraclePerfModel,
+    OracleSolver,
+    ProfiledPerfModel,
+    SequentialMax,
+    SequentialOptimal,
+    simulate,
+    summarize,
+)
+from repro.core import calibration as C
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+# Locked reproduction hyperparameters (EXPERIMENTS.md §Reproduction setup).
+LAM = 0.35
+TAU = 0.45
+NOISE = 0.02
+SEED = 1
+
+
+def run_system(
+    system: str,
+    *,
+    queue=None,
+    lam: float = LAM,
+    tau: float = TAU,
+    noise: float = NOISE,
+    seed: int = SEED,
+    with_oracle: bool = False,
+    oracle_budget_s: float = 25.0,
+    lookahead: float = 0.0,
+):
+    """All policies on one calibrated system; returns {name: ScheduleResult}."""
+    truth = C.build_system(system)
+    node = Node(units=4, domains=2, idle_power_per_unit=C.idle_power(system))
+    queue = list(queue if queue is not None else C.APP_ORDER)
+    pm = ProfiledPerfModel(truth, noise=noise, seed=seed)
+    out = {}
+    policies = [
+        SequentialMax(truth),
+        SequentialOptimal(truth),
+        Marble(truth),
+        EcoSched(pm, lam=lam, tau=tau, lookahead=lookahead),
+    ]
+    for pol in policies:
+        r = simulate(
+            pol, node, truth, queue=queue,
+            charge_profiling=pol.name().startswith("ecosched"),
+            slowdown_model=(
+                C.cross_numa_slowdown
+                if pol.name().startswith(("ecosched", "marble"))
+                else None
+            ),
+        )
+        out[r.policy] = r
+    if with_oracle:
+        solver = OracleSolver(node, truth, time_budget_s=oracle_budget_s)
+        orr, exact = solver.solve(queue)
+        orr.policy = "oracle" + ("" if exact else "~")
+        out["oracle"] = orr
+    return out, truth
+
+
+def load_dryrun(pattern: str = "*.json") -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        try:
+            with open(path) as f:
+                out.append(json.load(f))
+        except Exception:
+            pass
+    return out
+
+
+class Csv:
+    """Collects `name,us_per_call,derived` rows for benchmarks/run.py."""
+
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        self.rows.append(f"{name},{us_per_call:.3f},{derived}")
+
+    def emit(self):
+        for r in self.rows:
+            print(r)

@@ -1,0 +1,50 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV at the end (scaffold contract).
+Individual benchmarks are importable and runnable standalone:
+    PYTHONPATH=src python -m benchmarks.bench_fig6_end2end
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="skip the Oracle search")
+    ap.add_argument("--quiet", action="store_true")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (
+        bench_fig1_scaling,
+        bench_fig2_tradeoff,
+        bench_fig6_end2end,
+        bench_fig9_perf_loss,
+        bench_overhead,
+        bench_roofline,
+        bench_sensitivity,
+        bench_table2_choices,
+        bench_tpu_pod,
+    )
+    from benchmarks.common import Csv
+
+    csv = Csv()
+    verbose = not args.quiet
+    bench_fig1_scaling.run(csv, verbose=verbose)
+    bench_fig2_tradeoff.run(csv, verbose=verbose)
+    bench_fig6_end2end.run(
+        csv, verbose=verbose, with_oracle=not args.quick, oracle_budget_s=20.0
+    )
+    bench_table2_choices.run(csv, verbose=verbose)
+    bench_fig9_perf_loss.run(csv, verbose=verbose)
+    bench_overhead.run(csv, verbose=verbose)
+    bench_roofline.run(csv, verbose=verbose)
+    bench_tpu_pod.run(csv, verbose=verbose)
+    bench_sensitivity.run(csv, verbose=verbose)
+
+    print("\nname,us_per_call,derived")
+    csv.emit()
+
+
+if __name__ == "__main__":
+    main()

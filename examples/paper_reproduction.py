@@ -1,0 +1,73 @@
+"""Full paper reproduction driver: Figs. 1/2/6/8/9 + Tables II + overhead.
+
+    PYTHONPATH=src python examples/paper_reproduction.py [--with-oracle]
+
+Runs every benchmark tied to a paper artifact and prints ours-vs-paper
+side by side, including the §V-B six-application case study (Figs. 7–8):
+EcoSched downsizes pot3d/resnet50/gpt2 and cuts makespan ~30% and energy
+~17% relative to Marble.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+
+def case_study(verbose=True):
+    from repro.core import (
+        EcoSched, Marble, Node, ProfiledPerfModel, simulate, summarize,
+    )
+    from repro.core import calibration as C
+
+    truth_all = C.build_system("h100")
+    six = ["pot3d", "simpleP2P", "minisweep", "gpt2", "vgg16", "resnet50"]
+    truth = {k: truth_all[k] for k in six}
+    node = Node(units=4, domains=2, idle_power_per_unit=C.idle_power("h100"))
+    pm = ProfiledPerfModel(truth, noise=0.02, seed=1)
+    res = {}
+    for pol in [Marble(truth), EcoSched(pm, lam=0.35, tau=0.45)]:
+        r = simulate(pol, node, truth, queue=six,
+                     slowdown_model=C.cross_numa_slowdown)
+        res[r.policy] = r
+    s = summarize(res["marble"], res["ecosched"])
+    if verbose:
+        print("\n== §V-B case study (6 apps, System 1) — EcoSched vs Marble ==")
+        print(f"  makespan improvement {s['makespan_improvement']*100:5.1f}%   (paper ≈ 30%)")
+        print(f"  energy reduction     {s['energy_saving']*100:5.1f}%   (paper ≈ 17%)")
+        chosen = {r.job: r.g for r in res["ecosched"].records}
+        print(f"  downsizing: pot3d→{chosen['pot3d']} (paper 2), "
+              f"resnet50→{chosen['resnet50']} (paper 3), gpt2→{chosen['gpt2']} (paper 2)")
+    return s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--with-oracle", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_fig1_scaling, bench_fig2_tradeoff, bench_fig6_end2end,
+        bench_fig9_perf_loss, bench_overhead, bench_table2_choices,
+    )
+    from benchmarks.common import Csv
+
+    csv = Csv()
+    print("== Fig.1 scaling ==")
+    bench_fig1_scaling.run(csv)
+    print("\n== Fig.2 tradeoff ==")
+    bench_fig2_tradeoff.run(csv)
+    print("\n== Fig.6 end-to-end ==")
+    bench_fig6_end2end.run(csv, with_oracle=args.with_oracle)
+    print("\n== Table II ==")
+    bench_table2_choices.run(csv)
+    print("\n== Fig.9 perf loss ==")
+    bench_fig9_perf_loss.run(csv)
+    print("\n== Overhead (§V-C) ==")
+    bench_overhead.run(csv)
+    case_study()
+    print("\npaper_reproduction OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Serving example: prefill a batch of prompts, then batched decode.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch gemma3-4b --tokens 32
+
+Uses the reduced config of any assigned arch (SSM/hybrid archs exercise
+the recurrent cache; gemma3 exercises the sliding-window layers).
+Prints per-step latency and tokens/s for the batched decode loop.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import Runtime, build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    model = build_model(cfg, Runtime(remat="none"))
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+
+    B, P = args.batch, args.prompt_len
+    cap = P + args.tokens
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)}
+    if cfg.frontend == "patch_stub":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_frontend_tokens, cfg.d_model)), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        batch["src_embeds"] = jnp.asarray(rng.normal(size=(B, P, cfg.d_model)), jnp.bfloat16)
+
+    t0 = time.perf_counter()
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    logits.block_until_ready()
+    print(f"prefill {B}x{P}: {time.perf_counter()-t0:.2f}s (incl. compile)")
+
+    # grow attention caches to capacity
+    cache = {
+        k: (jnp.pad(v, [(0, 0), (0, 0), (0, cap - v.shape[2]), (0, 0), (0, 0)])
+            if k in ("k", "v") else v)
+        for k, v in cache.items()
+    }
+    decode = jax.jit(model.decode_step, donate_argnums=1)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    outs = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.tokens):
+        logits, cache = decode(params, cache, tok, jnp.int32(P + i))
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    toks = args.tokens * B
+    print(f"decoded {args.tokens} steps x {B} seqs: {dt:.2f}s "
+          f"({1e3*dt/args.tokens:.1f} ms/step, {toks/dt:.1f} tok/s)")
+    gen = jnp.concatenate(outs, axis=1)
+    print("sample token ids:", np.asarray(gen[0])[:16].tolist())
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    print("serve_decode OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import CheckpointManager, load_arrays, restore, save
+
+__all__ = ["CheckpointManager", "load_arrays", "restore", "save"]

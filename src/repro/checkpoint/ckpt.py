@@ -1,0 +1,168 @@
+"""Checkpointing: atomic, restart-safe, mesh-elastic.
+
+Format: one ``.npz`` blob of flattened leaves + a msgpack sidecar with the
+treedef paths, step, and user metadata.  Writes go to a temp dir followed
+by ``os.replace`` (atomic on POSIX), so a crash mid-save never corrupts
+the latest checkpoint — the restore path simply sees the previous one.
+
+Elastic restore: leaves are loaded host-side as numpy and re-placed with
+``jax.device_put(x, sharding)`` against whatever mesh the *restoring* job
+carved — checkpoints are mesh-shape-agnostic, which is what lets a job
+resume on fewer (or more) chips after a failure or an EcoSched rescale.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _set_by_path(tree, path_str: str, value):
+    parts = path_str.split("/")
+    node = tree
+    for p in parts[:-1]:
+        node = node[int(p) if isinstance(node, (list, tuple)) else p]
+    last = parts[-1]
+    node[int(last) if isinstance(node, (list, tuple)) else last] = value
+
+
+def save(path: str, tree, *, step: int = 0, metadata: Optional[dict] = None) -> None:
+    """Atomic checkpoint write of an arbitrary pytree of arrays."""
+    flat = _flatten_with_paths(tree)
+    # npz has no bf16: store as uint16 bits + dtype sidecar
+    dtype_map = {}
+    import ml_dtypes
+
+    for k, v in list(flat.items()):
+        if v.dtype == ml_dtypes.bfloat16:
+            flat[k] = v.view(np.uint16)
+            dtype_map[k] = "bfloat16"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=os.path.dirname(path) or ".")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        meta = {
+            "step": int(step), "metadata": metadata or {}, "keys": sorted(flat),
+            "dtype_map": dtype_map,
+        }
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.isdir(path):
+            shutil.rmtree(path)
+        os.replace(tmp, path)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def load_arrays(path: str) -> Tuple[Dict[str, np.ndarray], dict]:
+    import ml_dtypes
+
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    for k, dt in meta.get("dtype_map", {}).items():
+        if dt == "bfloat16":
+            arrays[k] = arrays[k].view(ml_dtypes.bfloat16)
+    return arrays, meta
+
+
+def restore(path: str, like, *, shardings=None) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (a template pytree).
+
+    ``shardings``: optional pytree (same structure) of ``NamedSharding`` to
+    re-place leaves onto a (possibly different) mesh — the elastic path.
+    """
+    arrays, meta = load_arrays(path)
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_flatten(shardings)[0]
+    leaves = []
+    for i, (path_parts, leaf) in enumerate(paths):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_parts)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs template {leaf.shape}")
+        if shard_leaves is not None:
+            leaves.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            leaves.append(jax.device_put(arr.astype(leaf.dtype)))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+class CheckpointManager:
+    """Rotation + async save + latest-checkpoint discovery."""
+
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and os.path.isdir(os.path.join(self.directory, name)):
+                if os.path.exists(os.path.join(self.directory, name, "meta.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree, metadata: Optional[dict] = None):
+        self.wait()
+        # snapshot to host memory synchronously; write asynchronously
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+        def _write():
+            save(self._step_dir(step), host_tree, step=step, metadata=metadata)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def restore_latest(self, like, *, shardings=None):
+        self.wait()
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        tree, meta = restore(self._step_dir(step), like, shardings=shardings)
+        return tree, meta
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -1,0 +1,19 @@
+"""qwen3-32b — dense, qk_norm, GQA.  [hf:Qwen/Qwen3-8B; hf]
+
+64L d_model=5120 64H (GQA kv=8) d_ff=25600 vocab=151936, head_dim=128.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5_120,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=25_600,
+    vocab_size=151_936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+)

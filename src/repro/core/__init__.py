@@ -1,0 +1,53 @@
+"""EcoSched core: the paper's contribution as a composable library.
+
+Phase I:  perfmodel   (ProfiledPerfModel / RooflinePerfModel / Oracle)
+Phase II: score (Eq.1) + actions + ecosched (the policy)
+Substrate: placement (NUMA/ICI domains), simulator (event-driven energy
+accounting), baselines, oracle (exact B&B), metrics.
+"""
+from repro.core.baselines import Marble, SequentialMax, SequentialOptimal
+from repro.core.ecosched import EcoSched
+from repro.core.metrics import (
+    edp_saving,
+    energy_saving,
+    makespan_improvement,
+    perf_loss,
+    summarize,
+)
+from repro.core.oracle import OracleSolver
+from repro.core.perfmodel import OraclePerfModel, ProfiledPerfModel, RooflinePerfModel
+from repro.core.placement import PlacementState
+from repro.core.simulator import Node, simulate
+from repro.core.types import (
+    JobProfile,
+    JobSpec,
+    Launch,
+    ModeEstimate,
+    NodeView,
+    ScheduleResult,
+)
+
+__all__ = [
+    "EcoSched",
+    "JobProfile",
+    "JobSpec",
+    "Launch",
+    "Marble",
+    "ModeEstimate",
+    "Node",
+    "NodeView",
+    "OraclePerfModel",
+    "OracleSolver",
+    "PlacementState",
+    "ProfiledPerfModel",
+    "RooflinePerfModel",
+    "ScheduleResult",
+    "SequentialMax",
+    "SequentialOptimal",
+    "edp_saving",
+    "energy_saving",
+    "makespan_improvement",
+    "perf_loss",
+    "simulate",
+    "summarize",
+]

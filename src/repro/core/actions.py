@@ -1,0 +1,117 @@
+"""Feasible-action enumeration (paper §III-C).
+
+An action is a set of ⟨job, unit-count⟩ modes satisfying, under the
+*current* node state:
+  * total units ≤ free units, placeable as contiguous ranges (checked by
+    replaying first-fit on a copy of the free map),
+  * co-running cap: |running| + |a| ≤ K,
+  * one mode per job; jobs from the scheduling window only.
+
+For the paper's node (M=4, K=2) exhaustive enumeration is tiny.  For pod
+scale (M=16, K=4, 17-job windows) the exact space can exceed 10^5, so
+beyond ``exact_limit`` we fall back to beam construction: extend the
+current beam of partial actions by every (job, mode), keep the best
+``beam`` by score, and collect every partial generated — greedy-complete
+in the same spirit as the paper's greedy local decision strategy.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.placement import PlacementState
+from repro.core.score import score
+from repro.core.types import JobSpec, Launch, ModeEstimate, NodeView
+
+
+def _placeable(free_map: List[bool], counts: Sequence[int]) -> bool:
+    st = PlacementState(len(free_map), 1)
+    st.free = list(free_map)
+    try:
+        for g in sorted(counts, reverse=True):
+            st.allocate(g)
+    except ValueError:
+        return False
+    return True
+
+
+def enumerate_actions(
+    specs: Sequence[JobSpec],
+    view: NodeView,
+    free_map: List[bool],
+    *,
+    lam: float,
+    exact_limit: int = 50_000,
+    beam: int = 64,
+) -> List[Tuple[float, Tuple[Tuple[JobSpec, ModeEstimate], ...]]]:
+    """Returns scored actions [(S(a), ((spec, mode), ...)), ...] incl. empty."""
+    k_avail = view.domains - len(view.running)
+    g_free = view.free_units
+    M = view.total_units
+    if k_avail <= 0 or not specs:
+        return [(score((), g_free=g_free, M=M, lam=lam), ())]
+
+    # estimate exact-space size
+    per_job = [len(s.modes) for s in specs]
+    est = 1
+    for size in range(1, min(k_avail, len(specs)) + 1):
+        for combo in itertools.combinations(per_job, size):
+            est_c = 1
+            for c in combo:
+                est_c *= c
+            est += est_c
+            if est > exact_limit:
+                break
+        if est > exact_limit:
+            break
+
+    def mode_list(a):
+        return [m for _, m in a]
+
+    results: List[Tuple[float, Tuple[Tuple[JobSpec, ModeEstimate], ...]]] = []
+
+    def add(action):
+        counts = [m.g for _, m in action]
+        if sum(counts) > g_free:
+            return False
+        if action and not _placeable(free_map, counts):
+            return False
+        s = score(mode_list(action), g_free=g_free, M=M, lam=lam)
+        results.append((s, tuple(action)))
+        return True
+
+    add(())
+
+    if est <= exact_limit:
+        for size in range(1, min(k_avail, len(specs)) + 1):
+            for jobs in itertools.combinations(specs, size):
+                for modes in itertools.product(*[j.modes for j in jobs]):
+                    add(tuple(zip(jobs, modes)))
+        return results
+
+    # --- beam construction -------------------------------------------------
+    frontier: List[Tuple[float, Tuple[Tuple[JobSpec, ModeEstimate], ...]]] = [
+        (score((), g_free=g_free, M=M, lam=lam), ())
+    ]
+    for _ in range(k_avail):
+        candidates = []
+        for _, partial in frontier:
+            used = {sp.name for sp, _ in partial}
+            used_g = sum(m.g for _, m in partial)
+            for sp in specs:
+                if sp.name in used:
+                    continue
+                for m in sp.modes:
+                    if used_g + m.g > g_free:
+                        continue
+                    na = partial + ((sp, m),)
+                    if not _placeable(free_map, [mm.g for _, mm in na]):
+                        continue
+                    s = score(mode_list(na), g_free=g_free, M=M, lam=lam)
+                    candidates.append((s, na))
+        if not candidates:
+            break
+        candidates.sort(key=lambda kv: kv[0])
+        frontier = candidates[:beam]
+        results.extend(frontier)
+    return results

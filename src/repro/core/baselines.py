@@ -1,0 +1,72 @@
+"""Baseline policies (paper §IV).
+
+* ``sequential_max_gpu``      — each job runs alone with all M units.
+* ``sequential_optimal_gpu``  — each job runs alone at its
+  performance-optimal count (known offline, as in the paper's setup).
+* ``marble``                  — Marble-style co-scheduling [9]: offline
+  profiles, every job pinned at its performance-optimal GPU count, FCFS
+  first-fit packing under the same domain cap; no energy-aware
+  downsizing, no τ-filter.  This reproduces the paper's characterization
+  ("assumes performance-oriented GPU counts").
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from repro.core.types import JobProfile, Launch, NodeView
+
+
+class SequentialMax:
+    def __init__(self, truth: Dict[str, JobProfile]):
+        self.truth = truth
+
+    def name(self) -> str:
+        return "sequential_max_gpu"
+
+    def on_event(self, view: NodeView, waiting: Sequence[str]) -> List[Launch]:
+        if view.running or not waiting:
+            return []
+        job = waiting[0]
+        g = max(self.truth[job].feasible_counts)
+        return [Launch(job=job, g=min(g, view.total_units))]
+
+
+class SequentialOptimal:
+    def __init__(self, truth: Dict[str, JobProfile]):
+        self.truth = truth
+
+    def name(self) -> str:
+        return "sequential_optimal_gpu"
+
+    def on_event(self, view: NodeView, waiting: Sequence[str]) -> List[Launch]:
+        if view.running or not waiting:
+            return []
+        job = waiting[0]
+        return [Launch(job=job, g=self.truth[job].optimal_count())]
+
+
+class Marble:
+    def __init__(self, truth: Dict[str, JobProfile]):
+        self.truth = truth
+
+    def name(self) -> str:
+        return "marble"
+
+    def on_event(self, view: NodeView, waiting: Sequence[str]) -> List[Launch]:
+        out: List[Launch] = []
+        free = view.free_units
+        slots = view.free_domains
+        # FCFS first-fit at performance-optimal counts
+        from repro.core.placement import PlacementState
+
+        st = PlacementState(view.total_units, 1)
+        st.free = list(view.free_map)
+        for job in waiting:
+            if slots - len(out) <= 0:
+                break
+            g = self.truth[job].optimal_count()
+            if g <= free and st.can_allocate(g):
+                st.allocate(g)
+                out.append(Launch(job=job, g=g))
+                free -= g
+        return out

@@ -1,0 +1,79 @@
+"""EcoSched — the paper's online energy-aware co-scheduler (§III).
+
+Window-based event loop: at every scheduling event (t=0 and each job
+completion), build the scheduling window, τ-filter each job's modes
+(Phase I estimates, computed once per job), enumerate feasible joint
+actions under GPU-capacity + domain constraints, score with Eq. (1), and
+launch the argmin.  The empty action participates in scoring (its
+R_energy is 0 and it pays the full idle term), which is exactly the λ
+tradeoff: launching an energy-regretful mode must beat idling.  A
+deadlock guard forces the best non-empty action when the node is
+completely idle.
+
+Beyond-paper options (all default-off; §Perf ablations):
+  * ``lookahead``  — penalize actions whose predicted completion times
+    diverge (tail fragmentation), a lightweight fix for the greedy
+    policy's myopia.
+  * ``elastic``    — see launch/coschedule.py: running jobs may be
+    rescaled at checkpoint boundaries when the node drains.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.actions import enumerate_actions
+from repro.core.score import tau_filter
+from repro.core.types import JobSpec, Launch, NodeView
+
+
+class EcoSched:
+    def __init__(
+        self,
+        perf_model,
+        *,
+        lam: float = 0.5,
+        tau: float = 0.35,
+        window: Optional[int] = None,
+        exact_limit: int = 50_000,
+        beam: int = 64,
+        lookahead: float = 0.0,
+    ):
+        self.perf_model = perf_model
+        self.lam = lam
+        self.tau = tau
+        self.window = window
+        self.exact_limit = exact_limit
+        self.beam = beam
+        self.lookahead = lookahead
+
+    def name(self) -> str:
+        return "ecosched" if not self.lookahead else "ecosched+lookahead"
+
+    def on_event(self, view: NodeView, waiting: Sequence[str]) -> List[Launch]:
+        window_jobs = list(waiting[: self.window] if self.window else waiting)
+        if not window_jobs or view.free_domains <= 0 or view.free_units <= 0:
+            return []
+        specs = [tau_filter(self.perf_model.spec(j), self.tau) for j in window_jobs]
+        scored = enumerate_actions(
+            specs, view, list(view.free_map),
+            lam=self.lam, exact_limit=self.exact_limit, beam=self.beam,
+        )
+        if self.lookahead:
+            scored = [(s + self._lookahead_penalty(a, view), a) for s, a in scored]
+        scored.sort(key=lambda kv: (kv[0], -sum(m.g for _, m in kv[1])))
+        best_s, best_a = scored[0]
+        if not best_a and not view.running:
+            nonempty = [sa for sa in scored if sa[1]]
+            if nonempty:
+                best_s, best_a = nonempty[0]
+        return [Launch(job=sp.name, g=m.g) for sp, m in best_a]
+
+    # -- beyond-paper: completion-alignment lookahead ----------------------
+    def _lookahead_penalty(self, action, view: NodeView) -> float:
+        if len(action) < 2:
+            return 0.0
+        # t_norm is relative within a job; as a *proxy* for alignment we
+        # penalize spread of (t_norm · g) across co-launched jobs.
+        loads = [m.t_norm * m.g for _, m in action]
+        spread = (max(loads) - min(loads)) / max(max(loads), 1e-9)
+        return self.lookahead * spread

@@ -1,0 +1,38 @@
+"""Evaluation metrics (paper §IV): energy saving, makespan improvement,
+EDP saving, per-application performance loss."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.types import JobProfile, ScheduleResult
+
+
+def energy_saving(base: ScheduleResult, x: ScheduleResult) -> float:
+    return 1.0 - x.total_energy / base.total_energy
+
+
+def makespan_improvement(base: ScheduleResult, x: ScheduleResult) -> float:
+    return 1.0 - x.makespan / base.makespan
+
+
+def edp_saving(base: ScheduleResult, x: ScheduleResult) -> float:
+    return 1.0 - x.edp / base.edp
+
+
+def perf_loss(result: ScheduleResult, truth: Dict[str, JobProfile]) -> Dict[str, float]:
+    """Per-job runtime increase vs. solo execution at the performance-optimal
+    count (the paper's Fig. 9 metric)."""
+    out = {}
+    for r in result.records:
+        prof = truth[r.job]
+        best = prof.runtime[prof.optimal_count()]
+        out[r.job] = (r.end - r.start) / best - 1.0
+    return out
+
+
+def summarize(base: ScheduleResult, x: ScheduleResult) -> Dict[str, float]:
+    return {
+        "energy_saving": energy_saving(base, x),
+        "makespan_improvement": makespan_improvement(base, x),
+        "edp_saving": edp_saving(base, x),
+    }

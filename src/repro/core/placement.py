@@ -1,0 +1,64 @@
+"""NUMA/ICI-domain-aware placement (paper §III-C, DESIGN.md §2).
+
+Constraints enforced:
+  * at most K co-running jobs (one per isolation domain),
+  * a job's units are **contiguous** (ICI torus contiguity on TPU; on a GPU
+    node contiguity is vacuous but harmless),
+  * unit counts need NOT align with domain boundaries (paper: a 3-GPU job
+    + 1-GPU job share a 2-domain node).
+
+Allocation is first-fit over contiguous free ranges; the domain label is
+the index of the first unit's domain (CPU-side resources are partitioned
+by domain in the real system; the simulator only needs the count cap).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+
+class PlacementState:
+    def __init__(self, units: int, domains: int):
+        assert units >= 1 and domains >= 1
+        self.units = units
+        self.domains = domains
+        self.free = [True] * units
+
+    def free_count(self) -> int:
+        return sum(self.free)
+
+    def _ranges(self) -> List[Tuple[int, int]]:
+        """Maximal contiguous free (start, length) ranges."""
+        out = []
+        i = 0
+        while i < self.units:
+            if self.free[i]:
+                j = i
+                while j < self.units and self.free[j]:
+                    j += 1
+                out.append((i, j - i))
+                i = j
+            else:
+                i += 1
+        return out
+
+    def can_allocate(self, g: int) -> bool:
+        return any(length >= g for _, length in self._ranges())
+
+    def max_contiguous(self) -> int:
+        return max((length for _, length in self._ranges()), default=0)
+
+    def allocate(self, g: int) -> Tuple[Tuple[int, ...], int]:
+        """First-fit contiguous allocation; returns (unit ids, domain)."""
+        for start, length in self._ranges():
+            if length >= g:
+                ids = tuple(range(start, start + g))
+                for u in ids:
+                    self.free[u] = False
+                domain = start * self.domains // self.units
+                return ids, domain
+        raise ValueError(f"cannot allocate {g} contiguous units (free={self.free})")
+
+    def release(self, ids) -> None:
+        for u in ids:
+            assert not self.free[u], f"double free of unit {u}"
+            self.free[u] = True

@@ -1,0 +1,39 @@
+"""Phase II scoring — Eq. (1)–(2) of the paper, verbatim.
+
+    S(a)        = R_energy(a) + λ·I(a)
+    R_energy(a) = (1/|a|) Σ_{m∈a} (Ê_m^norm − 1)      (0 for the empty action)
+    I(a)        = (G_free − G(a)) / M
+    a*          = argmin_{a ∈ A_feas} S(a)
+
+``Ê^norm`` is each mode's energy proxy normalized to the job's best mode
+(=1 at the predicted-lowest-energy count).  The τ-filter (paper §III-C)
+drops modes whose predicted slowdown exceeds (1+τ)·best before scoring.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+from repro.core.types import JobSpec, Launch, ModeEstimate
+
+
+def tau_filter(spec: JobSpec, tau: float) -> JobSpec:
+    best = min(m.t_norm for m in spec.modes)
+    keep = tuple(m for m in spec.modes if m.t_norm <= (1.0 + tau) * best)
+    return JobSpec(name=spec.name, modes=keep)
+
+
+def r_energy(modes: Sequence[ModeEstimate]) -> float:
+    if not modes:
+        return 0.0
+    return sum(m.e_norm - 1.0 for m in modes) / len(modes)
+
+
+def idle_term(total_g: int, g_free: int, M: int) -> float:
+    return (g_free - total_g) / M
+
+
+def score(
+    modes: Sequence[ModeEstimate], *, g_free: int, M: int, lam: float
+) -> float:
+    total_g = sum(m.g for m in modes)
+    return r_energy(modes) + lam * idle_term(total_g, g_free, M)

@@ -1,0 +1,124 @@
+"""Core scheduler datatypes.
+
+The scheduler sees *estimates* (``ModeEstimate`` from Phase I); the
+simulator and the Oracle see *ground truth* (``JobProfile``).  Keeping the
+two separated is what makes the online-vs-oracle comparison honest.
+
+Units ("GPUs" in the paper) are the node's allocation granularity: one GPU
+on a 4-GPU node, one 16-chip slice row on a 256-chip v5e pod
+(DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class JobProfile:
+    """Ground truth for one application (simulator/oracle only)."""
+
+    name: str
+    runtime: Dict[int, float]  # unit-count g -> solo execution seconds
+    busy_power: Dict[int, float]  # g -> total active power (W) of the job
+    dram_util: Dict[int, float] = field(default_factory=dict)  # profiling signal
+    profiling_energy: float = 0.0  # one-time Phase-I cost (J)
+    profiling_time: float = 0.0  # s of debug-node time (amortization analysis)
+
+    @property
+    def feasible_counts(self) -> Tuple[int, ...]:
+        return tuple(sorted(self.runtime))
+
+    def optimal_count(self) -> int:
+        return min(self.runtime, key=lambda g: (self.runtime[g], g))
+
+    def energy(self, g: int) -> float:
+        return self.runtime[g] * self.busy_power[g]
+
+
+@dataclass(frozen=True)
+class ModeEstimate:
+    """Phase-I output for one (job, unit-count) mode."""
+
+    g: int
+    t_norm: float  # predicted runtime / predicted best runtime (>= 1)
+    p_bar: float  # measured average busy power (W)
+    e_norm: float  # normalized energy proxy Ẽ = P̄ · T̂norm, min-normalized
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    """What the scheduler knows about a waiting job."""
+
+    name: str
+    modes: Tuple[ModeEstimate, ...]  # τ-filtered happens in the policy
+
+    def mode(self, g: int) -> ModeEstimate:
+        for m in self.modes:
+            if m.g == g:
+                return m
+        raise KeyError((self.name, g))
+
+
+@dataclass(frozen=True)
+class Launch:
+    """One scheduling decision element: run ``job`` on ``g`` units."""
+
+    job: str
+    g: int
+
+
+@dataclass
+class RunningJob:
+    job: str
+    g: int
+    units: Tuple[int, ...]
+    domain: int
+    start: float
+    end: float
+    power: float
+
+
+@dataclass
+class NodeView:
+    """Scheduler-visible node state at a scheduling event."""
+
+    t: float
+    total_units: int  # M
+    domains: int  # K
+    free_units: int
+    running: List[RunningJob]
+    free_map: List[bool] = field(default_factory=list)  # per-unit freedom
+
+    @property
+    def free_domains(self) -> int:
+        return self.domains - len(self.running)
+
+
+@dataclass
+class JobRecord:
+    job: str
+    g: int
+    start: float
+    end: float
+    busy_energy: float
+
+
+@dataclass
+class ScheduleResult:
+    policy: str
+    makespan: float
+    busy_energy: float
+    idle_energy: float
+    profiling_energy: float
+    records: List[JobRecord]
+    decision_time_s: float = 0.0  # total wall-clock spent inside the policy
+    decision_events: int = 0
+
+    @property
+    def total_energy(self) -> float:
+        return self.busy_energy + self.idle_energy + self.profiling_energy
+
+    @property
+    def edp(self) -> float:
+        return self.total_energy * self.makespan

@@ -1,0 +1,3 @@
+from repro.data.synthetic import DataConfig, SyntheticLM, make_dataset
+
+__all__ = ["DataConfig", "SyntheticLM", "make_dataset"]

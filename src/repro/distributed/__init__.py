@@ -1,0 +1,3 @@
+from repro.distributed.ctx import constrain, sharding_rules
+
+__all__ = ["constrain", "sharding_rules"]

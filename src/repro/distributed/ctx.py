@@ -1,0 +1,58 @@
+"""Activation-sharding context.
+
+Model code stays mesh-agnostic: it calls ``constrain(x, tag)`` at a few
+canonical points ("embed", "residual", "attn_out", ...).  Launchers that
+want explicit activation shardings install a rule table (tag →
+``NamedSharding``) around tracing; with no rules installed the call is a
+no-op, so CPU smoke tests and single-device runs never touch device state.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+
+_tls = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, object]]:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(rules: Optional[Dict[str, object]]):
+    """Install tag → NamedSharding constraints for the enclosed trace."""
+    old = getattr(_tls, "rules", None)
+    _tls.rules = rules
+    try:
+        yield
+    finally:
+        _tls.rules = old
+
+
+def constrain(x: jax.Array, tag: str) -> jax.Array:
+    rules = getattr(_tls, "rules", None)
+    if not rules:
+        return x
+    sharding = rules.get(tag)
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    """Install the active mesh for modules that need explicit collectives
+    (e.g. the expert-parallel MoE shard_map path)."""
+    old = getattr(_tls, "mesh", None)
+    _tls.mesh = mesh
+    try:
+        yield
+    finally:
+        _tls.mesh = old
+
+
+def current_mesh():
+    return getattr(_tls, "mesh", None)

@@ -1,0 +1,74 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled (Mosaic); everywhere else they run in
+``interpret=True`` mode, or the pure-jnp reference when ``REPRO_KERNELS=ref``
+— the interpret path executes the kernel body op-by-op on CPU and is the
+validation target, while the ref path is fast enough for CI.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+
+def _backend_mode() -> str:
+    forced = os.environ.get("REPRO_KERNELS", "")
+    if forced:
+        return forced  # "pallas" | "interpret" | "ref"
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "block_q", "block_k", "mode")
+)
+def _flash_jit(q, k, v, *, causal, window, softcap, block_q, block_k, mode):
+    if mode == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    return _flash_pallas(
+        q, k, v,
+        causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k,
+        interpret=(mode == "interpret"),
+    )
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 512,
+    block_k: int = 512,
+    mode: Optional[str] = None,
+) -> jax.Array:
+    return _flash_jit(
+        q, k, v,
+        causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k,
+        mode=mode or _backend_mode(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "mode"))
+def _ssd_jit(xh, dt, A, Bm, Cm, *, chunk, mode):
+    if mode == "ref":
+        return _ref.ssd_ref(xh, dt, A, Bm, Cm)
+    return _ssd_pallas(xh, dt, A, Bm, Cm, chunk=chunk, interpret=(mode == "interpret"))
+
+
+def ssd_scan(
+    xh: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array, Cm: jax.Array,
+    *,
+    chunk: int = 256,
+    mode: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    return _ssd_jit(xh, dt, A, Bm, Cm, chunk=chunk, mode=mode or _backend_mode())

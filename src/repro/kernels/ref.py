@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the *definitional* implementations — materialized score tensors,
+step-by-step recurrences — used by the kernel test sweeps
+(``assert_allclose`` against interpret-mode Pallas) and as the CPU
+fallback inside ``ops.py``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, KVH, hd)
+    v: jax.Array,  # (B, Skv, KVH, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    scale = scale or 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, KVH, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)
+    kp = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window > 0:
+        mask &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def ssd_ref(
+    xh: jax.Array,  # (B, S, nh, hp)
+    dt: jax.Array,  # (B, S, nh) positive
+    A: jax.Array,  # (nh,) negative
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    h0: Optional[jax.Array] = None,  # (B, nh, hp, N)
+):
+    """Definitional SSD recurrence, one step at a time.
+
+    h_t = exp(A·Δ_t)·h_{t-1} + Δ_t · x_t ⊗ B_t ;  y_t = h_t · C_t
+    Returns (y (B,S,nh,hp) fp32, final state (B,nh,hp,N) fp32).
+    """
+    B, S, nh, hp = xh.shape
+    N = Bm.shape[-1]
+    xh = xh.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    h = jnp.zeros((B, nh, hp, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        x_t, dt_t, B_t, C_t = xh[:, t], dt[:, t], Bm[:, t], Cm[:, t]
+        dA = jnp.exp(dt_t * A[None, :])  # (B, nh)
+        h = h * dA[..., None, None] + jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t, B_t)
+        y = jnp.einsum("bn,bhpn->bhp", C_t, h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3), h  # (B,S,nh,hp), (B,nh,hp,N)

@@ -1,0 +1,458 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (assignment deliverable e).
+
+For every (architecture × input-shape × mesh) cell this:
+  1. pads the config to TP divisibility (``sharding.shardable``),
+  2. builds the real step (train / prefill / decode) with full sharding
+     specs, ``.lower().compile()``s it against ShapeDtypeStruct stand-ins —
+     no allocation — and records ``memory_analysis()`` (proof it fits) and
+     the collective schedule,
+  3. compiles two reduced-layer variants (0 layers, 1 period) to undo
+     XLA's count-while-body-once accounting and extrapolate true per-device
+     FLOPs / bytes / collective bytes (DESIGN.md §4),
+  4. derives the three roofline terms vs TPU v5e constants and writes one
+     JSON per cell under ``benchmarks/results/dryrun/``.
+
+The 512-device XLA_FLAGS override above MUST precede every other import —
+jax locks the device count at first init.  Do not set it anywhere global.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, cell_applicable, get_config, list_archs
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed import sharding as shd
+from repro.distributed.ctx import mesh_context, sharding_rules
+from repro.launch.mesh import make_production_mesh
+from repro.models import Runtime, build_model
+from repro.optim import AdamW, AdamWConfig
+from repro.optim.schedule import WarmupCosine
+from repro.roofline import analysis as RA
+from repro.roofline.hw import TPU_V5E
+from repro.train import init_state, make_decode_step, make_prefill, make_train_step
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Input stand-ins (ShapeDtypeStruct; weak-type-correct, shardable, no alloc)
+# ---------------------------------------------------------------------------
+
+
+def batch_shapes(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Tuple[tuple, Any]]:
+    """Model-input shapes for a cell: {name: (shape, dtype)}."""
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind in ("train", "prefill"):
+        tgt = S // 8 if cfg.is_encoder_decoder else S
+        out = {"tokens": ((B, tgt), jnp.int32)}
+        if cfg.frontend == "patch_stub":
+            out["patch_embeds"] = ((B, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.is_encoder_decoder:
+            out["src_embeds"] = ((B, S, cfg.d_model), jnp.bfloat16)
+        return out
+    return {"token": ((B, 1), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, mesh=None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    out = {}
+    for name, (shape, dtype) in batch_shapes(cfg, cell).items():
+        if mesh is not None:
+            spec = shd.batch_specs(cfg, mesh, {name: shape})[name]
+            out[name] = jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+        else:
+            out[name] = jax.ShapeDtypeStruct(shape, dtype)
+    return out
+
+
+def _attach(tree_shapes, spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        tree_shapes,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-cell lowering
+# ---------------------------------------------------------------------------
+
+
+def _variant_cfg(cfg: ModelConfig, model, n_periods: int) -> ModelConfig:
+    L = n_periods * model.period
+    kw = {"num_layers": L}
+    if cfg.is_encoder_decoder:
+        kw["num_encoder_layers"] = max(
+            0, cfg.num_encoder_layers * L // max(cfg.num_layers, 1)
+        ) if cfg.num_layers else 0
+        if n_periods:
+            kw["num_encoder_layers"] = max(1, kw["num_encoder_layers"])
+    return cfg.replace(**kw)
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    cell: ShapeCell,
+    mesh,
+    rt: Runtime,
+    *,
+    opt_dtype: str = "float32",
+    zero: bool = True,
+    compress: bool = False,
+    grad_accum: int = 1,
+    lr_peak: float = 3e-4,
+):
+    """Lower+compile one (cfg × cell) on ``mesh``.  Returns (compiled, lowered)."""
+    model = build_model(cfg, rt)
+    rules = shd.activation_rules(cfg, mesh, cell.global_batch)
+
+    if cell.kind == "train":
+        opt = AdamW(AdamWConfig(state_dtype=opt_dtype, master_weights=zero))
+        sched = WarmupCosine(peak_lr=lr_peak)
+        state_shape = jax.eval_shape(
+            lambda: init_state(model, opt, jax.random.key(0), compress=compress)
+        )
+        pspecs = shd.param_specs(cfg, mesh, state_shape["params"])
+        ospecs = shd.opt_state_specs(cfg, mesh, state_shape["opt"], zero=zero)
+        gshards = None
+        if zero:
+            gshards = jax.tree_util.tree_map(
+                lambda sp, leaf: NamedSharding(
+                    mesh, shd.zero_extend(sp, tuple(leaf.shape), mesh)
+                ),
+                pspecs, state_shape["params"],
+                is_leaf=lambda x: isinstance(x, P),
+            )
+        step_fn = make_train_step(
+            model, opt, sched, compress=compress, grad_accum=grad_accum,
+            grad_shardings=gshards,
+        )
+        state_specs = {"params": pspecs, "opt": ospecs, "step": P()}
+        if compress:
+            state_specs["residuals"] = jax.tree_util.tree_map(
+                lambda s: shd.zero_extend(s, None, mesh) if False else s, pspecs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+        state_in = _attach(state_shape, state_specs, mesh)
+        batch_in = input_specs(cfg, cell, mesh)
+        with mesh_context(mesh):
+            metrics_shape = jax.eval_shape(step_fn, state_shape, {
+                k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch_in.items()
+            })[1]
+        metric_specs = jax.tree_util.tree_map(lambda _: P(), metrics_shape)
+        with mesh, sharding_rules(rules), mesh_context(mesh):
+            lowered = jax.jit(
+                step_fn,
+                out_shardings=(
+                    jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), state_specs,
+                                           is_leaf=lambda x: isinstance(x, P)),
+                    jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), metric_specs,
+                                           is_leaf=lambda x: isinstance(x, P)),
+                ),
+                donate_argnums=(0,),
+            ).lower(state_in, batch_in)
+
+    elif cell.kind == "prefill":
+        step_fn = make_prefill(model)
+        params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        pspecs = shd.param_specs(cfg, mesh, params_shape)
+        params_in = _attach(params_shape, pspecs, mesh)
+        batch_in = input_specs(cfg, cell, mesh)
+        with mesh, sharding_rules(rules), mesh_context(mesh):
+            lowered = jax.jit(step_fn).lower(params_in, batch_in)
+
+    else:  # decode
+        step_fn = make_decode_step(model)
+        params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        pspecs = shd.param_specs(cfg, mesh, params_shape)
+        params_in = _attach(params_shape, pspecs, mesh)
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(cell.global_batch, cell.seq_len)
+        )
+        cspecs = shd.cache_specs(
+            cfg, mesh, {k: tuple(v.shape) for k, v in cache_shape.items()}
+        )
+        cache_in = _attach(cache_shape, cspecs, mesh)
+        tok = jax.ShapeDtypeStruct(
+            (cell.global_batch, 1), jnp.int32,
+            sharding=NamedSharding(mesh, shd.batch_specs(cfg, mesh, {"t": (cell.global_batch, 1)})["t"]),
+        )
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        with mesh, sharding_rules(rules), mesh_context(mesh):
+            lowered = jax.jit(step_fn, donate_argnums=(1,)).lower(
+                params_in, cache_in, tok, pos
+            )
+
+    compiled = lowered.compile()
+    return compiled, lowered
+
+
+# ---------------------------------------------------------------------------
+# Cost extraction with scan-body correction
+# ---------------------------------------------------------------------------
+
+
+def _costs_of(compiled) -> Dict[str, float]:
+    cs = RA.cost_summary(compiled.cost_analysis())
+    coll = RA.collective_bytes(compiled.as_text())
+    counts = coll.pop("_counts")
+    cs["coll_bytes"] = float(sum(coll.values()))
+    for k, v in coll.items():
+        cs[f"coll_{k}"] = float(v)
+    cs["_counts"] = counts  # not extrapolated
+    return cs
+
+
+def dryrun_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    rt: Optional[Runtime] = None,
+    opt_dtype: Optional[str] = None,
+    zero: bool = True,
+    compress: bool = False,
+    grad_accum: int = 0,
+    skip_variants: bool = False,
+) -> Dict[str, Any]:
+    cell = SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    ok, why = cell_applicable(cfg0, cell)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model_par = mesh.shape["model"]
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+    result: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "chips": chips,
+        "applicable": ok,
+        "skip_reason": why,
+    }
+    if not ok:
+        return result
+
+    cfg, changes = shd.shardable(cfg0, model_par)
+    result["pad_changes"] = {k: list(v) for k, v in changes.items()}
+    rt = rt or Runtime(remat="full", attn_impl="auto")
+    if opt_dtype is None:
+        # int8 moments for the MoE monsters, fp32 elsewhere (fits-HBM default)
+        opt_dtype = "int8" if cfg.param_count() > 100e9 else "float32"
+    if cell.kind == "train" and grad_accum == 0:
+        # auto: keep the per-microbatch rows per chip small enough that the
+        # scan carry (B/dp × S × d per layer) stays well inside HBM
+        rows = cell.global_batch // shd.mesh_dp_size(mesh)
+        grad_accum = max(1, min(8, rows // 2))
+    elif grad_accum == 0:
+        grad_accum = 1
+    result["opts"] = {
+        "remat": rt.remat, "attn_impl": rt.attn_impl, "opt_dtype": opt_dtype,
+        "zero": zero, "compress": compress, "grad_accum": grad_accum,
+        "window_slice": rt.decode_window_slice, "moe_impl": rt.moe_impl,
+    }
+
+    model = build_model(cfg, rt)
+    t0 = time.time()
+    compiled, lowered = lower_cell(
+        cfg, cell, mesh, rt, opt_dtype=opt_dtype, zero=zero, compress=compress,
+        grad_accum=grad_accum,
+    )
+    result["compile_s_full"] = round(time.time() - t0, 2)
+
+    ma = compiled.memory_analysis()
+    result["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "code_bytes": int(ma.generated_code_size_in_bytes),
+    }
+    result["hbm_per_device"] = int(
+        ma.argument_size_in_bytes + ma.temp_size_in_bytes
+        + ma.output_size_in_bytes - ma.alias_size_in_bytes
+    )
+    # CPU-backend memory_analysis is systematically pessimistic for the
+    # TPU target: bf16 buffers are legalized to f32 copies (2x) and the CPU
+    # scheduler does not minimize liveness across microbatches (verified by
+    # HLO/buffer inspection — EXPERIMENTS.md §Dry-run caveats).  We
+    # therefore also report a first-principles TPU HBM model:
+    #   args (exact, from memory_analysis — params/opt/cache shards)
+    # + remat carry stack  L x (microbatch tokens/chip) x d x 2B
+    # + working activations ~6 live residual-sized tensors (fp32)
+    # + logits microbatch buffer (fp32, vocab/model sharded)
+    # all x1.3 headroom.
+    args_b = float(ma.argument_size_in_bytes)
+    extra = 0.0
+    mp = shd.mesh_model_size(mesh)
+    dp = shd.mesh_dp_size(mesh)
+    if cell.kind == "train":
+        tokens_chip = cell.tokens_per_step / dp / max(grad_accum, 1)
+        extra += cfg.num_layers * tokens_chip * cfg.d_model * 2.0  # bf16 carries
+        extra += 6 * tokens_chip * cfg.d_model * 4.0
+        extra += tokens_chip * (cfg.vocab_size / mp) * 4.0
+    elif cell.kind == "prefill":
+        tokens_chip = cell.tokens_per_step / dp
+        kvh = max(cfg.num_kv_heads, 1)
+        extra += (
+            cfg.num_layers * tokens_chip * 2 * kvh * cfg.resolved_head_dim * 2.0 / mp
+        )  # kv cache output (seq or head sharded over model)
+        extra += 6 * tokens_chip * cfg.d_model * 2.0
+    else:
+        extra += 4 * (cell.global_batch / max(dp, 1)) * cfg.d_model * 4.0
+    result["hbm_per_device_tpu_model"] = int((args_b + extra) * 1.3)
+    result["fits_hbm_raw"] = bool(result["hbm_per_device"] <= TPU_V5E.hbm_bytes)
+    result["fits_hbm"] = bool(result["hbm_per_device_tpu_model"] <= TPU_V5E.hbm_bytes)
+
+    c_full = _costs_of(compiled)
+    result["counts_full"] = c_full.pop("_counts")
+
+    if skip_variants:
+        totals = c_full
+    else:
+        # reduced-layer variants for while-body cost correction
+        cfg1 = _variant_cfg(cfg, model, 1)
+        cfg0L = _variant_cfg(cfg, model, 0)
+        t0 = time.time()
+        comp1, _ = lower_cell(cfg1, cell, mesh, rt, opt_dtype=opt_dtype, zero=zero, compress=compress, grad_accum=grad_accum)
+        comp0, _ = lower_cell(cfg0L, cell, mesh, rt, opt_dtype=opt_dtype, zero=zero, compress=compress, grad_accum=grad_accum)
+        result["compile_s_variants"] = round(time.time() - t0, 2)
+        c1 = _costs_of(comp1)
+        c0 = _costs_of(comp0)
+        c1.pop("_counts")
+        c0.pop("_counts")
+        totals = RA.extrapolate(c0, c1, c_full, periods_total=model.n_scan + (1 if model.n_tail else 0))
+        # exact period count: layers / period
+        totals = RA.extrapolate(c0, c1, c_full, periods_total=cfg.num_layers / model.period)
+        result["cost_L0"] = c0
+        result["cost_L1"] = c1
+    result["cost_full_module"] = {k: v for k, v in c_full.items()}
+    result["cost_totals"] = totals
+
+    mf = RA.model_flops(cfg, cell, original_cfg=cfg0)
+    result["model_flops_total"] = mf
+    result["model_flops_per_chip"] = mf / chips
+    terms = RA.roofline_terms(
+        totals["flops"], totals["bytes"], totals["coll_bytes"],
+        chips=chips, chip=TPU_V5E, per_device=True,
+    )
+    # analytic memory floor: params/opt touched once + residual stream
+    min_bytes = float(ma.argument_size_in_bytes + ma.output_size_in_bytes)
+    if cell.kind != "decode":
+        tokens_chip = cell.tokens_per_step / max(shd.mesh_dp_size(mesh), 1)
+        min_bytes += 2 * 2 * tokens_chip * cfg.d_model * max(cfg.num_layers, 1)
+    result["t_memory_min"] = min_bytes / TPU_V5E.hbm_bw
+    result["bw_utilization_vs_min"] = (
+        result["t_memory_min"] / terms["t_memory"] if terms["t_memory"] else 0.0
+    )
+    result["roofline"] = terms
+    result["useful_flops_ratio"] = (
+        (mf / chips) / totals["flops"] if totals["flops"] else 0.0
+    )
+    # fraction of the bound the useful model flops could ideally take
+    ideal = (mf / chips) / TPU_V5E.peak_flops_bf16
+    result["roofline_fraction"] = ideal / terms["t_bound"] if terms["t_bound"] else 0.0
+    return result
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=os.environ.get("DRYRUN_OUT", "benchmarks/results/dryrun"))
+    ap.add_argument("--tag", default="", help="suffix for result filenames (hillclimb variants)")
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--attn-impl", default="auto")
+    ap.add_argument("--window-slice", action="store_true")
+    ap.add_argument("--moe-impl", default="dense", choices=["dense", "ep", "auto"])
+    ap.add_argument("--opt-dtype", default=None, choices=[None, "float32", "bfloat16", "int8"])
+    ap.add_argument("--no-zero", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=0, help="0 = auto")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--skip-variants", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    rt = Runtime(remat=args.remat, attn_impl=args.attn_impl, decode_window_slice=args.window_slice, moe_impl=args.moe_impl)
+
+    cells = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = []
+    for arch, shape, mp in cells:
+        mesh_tag = "2x16x16" if mp else "16x16"
+        name = f"{arch}__{shape}__{mesh_tag}{('__' + args.tag) if args.tag else ''}"
+        path = os.path.join(args.out, name + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip] {name}")
+            continue
+        print(f"[dryrun] {name} ...", flush=True)
+        t0 = time.time()
+        try:
+            res = dryrun_cell(
+                arch, shape,
+                multi_pod=mp, rt=rt,
+                opt_dtype=args.opt_dtype,
+                zero=not args.no_zero,
+                compress=args.compress_grads,
+                grad_accum=args.grad_accum,
+                skip_variants=args.skip_variants,
+            )
+            res["tag"] = args.tag
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            if res.get("applicable"):
+                r = res["roofline"]
+                print(
+                    f"  ok in {time.time()-t0:.1f}s  bound={r['t_bound']*1e3:.2f}ms "
+                    f"dominant={r['dominant']} frac={res['roofline_fraction']:.2f} "
+                    f"hbm_raw={res['hbm_per_device']/1e9:.2f}GB "
+                    f"hbm_tpu={res['hbm_per_device_tpu_model']/1e9:.2f}GB fits={res['fits_hbm']}"
+                )
+            else:
+                print(f"  skipped: {res['skip_reason']}")
+        except Exception as e:
+            failures.append((name, repr(e)))
+            print(f"  FAIL {e!r}")
+            traceback.print_exc()
+    if failures:
+        print(f"{len(failures)} FAILURES:")
+        for n, e in failures:
+            print(" ", n, e)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

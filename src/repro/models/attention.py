@@ -1,0 +1,195 @@
+"""Attention: GQA with causal / sliding-window / cross variants.
+
+Two XLA paths plus the Pallas TPU kernel:
+
+* ``dense``   — materializes the full score tensor.  Used for short
+  sequences and for decode (Sq == 1).
+* ``blocked`` — flash-style running-softmax over (q_chunk × kv_chunk)
+  blocks.  The block loops are **python-unrolled** on purpose: the dry-run
+  derives roofline terms from XLA cost analysis, which counts a `lax.scan`
+  body only once (DESIGN.md §4).  Fully-masked blocks are skipped at trace
+  time, so sliding-window layers get near-linear compute.
+* ``pallas``  — kernels/flash_attention.py (TPU target; validated in
+  interpret mode).  Selected via ``impl='pallas'``.
+
+Shapes: q (B, Sq, H, hd); k, v (B, Skv, KVH, hd) with H % KVH == 0.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softcap(scores: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def _block_mask(
+    q_pos: jax.Array,  # (Sq,) absolute positions of queries
+    kv_pos: jax.Array,  # (Skv,) absolute positions of keys
+    *,
+    causal: bool,
+    window: int,
+    kv_valid_len: Optional[jax.Array],
+) -> jax.Array:  # noqa: D401
+    """Boolean (Sq, Skv) mask: True = attend."""
+    mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), dtype=bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+    if kv_valid_len is not None:
+        mask &= kv_pos[None, :] < kv_valid_len
+    return mask
+
+
+def _scores(q: jax.Array, k: jax.Array, scale: float, softcap: float) -> jax.Array:
+    """q (B,Sq,KVH,G,hd) × k (B,Skv,KVH,hd) -> (B,KVH,G,Sq,Skv) fp32."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+    return _softcap(s * scale, softcap)
+
+
+def dense_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int | jax.Array = 0,
+    kv_offset: int | jax.Array = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    scale = scale or (1.0 / math.sqrt(hd))
+    qg = q.reshape(B, Sq, KVH, G, hd)
+    s = _scores(qg, k, scale, softcap)  # (B,KVH,G,Sq,Skv)
+    q_pos = jnp.arange(Sq) + q_offset
+    kv_pos = jnp.arange(Skv) + kv_offset
+    mask = _block_mask(q_pos, kv_pos, causal=causal, window=window, kv_valid_len=kv_valid_len)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, hd)
+
+
+def blocked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 2048,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Flash-style blocked attention, python-unrolled blocks, fp32 softmax.
+
+    Assumes self-attention over a full sequence (q_offset == 0,
+    kv_valid_len == Skv); decode uses ``dense_attention``.
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    scale = scale or (1.0 / math.sqrt(hd))
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0, (Sq, q_chunk, Skv, kv_chunk)
+
+    out_chunks = []
+    for qi in range(Sq // q_chunk):
+        q_lo, q_hi = qi * q_chunk, (qi + 1) * q_chunk
+        qg = q[:, q_lo:q_hi].reshape(B, q_chunk, KVH, G, hd)
+        m = jnp.full((B, KVH, G, q_chunk), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, KVH, G, q_chunk), jnp.float32)
+        o = jnp.zeros((B, KVH, G, q_chunk, hd), jnp.float32)
+        for kj in range(Skv // kv_chunk):
+            k_lo, k_hi = kj * kv_chunk, (kj + 1) * kv_chunk
+            # trace-time block skipping
+            if causal and k_lo > q_hi - 1:
+                continue
+            if window > 0 and k_hi - 1 <= q_lo - window:
+                continue
+            s = _scores(qg, k[:, k_lo:k_hi], scale, softcap)  # (B,KVH,G,qc,kc)
+            needs_mask = (causal and k_hi > q_lo) or (window > 0 and k_lo <= q_hi - window)
+            if needs_mask:
+                mask = _block_mask(
+                    jnp.arange(q_lo, q_hi),
+                    jnp.arange(k_lo, k_hi),
+                    causal=causal,
+                    window=window,
+                    kv_valid_len=None,
+                )
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v.dtype), v[:, k_lo:k_hi],
+                preferred_element_type=jnp.float32,
+            )
+            o = o * alpha[..., None] + pv
+            m = m_new
+        o = o / jnp.maximum(l[..., None], 1e-37)
+        out_chunks.append(
+            o.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, hd).astype(q.dtype)
+        )
+    return jnp.concatenate(out_chunks, axis=1)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int | jax.Array = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+    kv_offset: int | jax.Array = 0,
+    softcap: float = 0.0,
+    impl: str = "auto",
+    q_chunk: int = 1024,
+    kv_chunk: int = 2048,
+) -> jax.Array:
+    """Dispatching entry point used by the model zoo."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        if Sq == Skv and kv_valid_len is None:
+            return kops.flash_attention(
+                q, k, v, causal=causal, window=window, softcap=softcap
+            )
+        impl = "auto"  # decode / ragged falls back
+    if impl == "auto":
+        impl = "dense" if (Sq == 1 or Skv <= max(kv_chunk, 2048)) else "blocked"
+    if impl == "dense":
+        return dense_attention(
+            q, k, v,
+            causal=causal, window=window, q_offset=q_offset,
+            kv_offset=kv_offset, kv_valid_len=kv_valid_len, softcap=softcap,
+        )
+    if impl == "blocked":
+        assert kv_valid_len is None and (isinstance(q_offset, int) and q_offset == 0)
+        return blocked_attention(
+            q, k, v,
+            causal=causal, window=window, softcap=softcap,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+    raise ValueError(f"unknown attention impl {impl!r}")

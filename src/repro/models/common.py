@@ -1,0 +1,120 @@
+"""Shared primitives: norms, rotary embeddings, SwiGLU, init helpers.
+
+Everything is a pure function over explicit parameter pytrees — no module
+framework.  Parameters live in nested dicts; layer stacks carry a leading
+``L`` axis so the model can scan over layers (MaxText-style).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def head_rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """qk-norm: RMS over the head_dim of (..., H, hd) tensors."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta))  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]  # (..., S, 1, hd/2) broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(num_pos: int, dim: int) -> np.ndarray:
+    """Whisper-style fixed sinusoidal embedding table (num_pos, dim)."""
+    log_timescale = math.log(10_000) / (dim // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(dim // 2, dtype=np.float32))
+    scaled = np.arange(num_pos, dtype=np.float32)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(scaled), np.cos(scaled)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(kg, d_model, d_ff, dtype),
+        "up": dense_init(ku, d_model, d_ff, dtype),
+        "down": dense_init(kd, d_ff, d_model, dtype),
+    }
+
+
+def swiglu_apply(p: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ p["gate"])
+    return (g * (x @ p["up"])) @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array, z_loss: float = 0.0):
+    """logits (..., V) fp32-accumulated CE with optional z-loss; labels int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    target = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - target
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return loss

@@ -1,0 +1,651 @@
+"""Unified model zoo: one ``Model`` class driving all 10 assigned archs.
+
+Families: dense / moe / ssm / hybrid / vlm / audio (enc-dec).  One stacked
+parameter tree (leading ``L`` axis) scanned over layers.  Local:global
+attention patterns (gemma3 5:1, hymba 7:1) are handled by scanning over
+*periods* — the period body is python-unrolled so every layer's window flag
+is trace-time static (required for block-skipping in blocked attention).
+
+API (pure functions over explicit param pytrees):
+    init(rng)                        -> params
+    forward(params, batch)           -> logits            (teacher forcing)
+    loss(params, batch)              -> (loss, metrics)
+    prefill(params, batch)           -> (last_logits, cache)
+    init_cache(batch, cache_len)     -> zeroed cache pytree
+    decode_step(params, cache, token, pos) -> (logits, cache)
+
+Modality frontends are stubs per the assignment: batches carry precomputed
+patch/frame embeddings (``patch_embeds`` / ``src_embeds``).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import constrain
+from repro.models import ssd as ssd_mod
+from repro.models.attention import attention
+from repro.models.common import (
+    apply_rope,
+    dense_init,
+    dtype_of,
+    embed_init,
+    head_rms_norm,
+    rms_norm,
+    sinusoidal_positions,
+    softmax_cross_entropy,
+    swiglu_apply,
+    swiglu_init,
+)
+from repro.models.moe import moe_apply, moe_aux_loss, moe_init
+
+
+@dataclass(frozen=True)
+class Runtime:
+    """Implementation knobs orthogonal to the architecture."""
+
+    attn_impl: str = "auto"  # auto | dense | blocked | pallas
+    remat: str = "full"  # none | full | dots
+    capacity_factor: float = 1.25
+    moe_aux_coef: float = 0.01
+    # §Perf G1: decode on sliding-window layers slices the last ``window``
+    # cache entries instead of masking the full sequence — O(window) HBM
+    # reads per local layer instead of O(S).
+    decode_window_slice: bool = False
+    # §Perf A1: "ep" routes MoE through the expert-parallel shard_map path
+    # (requires a mesh_context); "auto" uses it whenever a mesh is active
+    # and E divides the model axis; "dense" keeps the scatter path.
+    moe_impl: str = "dense"
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _tmap(fn, *trees):
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def _sinusoid_at(pos, dim: int):
+    """Sinusoidal embedding for scalar position(s) without a full table."""
+    half = dim // 2
+    log_timescale = math.log(10_000) / (half - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half, dtype=jnp.float32))
+    scaled = jnp.asarray(pos, jnp.float32)[..., None] * inv
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=-1)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, rt: Runtime = Runtime()):
+        self.cfg = cfg
+        self.rt = rt
+        self.dtype = dtype_of(cfg.dtype)
+        self.period = (
+            cfg.local_global_ratio + 1
+            if cfg.attention_pattern == "local_global"
+            else 1
+        )
+        self.n_scan = cfg.num_layers // self.period
+        self.n_tail = cfg.num_layers - self.n_scan * self.period
+        self._enc_out = None  # set during enc-dec traces
+
+    # ==================================================================
+    # Init
+    # ==================================================================
+    def _init_block(self, key) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        d = cfg.d_model
+        keys = jax.random.split(key, 10)
+        block: Dict[str, Any] = {}
+        if cfg.uses_attention:
+            attn = {
+                "ln": jnp.zeros((d,), dt),
+                "wq": dense_init(keys[0], d, cfg.q_dim, dt),
+                "wk": dense_init(keys[1], d, cfg.kv_dim, dt),
+                "wv": dense_init(keys[2], d, cfg.kv_dim, dt),
+                "wo": dense_init(keys[3], cfg.q_dim, d, dt),
+            }
+            if cfg.qk_norm:
+                attn["q_norm"] = jnp.zeros((cfg.resolved_head_dim,), dt)
+                attn["k_norm"] = jnp.zeros((cfg.resolved_head_dim,), dt)
+            block["attn"] = attn
+        if cfg.uses_ssm:
+            block["ssm"] = ssd_mod.ssd_init(keys[4], cfg, dt)
+            if not cfg.uses_attention:
+                block["ssm_ln"] = jnp.zeros((d,), dt)
+        if cfg.cross_attention:
+            block["cross"] = {
+                "ln": jnp.zeros((d,), dt),
+                "wq": dense_init(keys[5], d, cfg.q_dim, dt),
+                "wk": dense_init(keys[6], d, cfg.kv_dim, dt),
+                "wv": dense_init(keys[7], d, cfg.kv_dim, dt),
+                "wo": dense_init(keys[8], cfg.q_dim, d, dt),
+            }
+        if cfg.uses_moe:
+            block["moe_ln"] = jnp.zeros((d,), dt)
+            block["moe"] = moe_init(keys[9], cfg, dt)
+        elif cfg.d_ff:
+            block["mlp_ln"] = jnp.zeros((d,), dt)
+            block["mlp"] = swiglu_init(keys[9], d, cfg.d_ff, dt)
+        return block
+
+    def _init_enc_block(self, key) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        d = cfg.d_model
+        keys = jax.random.split(key, 5)
+        return {
+            "attn": {
+                "ln": jnp.zeros((d,), dt),
+                "wq": dense_init(keys[0], d, cfg.q_dim, dt),
+                "wk": dense_init(keys[1], d, cfg.kv_dim, dt),
+                "wv": dense_init(keys[2], d, cfg.kv_dim, dt),
+                "wo": dense_init(keys[3], cfg.q_dim, d, dt),
+            },
+            "mlp_ln": jnp.zeros((d,), dt),
+            "mlp": swiglu_init(keys[4], d, cfg.d_ff, dt),
+        }
+
+    def init(self, rng) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        k_embed, k_blocks, k_head, k_enc = jax.random.split(rng, 4)
+        params: Dict[str, Any] = {
+            "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dt),
+            "blocks": jax.vmap(self._init_block)(
+                jax.random.split(k_blocks, cfg.num_layers)
+            ),
+            "final_norm": jnp.zeros((cfg.d_model,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dt)
+        if cfg.is_encoder_decoder:
+            params["enc_blocks"] = jax.vmap(self._init_enc_block)(
+                jax.random.split(k_enc, cfg.num_encoder_layers)
+            )
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), dt)
+        return params
+
+    # ==================================================================
+    # Sublayers
+    # ==================================================================
+    def _qkv(self, attn_bp: dict, h: jax.Array, positions):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        B, S, _ = h.shape
+        x = rms_norm(h, attn_bp["ln"], cfg.norm_eps)
+        q = (x @ attn_bp["wq"]).reshape(B, S, cfg.num_heads, hd)
+        k = (x @ attn_bp["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
+        v = (x @ attn_bp["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
+        if cfg.qk_norm:
+            q = head_rms_norm(q, attn_bp["q_norm"], cfg.norm_eps)
+            k = head_rms_norm(k, attn_bp["k_norm"], cfg.norm_eps)
+        if cfg.rope_theta > 0:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        return q, k, v
+
+    def _attn_sublayer(self, attn_bp, h, *, is_global: bool, positions) -> jax.Array:
+        cfg, rt = self.cfg, self.rt
+        window = 0 if is_global else cfg.sliding_window
+        q, k, v = self._qkv(attn_bp, h, positions)
+        o = attention(
+            q, k, v,
+            causal=True,
+            window=window,
+            softcap=cfg.attn_logit_softcap,
+            impl=rt.attn_impl,
+            q_chunk=cfg.attn_q_chunk,
+            kv_chunk=cfg.attn_kv_chunk,
+        )
+        o = constrain(o.reshape(*h.shape[:2], cfg.q_dim), "attn_out")
+        return o @ attn_bp["wo"]
+
+    def _mlp_sublayer(self, bp, h) -> jax.Array:
+        cfg = self.cfg
+        if cfg.uses_moe:
+            x = rms_norm(h, bp["moe_ln"], cfg.norm_eps)
+            if self.rt.moe_impl in ("ep", "auto"):
+                from repro.distributed.ctx import current_mesh
+                from repro.models.moe import moe_apply_ep
+
+                mesh = current_mesh()
+                if mesh is not None and cfg.num_experts % mesh.shape.get("model", 1) == 0:
+                    return moe_apply_ep(
+                        bp["moe"], x, cfg, mesh,
+                        capacity_factor=self.rt.capacity_factor,
+                    )
+                if self.rt.moe_impl == "ep":
+                    raise RuntimeError("moe_impl='ep' requires an active mesh_context")
+            return moe_apply(bp["moe"], x, cfg, capacity_factor=self.rt.capacity_factor)
+        x = rms_norm(h, bp["mlp_ln"], cfg.norm_eps)
+        return swiglu_apply(bp["mlp"], x)
+
+    def _ssm_prenorm(self, bp, h) -> jax.Array:
+        cfg = self.cfg
+        ln = bp["ssm_ln"] if "ssm_ln" in bp else bp["attn"]["ln"]
+        return rms_norm(h, ln, cfg.norm_eps)
+
+    def _cross_sublayer(self, cp, h, enc_out) -> jax.Array:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        B, S, _ = h.shape
+        Se = enc_out.shape[1]
+        x = rms_norm(h, cp["ln"], cfg.norm_eps)
+        q = (x @ cp["wq"]).reshape(B, S, cfg.num_heads, hd)
+        k = (enc_out @ cp["wk"]).reshape(B, Se, cfg.num_kv_heads, hd)
+        v = (enc_out @ cp["wv"]).reshape(B, Se, cfg.num_kv_heads, hd)
+        o = attention(q, k, v, causal=False, impl="dense")
+        return o.reshape(B, S, cfg.q_dim) @ cp["wo"]
+
+    # ==================================================================
+    # One layer: train-forward / prefill / decode
+    # ==================================================================
+    def _block_fwd(self, bp, h, *, is_global: bool, positions) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return h + ssd_mod.ssd_apply(bp["ssm"], self._ssm_prenorm(bp, h), cfg)
+        if cfg.parallel_ssm:
+            a = self._attn_sublayer(bp["attn"], h, is_global=is_global, positions=positions)
+            s = ssd_mod.ssd_apply(bp["ssm"], self._ssm_prenorm(bp, h), cfg)
+            h = h + a + s
+        else:
+            h = h + self._attn_sublayer(bp["attn"], h, is_global=is_global, positions=positions)
+        if "cross" in bp:
+            h = h + self._cross_sublayer(bp["cross"], h, self._enc_out)
+        h = h + self._mlp_sublayer(bp, h)
+        return constrain(h, "residual")
+
+    def _block_prefill(self, bp, h, *, is_global: bool, positions):
+        """Like _block_fwd but also returns this layer's cache entries."""
+        cfg = self.cfg
+        B, S, _ = h.shape
+        lc: Dict[str, Any] = {}
+        parts = []
+        if cfg.uses_attention:
+            window = 0 if is_global else cfg.sliding_window
+            q, k, v = self._qkv(bp["attn"], h, positions)
+            o = attention(
+                q, k, v, causal=True, window=window,
+                softcap=cfg.attn_logit_softcap, impl=self.rt.attn_impl,
+                q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+            )
+            parts.append(o.reshape(B, S, cfg.q_dim) @ bp["attn"]["wo"])
+            lc["k"], lc["v"] = k, v
+        if cfg.uses_ssm:
+            x = self._ssm_prenorm(bp, h)
+            out, state, conv_tail = self._ssd_with_state(bp["ssm"], x)
+            parts.append(out)
+            lc["h"] = state
+            lc["conv"] = conv_tail
+        h = h + sum(parts)
+        if "cross" in bp:
+            hd = cfg.resolved_head_dim
+            Se = self._enc_out.shape[1]
+            lc["cross_k"] = (self._enc_out @ bp["cross"]["wk"]).reshape(
+                B, Se, cfg.num_kv_heads, hd
+            )
+            lc["cross_v"] = (self._enc_out @ bp["cross"]["wv"]).reshape(
+                B, Se, cfg.num_kv_heads, hd
+            )
+            h = h + self._cross_sublayer(bp["cross"], h, self._enc_out)
+        if cfg.uses_moe or cfg.d_ff:
+            h = h + self._mlp_sublayer(bp, h)
+        return h, lc
+
+    def _ssd_with_state(self, sp, x):
+        """SSD over a full sequence, returning output + decode-ready state."""
+        return ssd_mod.ssd_forward(sp, x, self.cfg)
+
+    def _striped_attention(self, q, k6, v6, pos, *, window: int, is_global: bool):
+        """Attention over a striped (B, nblk, w, KVH, hd) cache.
+
+        Local layers read only the ≤2 blocks covering [pos-w+1, pos];
+        global layers read all blocks.  Scores keep the (block, offset)
+        axes so the sharded offset dim never reshapes across shards.
+        """
+        cfg = self.cfg
+        B, _, H, hd = q.shape
+        KVH = k6.shape[-2]
+        G = H // KVH
+        w = k6.shape[2]
+        scale = 1.0 / math.sqrt(hd)
+        qg = q.reshape(B, 1, KVH, G, hd)
+        if is_global:
+            k_att, v_att, blk0 = k6, v6, 0
+        else:
+            nblk = k6.shape[1]
+            blk = pos // w
+            blk0 = jnp.clip(blk - 1, 0, nblk - 2)
+            k_att = jax.lax.dynamic_slice_in_dim(k6, blk0, 2, 1)
+            v_att = jax.lax.dynamic_slice_in_dim(v6, blk0, 2, 1)
+        s = jnp.einsum(
+            "bqhgd,bBwhd->bhgqBw", qg, k_att, preferred_element_type=jnp.float32
+        ) * scale
+        if cfg.attn_logit_softcap > 0:
+            s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
+        nB, nw = k_att.shape[1], k_att.shape[2]
+        pos_abs = (blk0 + jax.lax.broadcasted_iota(jnp.int32, (nB, nw), 0)) * w \
+            + jax.lax.broadcasted_iota(jnp.int32, (nB, nw), 1)
+        mask = pos_abs <= pos
+        if not is_global:
+            mask &= pos_abs > pos - window
+        s = jnp.where(mask[None, None, None, None], s, -1e30)
+        # softmax jointly over (block, offset) WITHOUT flattening — a
+        # reshape across the sharded offset dim forced a scores all-gather
+        # (§Perf iteration G3); axis reductions shard cleanly instead.
+        m = jnp.max(s, axis=(-2, -1), keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=(-2, -1), keepdims=True)
+        p = p / jnp.maximum(l, 1e-37)
+        o = jnp.einsum("bhgqBw,bBwhd->bqhgd", p.astype(v_att.dtype), v_att)
+        return o.reshape(B, 1, H, hd)
+
+    def _block_decode(self, bp, lc, h, pos, *, is_global: bool):
+        """One layer of single-token decode.  h (B, 1, d)."""
+        cfg = self.cfg
+        nc = dict(lc)
+        positions = jnp.full((h.shape[0], 1), pos)
+        parts = []
+        if cfg.uses_attention and lc.get("k") is not None and lc["k"].ndim == 5:
+            # striped cache layout (B, nblk, w, KVH, hd)
+            q, k_new, v_new = self._qkv(bp["attn"], h, positions)
+            w = lc["k"].shape[2]
+            blk, off = pos // w, pos % w
+            k_cache = jax.lax.dynamic_update_slice(
+                lc["k"], k_new[:, None], (0, blk, off, 0, 0)
+            )
+            v_cache = jax.lax.dynamic_update_slice(
+                lc["v"], v_new[:, None], (0, blk, off, 0, 0)
+            )
+            window = 0 if is_global else cfg.sliding_window
+            o = self._striped_attention(
+                q, k_cache, v_cache, pos, window=window, is_global=is_global
+            )
+            parts.append(o.reshape(*h.shape[:2], cfg.q_dim) @ bp["attn"]["wo"])
+            nc["k"], nc["v"] = k_cache, v_cache
+        elif cfg.uses_attention:
+            q, k_new, v_new = self._qkv(bp["attn"], h, positions)
+            k_cache = jax.lax.dynamic_update_slice(lc["k"], k_new, (0, pos, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(lc["v"], v_new, (0, pos, 0, 0))
+            window = 0 if is_global else cfg.sliding_window
+            S_cap = lc["k"].shape[1]
+            if self.rt.decode_window_slice and window and window < S_cap:
+                # §Perf G1: touch only the window, not the whole cache
+                start = jnp.clip(pos - window + 1, 0, S_cap - window)
+                k_att = jax.lax.dynamic_slice_in_dim(k_cache, start, window, 1)
+                v_att = jax.lax.dynamic_slice_in_dim(v_cache, start, window, 1)
+                kv_off = start
+            else:
+                k_att, v_att, kv_off = k_cache, v_cache, 0
+            o = attention(
+                q, k_att, v_att,
+                causal=False,  # masking via kv_valid_len / window
+                window=window,
+                q_offset=pos,
+                kv_offset=kv_off,
+                kv_valid_len=pos + 1,
+                softcap=cfg.attn_logit_softcap,
+                impl="dense",
+            )
+            parts.append(o.reshape(*h.shape[:2], cfg.q_dim) @ bp["attn"]["wo"])
+            nc["k"], nc["v"] = k_cache, v_cache
+        if cfg.uses_ssm:
+            x = self._ssm_prenorm(bp, h)
+            s_out, s_state = ssd_mod.ssd_decode_step(
+                bp["ssm"], {"conv": lc["conv"], "h": lc["h"]}, x, cfg
+            )
+            parts.append(s_out)
+            nc["conv"], nc["h"] = s_state["conv"], s_state["h"]
+        h = h + sum(parts)
+        if "cross" in bp:
+            h = h + self._cross_decode(bp["cross"], h, lc)
+        if cfg.uses_moe or cfg.d_ff:
+            h = h + self._mlp_sublayer(bp, h)
+        return h, nc
+
+    def _cross_decode(self, cp, h, lc) -> jax.Array:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        B, S, _ = h.shape
+        x = rms_norm(h, cp["ln"], cfg.norm_eps)
+        q = (x @ cp["wq"]).reshape(B, S, cfg.num_heads, hd)
+        o = attention(q, lc["cross_k"], lc["cross_v"], causal=False, impl="dense")
+        return o.reshape(B, S, cfg.q_dim) @ cp["wo"]
+
+    # ==================================================================
+    # Layer-stack traversal: scan over periods, unrolled tail.
+    # ``layer_fn(bp, carry, layer_idx_in_period, li) -> (carry, ys|None)``
+    # ==================================================================
+    def _traverse(self, blocks, carry, layer_fn, extra_xs: Optional[dict] = None):
+        cfg, period = self.cfg, self.period
+        n_scan, n_tail = self.n_scan, self.n_tail
+        ys_all = None
+        if n_scan == 0 and n_tail == 0:
+            return carry, extra_xs
+
+        if n_scan:
+            scanned_bp = _tmap(
+                lambda x: x[: n_scan * period].reshape(n_scan, period, *x.shape[1:]),
+                blocks,
+            )
+            scanned_xs = None
+            if extra_xs is not None:
+                scanned_xs = _tmap(
+                    lambda x: x[: n_scan * period].reshape(n_scan, period, *x.shape[1:]),
+                    extra_xs,
+                )
+
+            def period_fn(c, xs):
+                bp_p, xs_p = xs
+                ys_layers = []
+                for j in range(period):
+                    bp = _tmap(lambda x: x[j], bp_p)
+                    x_j = None if xs_p is None else _tmap(lambda x: x[j], xs_p)
+                    c, ys = layer_fn(bp, c, j, x_j)
+                    ys_layers.append(ys)
+                if ys_layers[0] is None:
+                    return c, None
+                return c, _tmap(lambda *a: jnp.stack(a), *ys_layers)
+
+            carry, ys_all = jax.lax.scan(
+                _remat(period_fn, self.rt.remat), carry, (scanned_bp, scanned_xs)
+            )
+            if ys_all is not None:
+                ys_all = _tmap(
+                    lambda x: x.reshape(n_scan * period, *x.shape[2:]), ys_all
+                )
+
+        tail_ys = []
+        for i in range(n_tail):
+            li = n_scan * period + i
+            bp = _tmap(lambda x: x[li], blocks)
+            x_i = None if extra_xs is None else _tmap(lambda x: x[li], extra_xs)
+            carry, ys = layer_fn(bp, carry, li % period if period else 0, x_i)
+            tail_ys.append(ys)
+        if tail_ys and tail_ys[0] is not None:
+            stacked = _tmap(lambda *a: jnp.stack(a), *tail_ys)
+            if ys_all is None:
+                ys_all = stacked
+            else:
+                ys_all = _tmap(
+                    lambda a, b: jnp.concatenate([a, b], axis=0), ys_all, stacked
+                )
+        return carry, ys_all
+
+    # ==================================================================
+    # Embedding / head / encoder
+    # ==================================================================
+    def _embed(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = params["embed"][tokens]
+        if cfg.frontend == "patch_stub" and "patch_embeds" in batch:
+            n = cfg.num_frontend_tokens
+            pe = batch["patch_embeds"].astype(h.dtype)
+            h = jnp.concatenate([pe, h[:, n:]], axis=1)
+        if cfg.rope_theta <= 0:
+            S = h.shape[1]
+            pos_tab = jnp.asarray(sinusoidal_positions(S, cfg.d_model))
+            h = h + pos_tab[None].astype(h.dtype)
+        return constrain(h, "embed")
+
+    def _head(self, params, h) -> jax.Array:
+        cfg = self.cfg
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return h @ w
+
+    def _encode(self, params, src_embeds) -> jax.Array:
+        cfg = self.cfg
+        B, S, d = src_embeds.shape
+        pos_tab = jnp.asarray(sinusoidal_positions(S, d))
+        h = src_embeds.astype(self.dtype) + pos_tab[None].astype(self.dtype)
+
+        def enc_block(h, bp):
+            hd = cfg.resolved_head_dim
+            x = rms_norm(h, bp["attn"]["ln"], cfg.norm_eps)
+            q = (x @ bp["attn"]["wq"]).reshape(B, S, cfg.num_heads, hd)
+            k = (x @ bp["attn"]["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
+            v = (x @ bp["attn"]["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
+            o = attention(
+                q, k, v, causal=False, impl=self.rt.attn_impl,
+                q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+            )
+            h = h + o.reshape(B, S, cfg.q_dim) @ bp["attn"]["wo"]
+            h = h + swiglu_apply(bp["mlp"], rms_norm(h, bp["mlp_ln"], cfg.norm_eps))
+            return h, None
+
+        h, _ = jax.lax.scan(_remat(enc_block, self.rt.remat), h, params["enc_blocks"])
+        return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+    # ==================================================================
+    # Public API
+    # ==================================================================
+    def forward(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        self._enc_out = (
+            self._encode(params, batch["src_embeds"]) if cfg.is_encoder_decoder else None
+        )
+        h = self._embed(params, batch)
+        S = batch["tokens"].shape[1]
+        positions = jnp.arange(S)[None, :]
+
+        def layer_fn(bp, c, j, _):
+            return self._block_fwd(bp, c, is_global=cfg.layer_is_global(j), positions=positions), None
+
+        h, _ = self._traverse(params["blocks"], h, layer_fn)
+        logits = self._head(params, h)
+        self._enc_out = None
+        return logits
+
+    def loss(self, params, batch) -> Tuple[jax.Array, dict]:
+        cfg = self.cfg
+        logits = self.forward(params, batch)
+        tokens = batch["tokens"]
+        targets = batch.get("targets")
+        if targets is None:
+            targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+        mask = jnp.ones(targets.shape, jnp.float32)
+        mask = mask.at[:, -1].set(0.0)
+        if cfg.frontend == "patch_stub":
+            mask = mask.at[:, : cfg.num_frontend_tokens].set(0.0)
+        ce = softmax_cross_entropy(logits, targets)
+        loss = (ce * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        metrics = {"ce": loss}
+        if cfg.uses_moe and cfg.num_layers > 0:
+            aux = self._moe_aux(params, batch)
+            metrics["moe_aux"] = aux
+            loss = loss + self.rt.moe_aux_coef * aux
+        return loss, metrics
+
+    def _moe_aux(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        h = self._embed(params, batch)
+        bp0 = _tmap(lambda x: x[0], params["blocks"])
+        return moe_aux_loss(bp0["moe"], rms_norm(h, bp0["moe_ln"], cfg.norm_eps), cfg)
+
+    # ------------------------------------------------------------------
+    def _striped(self, cache_len: int) -> bool:
+        """§Perf G2: cyclic (block, offset) cache layout for windowed archs —
+        the attention window spans ≤2 blocks and the *offset* dim shards
+        evenly across the model axis, so window reads stay local+balanced
+        (a seq-blocked layout forced XLA to all-gather the whole cache)."""
+        w = self.cfg.sliding_window
+        return (
+            self.rt.decode_window_slice
+            and self.cfg.uses_attention
+            and w > 0
+            and cache_len % w == 0
+            and cache_len // w >= 2
+        )
+
+    def init_cache(self, batch: int, cache_len: int) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        L = cfg.num_layers
+        cache: Dict[str, Any] = {}
+        if cfg.uses_attention and self._striped(cache_len):
+            w = cfg.sliding_window
+            kv = (L, batch, cache_len // w, w, cfg.num_kv_heads, cfg.resolved_head_dim)
+            cache["k"] = jnp.zeros(kv, dt)
+            cache["v"] = jnp.zeros(kv, dt)
+        elif cfg.uses_attention:
+            kv = (L, batch, cache_len, cfg.num_kv_heads, cfg.resolved_head_dim)
+            cache["k"] = jnp.zeros(kv, dt)
+            cache["v"] = jnp.zeros(kv, dt)
+        if cfg.uses_ssm:
+            conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+            cache["conv"] = jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_ch), dt)
+            cache["h"] = jnp.zeros(
+                (L, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+            )
+        if cfg.is_encoder_decoder:
+            xs = (L, batch, cfg.max_source_positions, cfg.num_kv_heads, cfg.resolved_head_dim)
+            cache["cross_k"] = jnp.zeros(xs, dt)
+            cache["cross_v"] = jnp.zeros(xs, dt)
+        return cache
+
+    def prefill(self, params, batch):
+        """Run the full prompt; return (last-position logits, filled cache)."""
+        cfg = self.cfg
+        self._enc_out = (
+            self._encode(params, batch["src_embeds"]) if cfg.is_encoder_decoder else None
+        )
+        h = self._embed(params, batch)
+        S = batch["tokens"].shape[1]
+        positions = jnp.arange(S)[None, :]
+
+        def layer_fn(bp, c, j, _):
+            return self._block_prefill(bp, c, is_global=cfg.layer_is_global(j), positions=positions)
+
+        h, cache = self._traverse(params["blocks"], h, layer_fn)
+        logits = self._head(params, h[:, -1:, :])
+        self._enc_out = None
+        return logits, cache
+
+    def decode_step(self, params, cache, token, pos):
+        """token (B, 1) int32; pos scalar int32 (write index).  Returns
+        (logits (B,1,V), updated cache)."""
+        cfg = self.cfg
+        h = params["embed"][token]
+        if cfg.rope_theta <= 0:
+            h = h + _sinusoid_at(pos, cfg.d_model)[None, None].astype(h.dtype)
+
+        def layer_fn(bp, c, j, lc):
+            c, nc = self._block_decode(bp, lc, c, pos, is_global=cfg.layer_is_global(j))
+            return c, nc
+
+        h, new_cache = self._traverse(params["blocks"], h, layer_fn, extra_xs=cache)
+        logits = self._head(params, h)
+        return logits, new_cache
+
+
+def build_model(cfg: ModelConfig, rt: Runtime = Runtime()) -> Model:
+    return Model(cfg, rt)

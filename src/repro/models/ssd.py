@@ -1,0 +1,224 @@
+"""Mamba2 / SSD (state-space duality) layer.
+
+Chunked dual form (arXiv:2405.21060): the sequence is split into chunks of
+``Q`` tokens; within a chunk the output is a (masked, decay-weighted)
+attention-like quadratic form, and states propagate across chunks through a
+scalar-decay linear recurrence.  The cross-chunk recurrence is evaluated
+with ``jax.lax.associative_scan`` — log-depth combine, **no while loop** —
+so XLA cost analysis counts its FLOPs correctly (DESIGN.md §4) and the
+whole layer stays MXU-friendly.
+
+Projections are stored **split** (z, x, B/C, Δ) rather than as one fused
+in_proj: z/x/conv_x are head-aligned and tensor-parallel over the model
+axis, while B/C/Δ are shared across heads and stay replicated — a fused
+matrix could not express that partitioning (DESIGN.md §3).
+
+Decode is the O(1) recurrent step:  h ← e^{AΔ}·h + Δ·B⊗x,  y = C·h + D·x,
+with a small causal-conv ring buffer.
+
+The per-chunk quadratic inner core is also available as a Pallas TPU
+kernel (kernels/ssd_scan.py); this module is the XLA reference path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+
+def ssd_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    nh = cfg.ssm_heads
+    w = cfg.ssm_conv
+    kz, kx, kbc, kdt, kcx, kcbc, kout = jax.random.split(key, 7)
+    a_init = jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32))
+    dt_bias = jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, nh, dtype=jnp.float32)))
+    return {
+        "wz": dense_init(kz, d, di, dtype),
+        "wx": dense_init(kx, d, di, dtype),
+        "wbc": dense_init(kbc, d, 2 * N, dtype),
+        "wdt": dense_init(kdt, d, nh, dtype),
+        "conv_x": (jax.random.normal(kcx, (w, di), jnp.float32) / math.sqrt(w)).astype(dtype),
+        "conv_bc": (jax.random.normal(kcbc, (w, 2 * N), jnp.float32) / math.sqrt(w)).astype(dtype),
+        "conv_bx": jnp.zeros((di,), dtype),
+        "conv_bbc": jnp.zeros((2 * N,), dtype),
+        "A_log": a_init,
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(kout, di, d, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, ch) with kernel (w, ch) + silu."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(W):  # tiny static loop (W == 4)
+        out = out + pad[:, i : i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(
+    xh: jax.Array,  # (B, S, nh, hp) inputs per head
+    dt: jax.Array,  # (B, S, nh) positive step sizes
+    A: jax.Array,  # (nh,) negative decay rates
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # (B, nh, hp, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,nh,hp) fp32, final_state (B,nh,hp,N) fp32)."""
+    B, S, nh, hp = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:  # pad tail: dt=0 ⇒ decay=1 and zero deposit ⇒ exact
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    xc = xh.reshape(B, nc, Q, nh, hp)
+    dtc = dt.reshape(B, nc, Q, nh).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+
+    a = dtc * A  # (B,nc,Q,nh) negative log-decay per step
+    La = jnp.cumsum(a, axis=2)  # inclusive within-chunk cumulative
+    Ltot = La[:, :, -1]  # (B,nc,nh)
+
+    # ---- intra-chunk (quadratic dual form) --------------------------------
+    cb = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc, preferred_element_type=jnp.float32)
+    decay = jnp.exp(La[:, :, :, None, :] - La[:, :, None, :, :])  # (B,nc,Q,Q,nh)
+    idx = jnp.arange(Q)
+    causal = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    scores = cb[..., None] * jnp.where(causal, decay, 0.0) * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xc.astype(jnp.float32))
+
+    # ---- chunk states -------------------------------------------------------
+    w_state = jnp.exp(Ltot[:, :, None, :] - La) * dtc  # (B,nc,Q,nh)
+    S_chunk = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, w_state, xc.astype(jnp.float32))
+
+    # ---- cross-chunk recurrence (associative scan, log-depth) --------------
+    chunk_decay = jnp.exp(Ltot)  # (B,nc,nh)
+
+    def combine(left, right):
+        a_l, s_l = left
+        a_r, s_r = right
+        return a_l * a_r, s_l * a_r[..., None, None] + s_r
+
+    if h0 is not None:
+        chunk_decay = jnp.concatenate(
+            [jnp.ones((B, 1, nh), chunk_decay.dtype), chunk_decay], axis=1
+        )
+        S_chunk = jnp.concatenate([h0.astype(jnp.float32)[:, None], S_chunk], axis=1)
+        H_inc = jax.lax.associative_scan(combine, (chunk_decay, S_chunk), axis=1)[1]
+        H_prev = H_inc[:, :-1]
+        final = H_inc[:, -1]
+    else:
+        H_inc = jax.lax.associative_scan(combine, (chunk_decay, S_chunk), axis=1)[1]
+        H_prev = jnp.concatenate([jnp.zeros_like(H_inc[:, :1]), H_inc[:, :-1]], axis=1)
+        final = H_inc[:, -1]
+
+    # ---- inter-chunk contribution ------------------------------------------
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Cc, H_prev) * jnp.exp(La)[..., None]
+
+    y = (y_intra + y_inter).reshape(B, S, nh, hp)[:, :S_orig]
+    return y, final  # final: (B, nh, hp, N)
+
+
+def ssd_forward(
+    p: dict, x: jax.Array, cfg, *, h0: Optional[jax.Array] = None, use_pallas: bool = False
+):
+    """Full Mamba2 block over (B, S, d).
+
+    Returns (out (B,S,d), final_state (B,nh,hp,N), conv_tail (B,w-1,di+2N)).
+    """
+    B, S, d = x.shape
+    di, N, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z = x @ p["wz"]
+    xr = x @ p["wx"]
+    bc = x @ p["wbc"]
+    dt = x @ p["wdt"]
+    xr = _causal_conv(xr, p["conv_x"], p["conv_bx"])
+    bc = _causal_conv(bc, p["conv_bc"], p["conv_bbc"])
+    xs = xr.reshape(B, S, nh, hp)
+    Bm = bc[..., :N]
+    Cm = bc[..., N:]
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        y, state = kops.ssd_scan(xs, dtp, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    else:
+        y, state = ssd_chunked(xs, dtp, A, Bm, Cm, chunk=cfg.ssm_chunk, h0=h0)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    w = cfg.ssm_conv
+    # conv tails store the *pre-conv* inputs needed to resume decoding
+    tail_x = (x @ p["wx"])[:, max(S - (w - 1), 0) :, :]
+    tail_bc = (x @ p["wbc"])[:, max(S - (w - 1), 0) :, :]
+    conv_tail = jnp.concatenate([tail_x, tail_bc], axis=-1)
+    return y @ p["out_proj"], state, conv_tail
+
+
+def ssd_apply(p: dict, x: jax.Array, cfg) -> jax.Array:
+    return ssd_forward(p, x, cfg)[0]
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent) path
+# ---------------------------------------------------------------------------
+
+
+def ssd_decode_step(p: dict, state: dict, x: jax.Array, cfg):
+    """x: (B, 1, d) single token.  Returns (out (B,1,d), new_state).
+
+    state = {"conv": (B, w-1, di+2N) pre-conv inputs, "h": (B,nh,hp,N)}.
+    """
+    B = x.shape[0]
+    di, N, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    x0 = x[:, 0]
+    z = x0 @ p["wz"]
+    xr = x0 @ p["wx"]
+    bc = x0 @ p["wbc"]
+    dt = x0 @ p["wdt"]
+
+    cur = jnp.concatenate([xr, bc], axis=-1)  # (B, di+2N)
+    win = jnp.concatenate([state["conv"], cur[:, None, :]], axis=1)  # (B, w, ch)
+    kern = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)  # (w, ch)
+    bias = jnp.concatenate([p["conv_bx"], p["conv_bbc"]], axis=-1)
+    conv_out = jnp.einsum("bwc,wc->bc", win.astype(jnp.float32), kern.astype(jnp.float32))
+    act = jax.nn.silu(conv_out + bias.astype(jnp.float32)).astype(x.dtype)
+    new_conv = win[:, 1:]
+
+    xs = act[..., :di].reshape(B, nh, hp)
+    Bm = act[..., di : di + N]
+    Cm = act[..., di + N :]
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dtp * A)  # (B,nh)
+
+    h = state["h"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtp, xs.astype(jnp.float32), Bm.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"conv": new_conv, "h": h}

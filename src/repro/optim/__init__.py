@@ -1,0 +1,12 @@
+from repro.optim.adamw import AdamW, AdamWConfig
+from repro.optim.compress import compress_grads, init_residuals
+from repro.optim.schedule import Constant, WarmupCosine
+
+__all__ = [
+    "AdamW",
+    "AdamWConfig",
+    "Constant",
+    "WarmupCosine",
+    "compress_grads",
+    "init_residuals",
+]

@@ -1,0 +1,34 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class WarmupCosine:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    final_frac: float = 0.1
+
+    def __call__(self, step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = self.peak_lr * step / max(self.warmup_steps, 1)
+        prog = jnp.clip(
+            (step - self.warmup_steps) / max(self.decay_steps - self.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        cos = self.final_frac + (1 - self.final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < self.warmup_steps, warm, self.peak_lr * cos)
+
+
+@dataclass(frozen=True)
+class Constant:
+    lr: float = 1e-4
+
+    def __call__(self, step):
+        return jnp.full((), self.lr, jnp.float32)

@@ -1,0 +1,3 @@
+from repro.roofline import analysis, hw
+
+__all__ = ["analysis", "hw"]

@@ -1,0 +1,38 @@
+"""Hardware constants for roofline terms and power models.
+
+TPU v5e numbers are the assignment's constants; GPU entries calibrate the
+paper-reproduction workload (idle power 70 W/GPU is from the paper §V-C).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float  # FLOP/s
+    hbm_bw: float  # bytes/s
+    ici_bw: float  # bytes/s per link (all links combined per chip ~ 2-3x)
+    hbm_bytes: float
+    power_peak: float  # W, busy at full utilization
+    power_idle: float  # W
+
+
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    hbm_bytes=16e9,
+    power_peak=220.0,
+    power_idle=60.0,
+)
+
+# GPU specs for the paper-calibrated systems (F32/TF32 class numbers are not
+# needed — the scheduler only uses power and relative-runtime curves).
+H100 = ChipSpec("h100", 989e12, 3350e9, 450e9, 80e9, 700.0, 70.0)
+A100 = ChipSpec("a100", 312e12, 2039e9, 300e9, 80e9, 400.0, 55.0)
+V100 = ChipSpec("v100", 125e12, 900e9, 150e9, 32e9, 300.0, 40.0)
+
+CHIPS = {c.name: c for c in (TPU_V5E, H100, A100, V100)}

@@ -1,0 +1,3 @@
+from repro.train.step import init_state, make_decode_step, make_prefill, make_train_step
+
+__all__ = ["init_state", "make_decode_step", "make_prefill", "make_train_step"]

@@ -1,0 +1,188 @@
+"""Training loop: checkpoint/restart, failure recovery, straggler watch.
+
+The Trainer owns: the (possibly sub-)mesh, sharded state, the jitted step,
+a CheckpointManager, a FailureInjector hook (tests/chaos), and the
+StragglerMonitor.  On ``DeviceFailure`` it rebuilds a smaller mesh from
+the surviving devices, restores the latest checkpoint with the new
+shardings (elastic restore), re-jits, and continues — the documented
+recovery path for node loss at pod scale (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data import SyntheticLM
+from repro.distributed import sharding as shd
+from repro.distributed.ctx import sharding_rules
+from repro.distributed.fault import DeviceFailure, FailureInjector, StragglerMonitor
+from repro.distributed.meshes import make_mesh
+from repro.models import Model, Runtime
+from repro.optim import AdamW
+from repro.train.step import init_state, make_train_step
+
+log = logging.getLogger("repro.train")
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    zero: bool = True
+    grad_accum: int = 1
+    compress: bool = False
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        model: Model,
+        optimizer: AdamW,
+        schedule: Callable,
+        dataset: SyntheticLM,
+        tcfg: TrainerConfig,
+        *,
+        devices: Optional[List] = None,
+        model_par: int = 1,
+        failure_injector: Optional[FailureInjector] = None,
+    ):
+        self.cfg = cfg
+        self.model = model
+        self.optimizer = optimizer
+        self.schedule = schedule
+        self.dataset = dataset
+        self.tcfg = tcfg
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.model_par = model_par
+        self.failure_injector = failure_injector
+        self.straggler = StragglerMonitor()
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
+        self.metrics_history: List[Dict[str, float]] = []
+        self.recoveries = 0
+        self._build(self.devices)
+
+    # ------------------------------------------------------------------
+    def _build(self, devices: List):
+        """(Re)build mesh, shardings and the jitted step on ``devices``."""
+        n = len(devices)
+        mp = self.model_par if n % self.model_par == 0 else 1
+        self.mesh = make_mesh((n // mp, mp), ("data", "model"), devices=devices)
+        self.active_devices = devices
+
+        state_shape = jax.eval_shape(
+            lambda: init_state(self.model, self.optimizer, jax.random.key(self.tcfg.seed),
+                               compress=self.tcfg.compress)
+        )
+        pspecs = shd.param_specs(self.cfg, self.mesh, state_shape["params"])
+        ospecs = shd.opt_state_specs(self.cfg, self.mesh, state_shape["opt"], zero=self.tcfg.zero)
+        self.state_specs = {"params": pspecs, "opt": ospecs, "step": P()}
+        if self.tcfg.compress:
+            self.state_specs["residuals"] = pspecs
+        self.state_shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), self.state_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        gshards = None
+        if self.tcfg.zero:
+            gshards = jax.tree_util.tree_map(
+                lambda sp, leaf: NamedSharding(
+                    self.mesh, shd.zero_extend(sp, tuple(leaf.shape), self.mesh)
+                ),
+                pspecs, state_shape["params"],
+                is_leaf=lambda x: isinstance(x, P),
+            )
+        step_fn = make_train_step(
+            self.model, self.optimizer, self.schedule,
+            compress=self.tcfg.compress, grad_accum=self.tcfg.grad_accum,
+            grad_shardings=gshards,
+        )
+        self._jit_step = jax.jit(step_fn, donate_argnums=(0,))
+        self._rules = shd.activation_rules(self.cfg, self.mesh, self.dataset.batch)
+
+    def _init_or_restore(self):
+        state_shape = jax.eval_shape(
+            lambda: init_state(self.model, self.optimizer, jax.random.key(self.tcfg.seed),
+                               compress=self.tcfg.compress)
+        )
+        restored, meta = self.ckpt.restore_latest(state_shape, shardings=self.state_shardings)
+        if restored is not None:
+            log.info("restored checkpoint at step %s", meta["step"])
+            return restored, int(meta["step"])
+        with self.mesh:
+            state = jax.jit(
+                lambda: init_state(self.model, self.optimizer, jax.random.key(self.tcfg.seed),
+                                   compress=self.tcfg.compress),
+                out_shardings=self.state_shardings,
+            )()
+        return state, 0
+
+    def _place_batch(self, batch: Dict[str, np.ndarray]):
+        specs = shd.batch_specs(self.cfg, self.mesh, {k: v.shape for k, v in batch.items()})
+        return {
+            k: jax.device_put(v, NamedSharding(self.mesh, specs[k]))
+            for k, v in batch.items()
+        }
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        state, start = self._init_or_restore()
+        step = start
+        while step < self.tcfg.total_steps:
+            try:
+                t0 = time.perf_counter()
+                if self.failure_injector is not None:
+                    self.failure_injector.check(step)
+                batch = self._place_batch(self.dataset.global_batch(step))
+                with self.mesh, sharding_rules(self._rules):
+                    state, metrics = self._jit_step(state, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.straggler.observe(step, dt)
+                self.metrics_history.append({"step": step, "loss": loss, "dt": dt})
+                if step % self.tcfg.log_every == 0:
+                    log.info("step %d loss %.4f (%.2fs)", step, loss, dt)
+                step += 1
+                if step % self.tcfg.ckpt_every == 0:
+                    self.ckpt.save(step, state)
+            except DeviceFailure as e:
+                log.warning("device failure: %s — recovering", e)
+                self.recoveries += 1
+                survivors = [
+                    d for i, d in enumerate(self.active_devices)
+                    if i not in set(e.failed_devices)
+                ]
+                if not survivors:
+                    raise
+                self.ckpt.wait()
+                self._build(survivors)
+                state, step = self._init_or_restore()
+        self.ckpt.save(step, state)
+        self.ckpt.wait()
+        return {
+            "final_step": step,
+            "final_loss": self.metrics_history[-1]["loss"] if self.metrics_history else None,
+            "history": self.metrics_history,
+            "recoveries": self.recoveries,
+            "straggler_events": list(self.straggler.events),
+        }
+
+    # ------------------------------------------------------------------
+    # EcoSched-Elastic hook: rescale this job onto a new device set at a
+    # checkpoint boundary (beyond-paper extension; launch/coschedule.py).
+    # ------------------------------------------------------------------
+    def rescale(self, devices: List):
+        self.ckpt.wait()
+        self._build(devices)

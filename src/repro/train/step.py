@@ -1,0 +1,122 @@
+"""train_step / serve_step builders.
+
+``train_step`` is a pure function (state, batch) → (state, metrics) suitable
+for ``jax.jit`` with donated state; ``decode_step``/``prefill`` wrap the
+model's serving entry points.  State is a plain dict pytree so the
+checkpoint layer and the sharding-spec layer need no special casing.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim import AdamW, compress_grads, init_residuals
+
+
+def init_state(model: Model, optimizer: AdamW, rng, *, compress: bool = False) -> dict:
+    params = model.init(rng)
+    state = {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if compress:
+        state["residuals"] = init_residuals(params)
+    return state
+
+
+def make_train_step(
+    model: Model,
+    optimizer: AdamW,
+    schedule: Callable,
+    *,
+    compress: bool = False,
+    grad_accum: int = 1,
+    grad_shardings=None,
+) -> Callable:
+    """``grad_shardings``: optional NamedSharding tree (ZeRO layout).  When
+    set, every (micro)batch's gradients are constrained to it immediately —
+    XLA lowers the DP reduction to a reduce-scatter and the fp32 grad
+    accumulator lives at 1/dp_size memory (ZeRO-2)."""
+
+    def constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, g, grad_shardings
+        )
+
+    def train_step(state: dict, batch: dict) -> Tuple[dict, Dict[str, jax.Array]]:
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        if grad_accum > 1:
+            # Microbatch over the leading batch dim.  Python-unrolled (not
+            # lax.scan) so XLA cost analysis counts every microbatch —
+            # the dry-run's roofline extrapolation depends on it
+            # (DESIGN.md §4).  Accumulation happens in fp32 at the ZeRO
+            # sharding (tiny per-chip buffer).
+            def micro(i, params):
+                mb = jax.tree_util.tree_map(
+                    lambda x: x.reshape(grad_accum, -1, *x.shape[1:])[i], batch
+                )
+                # barrier: stops XLA from rewriting gather(slice(tokens)) →
+                # slice(gather(tokens)) and CSE-ing a full-batch embedding
+                # lookup across microbatches (verified by HLO inspection)
+                mb = jax.lax.optimization_barrier(mb)
+                (l, mt), g = jax.value_and_grad(
+                    lambda p: model.loss(p, mb), has_aux=True
+                )(params)
+                g = constrain_grads(
+                    jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), g)
+                )
+                return (l, mt), g
+
+            params = state["params"]
+            (loss, metrics), grads = micro(0, params)
+            for i in range(1, grad_accum):
+                # optimization_barrier ties microbatch i's forward to
+                # microbatch i-1's accumulated grads: XLA cannot interleave
+                # the unrolled microbatches, so only one microbatch's
+                # activations are ever live (true sequential accumulation).
+                grads, params = jax.lax.optimization_barrier((grads, params))
+                (l2, m2), g2 = micro(i, params)
+                loss = loss + l2
+                grads = jax.tree_util.tree_map(jnp.add, grads, g2)
+            loss = loss / grad_accum
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            metrics = {k: v / grad_accum for k, v in metrics.items()}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"]
+            )
+            grads = constrain_grads(grads)
+
+        new_state = dict(state)
+        if compress:
+            grads, new_state["residuals"] = compress_grads(grads, state["residuals"])
+        lr = schedule(state["step"])
+        new_params, new_opt, om = optimizer.update(grads, state["opt"], state["params"], lr)
+        new_state.update(params=new_params, opt=new_opt, step=state["step"] + 1)
+        out_metrics = dict(metrics)
+        out_metrics.update(loss=loss, lr=lr, **om)
+        return new_state, out_metrics
+
+    return train_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return serve_step
+
+
+def make_prefill(model: Model) -> Callable:
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill

@@ -1,0 +1,67 @@
+"""Config registry: published sizes, shape-grid applicability, reductions."""
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, grid, list_archs, reduced
+
+PUBLISHED_B = {  # total parameter count in billions (±12% tolerance)
+    "qwen3-32b": 32.8,
+    "granite-8b": 8.1,
+    "phi4-mini-3.8b": 3.8,
+    "gemma3-4b": 4.0,
+    "arctic-480b": 480.0,
+    "qwen2-moe-a2.7b": 14.3,
+    "mamba2-2.7b": 2.7,
+    "phi-3-vision-4.2b": 3.8,  # backbone only; ViT frontend is stubbed
+    "hymba-1.5b": 1.5,
+    "whisper-base": 0.08,
+}
+
+
+def test_ten_archs_present():
+    assert len(list_archs()) == 10
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_counts_match_published(name):
+    n = ARCHS[name].param_count() / 1e9
+    ref = PUBLISHED_B[name]
+    assert abs(n - ref) / ref < 0.13, (name, n, ref)
+
+
+def test_active_params_moe():
+    q = get_config("qwen2-moe-a2.7b")
+    assert q.active_param_count() / 1e9 == pytest.approx(2.7, rel=0.15)
+    a = get_config("arctic-480b")
+    assert a.active_param_count() < 0.05 * a.param_count()
+
+
+def test_grid_40_cells():
+    cells = list(grid())
+    assert len(cells) == 40
+    applicable = [c for c in cells if c[2]]
+    assert len(applicable) == 33
+    skipped = {(c[0].name, c[1].name) for c in cells if not c[2]}
+    # long_500k runs only for sub-quadratic archs
+    for arch, cell in skipped:
+        assert cell == "long_500k"
+    for name in ("mamba2-2.7b", "hymba-1.5b", "gemma3-4b"):
+        assert (name, "long_500k") not in skipped
+
+
+def test_shape_cells():
+    assert SHAPES["train_4k"].tokens_per_step == 4096 * 256
+    assert SHAPES["decode_32k"].tokens_per_step == 128  # one token per seq
+    assert SHAPES["long_500k"].kind == "decode"
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_reduced_preserves_structure(name):
+    cfg = ARCHS[name]
+    r = reduced(cfg)
+    assert r.family == cfg.family
+    assert r.uses_moe == cfg.uses_moe
+    assert r.uses_ssm == cfg.uses_ssm
+    assert r.is_encoder_decoder == cfg.is_encoder_decoder
+    assert r.param_count() < 1e6
+    if cfg.uses_attention:
+        assert r.num_heads % r.num_kv_heads == 0

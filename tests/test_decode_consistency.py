@@ -1,0 +1,49 @@
+"""Serving correctness: prefill(t[:S]) + decode(t[S]) == forward(t[:S+1])[S].
+
+MoE archs are tested with no-drop capacity (capacity dropping makes
+teacher-forced forward differ from decode by design).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import Runtime, build_model
+
+S = 31  # prefill length; decode at position S
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_decode_matches_forward(name):
+    cfg = reduced(ARCHS[name]).replace(dtype="float32")
+    cap = float(cfg.num_experts) if cfg.uses_moe else 1.25  # no-drop for MoE
+    model = build_model(cfg, Runtime(remat="none", capacity_factor=cap))
+    params = model.init(jax.random.key(1))
+    rng = np.random.default_rng(7)
+    B = 2
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)), jnp.int32)
+    full = {"tokens": toks}
+    pre = {"tokens": toks[:, :S]}
+    if cfg.frontend == "patch_stub":
+        pe = jnp.asarray(
+            rng.normal(size=(B, cfg.num_frontend_tokens, cfg.d_model)), jnp.float32
+        )
+        full["patch_embeds"] = pe
+        pre["patch_embeds"] = pe
+    if cfg.is_encoder_decoder:
+        se = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+        full["src_embeds"] = se
+        pre["src_embeds"] = se
+
+    ref = model.forward(params, full)[:, S]
+    _, cache = model.prefill(params, pre)
+    cache = {
+        k: (jnp.pad(v, [(0, 0), (0, 0), (0, 1), (0, 0), (0, 0)]) if k in ("k", "v") else v)
+        for k, v in cache.items()
+    }
+    dl, _ = model.decode_step(params, cache, toks[:, S : S + 1], jnp.int32(S))
+    rel = float(jnp.max(jnp.abs(dl[:, 0] - ref))) / (
+        float(jnp.max(jnp.abs(ref))) + 1e-9
+    )
+    assert rel < 2e-3, (name, rel)

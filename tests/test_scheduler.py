@@ -1,0 +1,197 @@
+"""Scheduler unit tests: score (Eq.1), τ-filter, actions, placement,
+simulator accounting, baselines, oracle bound."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    EcoSched,
+    JobProfile,
+    Marble,
+    Node,
+    OraclePerfModel,
+    OracleSolver,
+    PlacementState,
+    ProfiledPerfModel,
+    SequentialMax,
+    SequentialOptimal,
+    simulate,
+)
+from repro.core.actions import enumerate_actions
+from repro.core.score import idle_term, r_energy, score, tau_filter
+from repro.core.types import JobSpec, ModeEstimate, NodeView
+
+
+def prof(name, times, pows):
+    util = {g: 1.0 / (times[g] * g) for g in times}
+    return JobProfile(name=name, runtime=times, busy_power=pows, dram_util=util)
+
+
+TRUTH = {
+    "a": prof("a", {1: 100, 2: 60, 3: 50, 4: 45}, {1: 100, 2: 180, 3: 250, 4: 310}),
+    "b": prof("b", {1: 200, 2: 110, 3: 80, 4: 70}, {1: 120, 2: 210, 3: 290, 4: 360}),
+    "c": prof("c", {1: 50, 2: 48, 3: 47, 4: 46}, {1: 90, 2: 160, 3: 230, 4: 290}),
+}
+NODE = Node(units=4, domains=2, idle_power_per_unit=10.0)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1)
+# ---------------------------------------------------------------------------
+
+
+def m(g, t, e):
+    return ModeEstimate(g=g, t_norm=t, p_bar=100.0, e_norm=e)
+
+
+def test_score_empty_action_pays_full_idle():
+    s = score((), g_free=4, M=4, lam=0.5)
+    assert s == pytest.approx(0.5)
+
+
+def test_score_matches_eq1():
+    modes = (m(2, 1.1, 1.2), m(1, 1.0, 1.0))
+    # R = ((1.2-1)+(1.0-1))/2 = 0.1 ; I = (4-3)/4 = 0.25
+    assert score(modes, g_free=4, M=4, lam=1.0) == pytest.approx(0.35)
+    assert r_energy(modes) == pytest.approx(0.1)
+    assert idle_term(3, 4, 4) == pytest.approx(0.25)
+
+
+def test_tau_filter_keeps_best_and_cuts_slow():
+    spec = JobSpec("x", (m(1, 2.0, 1.0), m(2, 1.2, 1.1), m(4, 1.0, 1.3)))
+    out = tau_filter(spec, tau=0.3)
+    gs = {mm.g for mm in out.modes}
+    assert gs == {2, 4}  # t_norm 2.0 > 1.3 dropped; best always kept
+
+
+def test_tau_filter_never_empties():
+    spec = JobSpec("x", (m(4, 1.0, 1.0),))
+    assert len(tau_filter(spec, 0.0).modes) == 1
+
+
+# ---------------------------------------------------------------------------
+# Actions
+# ---------------------------------------------------------------------------
+
+
+def view(free=4, running=0, M=4, K=2):
+    return NodeView(
+        t=0.0, total_units=M, domains=K, free_units=free,
+        running=[None] * running,  # only len() is used
+        free_map=[True] * free + [False] * (M - free),
+    )
+
+
+def specs2():
+    return [
+        JobSpec("a", (m(1, 1.0, 1.0), m(2, 0.9, 1.1))),
+        JobSpec("b", (m(2, 1.0, 1.0), m(4, 0.8, 1.2))),
+    ]
+
+
+def test_enumerate_respects_capacity_and_domains():
+    acts = enumerate_actions(specs2(), view(free=2), [True, True, False, False], lam=0.5)
+    for s, a in acts:
+        assert sum(mm.g for _, mm in a) <= 2
+        assert len(a) <= 2
+    # b@4 must not appear
+    assert not any(any(mm.g == 4 for _, mm in a) for _, a in acts)
+
+
+def test_enumerate_includes_empty_and_pairs():
+    acts = enumerate_actions(specs2(), view(free=4), [True] * 4, lam=0.5)
+    sizes = {len(a) for _, a in acts}
+    assert sizes == {0, 1, 2}
+    pair = [a for _, a in acts if len(a) == 2]
+    assert any({sp.name for sp, _ in a} == {"a", "b"} for a in pair)
+
+
+def test_enumerate_contiguity():
+    # free map fragmented: two single free units, not adjacent
+    free_map = [True, False, True, False]
+    acts = enumerate_actions(
+        [JobSpec("a", (m(2, 1.0, 1.0),))],
+        NodeView(t=0, total_units=4, domains=2, free_units=2, running=[], free_map=free_map),
+        free_map, lam=0.5,
+    )
+    assert all(len(a) == 0 for _, a in acts)  # 2 contiguous units unavailable
+
+
+# ---------------------------------------------------------------------------
+# Placement
+# ---------------------------------------------------------------------------
+
+
+def test_placement_first_fit_contiguous():
+    st = PlacementState(4, 2)
+    ids1, d1 = st.allocate(2)
+    assert ids1 == (0, 1) and d1 == 0
+    ids2, d2 = st.allocate(2)
+    assert ids2 == (2, 3) and d2 == 1
+    with pytest.raises(ValueError):
+        st.allocate(1)
+    st.release(ids1)
+    assert st.can_allocate(2) and not st.can_allocate(3)
+
+
+def test_placement_double_free_raises():
+    st = PlacementState(2, 1)
+    ids, _ = st.allocate(1)
+    st.release(ids)
+    with pytest.raises(AssertionError):
+        st.release(ids)
+
+
+# ---------------------------------------------------------------------------
+# Simulator + policies
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "policy_cls", [SequentialMax, SequentialOptimal, Marble]
+)
+def test_policies_complete_and_conserve(policy_cls):
+    r = simulate(policy_cls(TRUTH), NODE, TRUTH, queue=list(TRUTH))
+    assert len(r.records) == len(TRUTH)
+    busy_us = sum((rec.end - rec.start) * rec.g for rec in r.records)
+    idle_us = r.idle_energy / NODE.idle_power_per_unit
+    assert busy_us + idle_us == pytest.approx(NODE.units * r.makespan, rel=1e-9)
+
+
+def test_ecosched_completes_and_beats_seq_max():
+    pm = ProfiledPerfModel(TRUTH, noise=0.0, seed=0)
+    eco = simulate(EcoSched(pm, lam=0.5, tau=0.5), NODE, TRUTH, queue=list(TRUTH))
+    seq = simulate(SequentialMax(TRUTH), NODE, TRUTH, queue=list(TRUTH))
+    assert len(eco.records) == 3
+    assert eco.total_energy <= seq.total_energy * 1.001
+
+
+def test_sequential_optimal_picks_optima():
+    r = simulate(SequentialOptimal(TRUTH), NODE, TRUTH, queue=list(TRUTH))
+    for rec in r.records:
+        assert rec.g == TRUTH[rec.job].optimal_count()
+    # strictly one at a time
+    spans = sorted((rec.start, rec.end) for rec in r.records)
+    for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+        assert s2 >= e1 - 1e-9
+
+
+def test_oracle_lower_bounds_all_policies():
+    solver = OracleSolver(NODE, TRUTH, time_budget_s=10)
+    best, exact = solver.solve(list(TRUTH))
+    assert exact
+    for pol in [SequentialMax(TRUTH), SequentialOptimal(TRUTH), Marble(TRUTH)]:
+        r = simulate(pol, NODE, TRUTH, queue=list(TRUTH))
+        assert best.total_energy <= r.total_energy + 1e-6
+    pm = OraclePerfModel(TRUTH)
+    eco = simulate(EcoSched(pm, lam=0.5, tau=0.5), NODE, TRUTH, queue=list(TRUTH))
+    assert best.total_energy <= eco.total_energy + 1e-6
+
+
+def test_perfmodel_exact_when_noiseless():
+    pm = ProfiledPerfModel(TRUTH, noise=0.0, seed=0)
+    spec = pm.spec("a")
+    t_true = {g: TRUTH["a"].runtime[g] for g in (1, 2, 3, 4)}
+    tmin = min(t_true.values())
+    for mm in spec.modes:
+        assert mm.t_norm == pytest.approx(t_true[mm.g] / tmin, rel=1e-6)
+    assert min(mm.e_norm for mm in spec.modes) == pytest.approx(1.0)

@@ -1,0 +1,51 @@
+"""End-to-end behaviour tests for the paper's system (scaffold contract).
+
+The heavyweight end-to-end paths live in dedicated modules:
+  * paper reproduction bands  — test_calibration.py
+  * training + restart        — test_train_integration.py
+  * multi-device + elastic    — test_multidevice.py
+This module asserts the top-level wiring: public imports, the benchmark
+harness contract, and the dry-run driver's single-cell path (reduced
+size) in a subprocess.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def test_public_imports():
+    import repro.core as core
+    from repro.configs import get_config, grid
+    from repro.models import build_model
+
+    assert hasattr(core, "EcoSched") and hasattr(core, "OracleSolver")
+    assert len(list(grid())) == 40
+
+
+def test_benchmark_modules_import():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    import benchmarks.run  # noqa: F401
+    from benchmarks import common  # noqa: F401
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_subprocess():
+    """The dry-run driver lowers+compiles a full cell on the 512-device
+    production mesh (whisper-base: the cheapest full config)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out_dir = "/tmp/repro_test_dryrun"
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "whisper-base", "--shape", "decode_32k",
+            "--out", out_dir, "--skip-variants",
+        ],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env={**env, "PYTHONPATH": "src"},
+        capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "dry-run complete" in proc.stdout

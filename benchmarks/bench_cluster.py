@@ -1,0 +1,65 @@
+"""Cluster sweep — heterogeneous H100/A100/V100 nodes, online Poisson jobs.
+
+The paper evaluates each system in isolation with a static 17-app window;
+this benchmark joins the three calibrated systems into one cluster and
+sweeps the *arrival rate* of an online job stream (the regime of
+arXiv:2412.17484 / arXiv:2304.06381, where routing + co-scheduling
+decisions dominate).  For each rate it compares
+
+  * ``eco+ecosched``  — energy-aware dispatcher, per-node EcoSched,
+  * ``rr+fifo_max``   — round-robin dispatcher, per-node max-GPU FCFS,
+
+and writes energy/makespan/EDP/mean-wait rows to
+``benchmarks/results/cluster.csv``.  Runs in seconds on CPU.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import RESULTS_DIR, Csv, run_cluster
+from repro.core import calibration as C
+from repro.core import poisson_stream
+
+# jobs/s over the long-running calibrated workload (mean solo runtimes are
+# thousands of seconds): sparse -> overlapping -> saturated
+RATES = (1 / 2000, 1 / 1000, 1 / 400)
+N_JOBS = 24
+SEED = 7
+
+
+def run(csv: Csv, verbose: bool = True, rates=RATES, n_jobs: int = N_JOBS):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = os.path.join(RESULTS_DIR, "cluster.csv")
+    rows = ["rate_jobs_per_s,policy,total_energy_J,makespan_s,edp_Js,mean_wait_s"]
+    for rate in rates:
+        stream = poisson_stream(C.APP_ORDER, rate=rate, n=n_jobs, seed=SEED)
+        t0 = time.perf_counter()
+        res = run_cluster(stream)
+        us = (time.perf_counter() - t0) * 1e6
+        for name in ("fifo_max", "ecosched"):
+            r = res[name]
+            rows.append(
+                f"{rate:.6f},{r.policy},{r.total_energy:.1f},"
+                f"{r.makespan:.1f},{r.edp:.6e},{r.mean_wait:.1f}"
+            )
+        eco, fifo = res["ecosched"], res["fifo_max"]
+        edp_save = 1.0 - eco.edp / fifo.edp
+        if verbose:
+            print(
+                f"cluster rate={rate:.5f}/s ({n_jobs} jobs): "
+                f"eco E={eco.total_energy/1e6:.1f}MJ T={eco.makespan:.0f}s | "
+                f"fifo E={fifo.total_energy/1e6:.1f}MJ T={fifo.makespan:.0f}s | "
+                f"EDP saving {edp_save*100:.1f}%"
+            )
+        csv.add(f"cluster_rate_{rate:.5f}", us, f"edp_save={edp_save*100:.1f}%")
+    with open(out_path, "w") as f:
+        f.write("\n".join(rows) + "\n")
+    if verbose:
+        print(f"cluster CSV -> {out_path}")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.emit()

@@ -8,18 +8,23 @@ import time
 from typing import Dict, List, Optional
 
 from repro.core import (
+    Cluster,
     EcoSched,
+    EnergyAwareDispatcher,
     Marble,
     Node,
+    NodeSpec,
     OraclePerfModel,
     OracleSolver,
     ProfiledPerfModel,
+    RoundRobinDispatcher,
     SequentialMax,
     SequentialOptimal,
     simulate,
     summarize,
 )
 from repro.core import calibration as C
+from repro.roofline.hw import CHIPS
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
@@ -72,6 +77,67 @@ def run_system(
         orr.policy = "oracle" + ("" if exact else "~")
         out["oracle"] = orr
     return out, truth
+
+
+def hetero_specs(systems=("h100", "a100", "v100")) -> List[NodeSpec]:
+    """One 4-GPU/2-domain node per entry — the paper's three evaluation
+    platforms joined into a single heterogeneous cluster.  Repeated systems
+    get distinct node names (``v100-0``, ``v100-1``, ...)."""
+    seen: Dict[str, int] = {}
+    out = []
+    for s in systems:
+        idx = seen.get(s, 0)
+        seen[s] = idx + 1
+        out.append(NodeSpec(name=f"{s}-{idx}", chip=CHIPS[s]))
+    return out
+
+
+def run_cluster(
+    stream,
+    *,
+    specs=None,
+    lam: float = LAM,
+    tau: float = TAU,
+    noise: float = NOISE,
+    seed: int = SEED,
+):
+    """EcoSched cluster vs FIFO-max cluster on one arrival stream.
+
+    ``ecosched``: energy-aware dispatcher + per-node EcoSched (co-scheduling
+    under the NUMA slowdown model, as in the single-node reproduction).
+    ``fifo_max``: round-robin dispatcher + per-node sequential max-GPU FCFS
+    (every job alone on all 4 units) — the paper's worst baseline, online.
+    Returns {name: ClusterResult}.
+    """
+    specs = specs if specs is not None else hetero_specs()
+
+    def truth_for(spec):
+        return C.build_system(spec.chip.name)
+
+    def eco_policy(spec, truth):
+        return EcoSched(
+            ProfiledPerfModel(truth, noise=noise, seed=seed), lam=lam, tau=tau
+        )
+
+    eco = Cluster(
+        specs,
+        truth_for=truth_for,
+        policy_for=eco_policy,
+        dispatcher=EnergyAwareDispatcher(),
+        slowdown_for=lambda spec: C.cross_numa_slowdown,
+        label="eco+ecosched",
+    )
+    fifo = Cluster(
+        specs,
+        truth_for=truth_for,
+        policy_for=lambda spec, truth: SequentialMax(truth),
+        dispatcher=RoundRobinDispatcher(),
+        label="rr+fifo_max",
+    )
+    return {
+        "ecosched": eco.simulate(stream),
+        "fifo_max": fifo.simulate(stream),
+    }
 
 
 def load_dryrun(pattern: str = "*.json") -> List[dict]:

@@ -16,6 +16,7 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (
+        bench_cluster,
         bench_fig1_scaling,
         bench_fig2_tradeoff,
         bench_fig6_end2end,
@@ -41,6 +42,7 @@ def main() -> None:
     bench_roofline.run(csv, verbose=verbose)
     bench_tpu_pod.run(csv, verbose=verbose)
     bench_sensitivity.run(csv, verbose=verbose)
+    bench_cluster.run(csv, verbose=verbose)
 
     print("\nname,us_per_call,derived")
     csv.emit()

@@ -1,0 +1,64 @@
+"""JAX version-compatibility shims.
+
+The code targets the current pallas/sharding APIs, but several of them were
+renamed across JAX 0.4 -> 0.5 and the container pins 0.4.x:
+
+  * ``pltpu.CompilerParams``        is ``TPUCompilerParams`` on 0.4,
+  * ``jax.sharding.AxisType`` and the mesh ``axis_types=`` kwarg do not
+    exist on 0.4 (Auto propagation is the only — and default — behavior),
+  * ``AbstractMesh`` takes ``(sizes, names)`` on 0.5+ but a single
+    ``shape_tuple`` of (name, size) pairs on 0.4.
+
+Everything version-dependent goes through this module so call sites stay
+written against the modern API.
+"""
+from __future__ import annotations
+
+import jax
+import jax.experimental.pallas.tpu as pltpu
+
+# Renamed CompilerParams (0.5+) <- TPUCompilerParams (0.4).
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def shard_map(*args, **kwargs):
+    """``jax.shard_map`` (0.5+) <- ``jax.experimental.shard_map`` (0.4).
+
+    The replication-check kwarg was renamed ``check_rep`` -> ``check_vma``
+    in a different release than the promotion to ``jax.shard_map``, so the
+    translation keys on the resolved function's actual signature.
+    """
+    import inspect
+
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    if "check_vma" in kwargs:
+        params = inspect.signature(fn).parameters
+        if "check_vma" not in params:
+            val = kwargs.pop("check_vma")
+            if "check_rep" in params:
+                kwargs["check_rep"] = val
+    return fn(*args, **kwargs)
+
+
+def auto_axis_types(n_axes: int) -> dict:
+    """``{"axis_types": (Auto,) * n}`` where supported, else ``{}``.
+
+    On JAX 0.4 meshes have no axis_types and behave as all-Auto, so
+    omitting the kwarg is semantically identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def abstract_mesh(axis_sizes, axis_names) -> "jax.sharding.AbstractMesh":
+    """AbstractMesh across the 0.4/0.5 constructor signatures."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))

@@ -5,7 +5,21 @@ Phase II: score (Eq.1) + actions + ecosched (the policy)
 Substrate: placement (NUMA/ICI domains), simulator (event-driven energy
 accounting), baselines, oracle (exact B&B), metrics.
 """
+from repro.core.arrivals import (
+    Arrival,
+    bursty_stream,
+    load_trace,
+    poisson_stream,
+    save_trace,
+)
 from repro.core.baselines import Marble, SequentialMax, SequentialOptimal
+from repro.core.cluster import (
+    Cluster,
+    EnergyAwareDispatcher,
+    LeastLoadedDispatcher,
+    NodeSpec,
+    RoundRobinDispatcher,
+)
 from repro.core.ecosched import EcoSched
 from repro.core.metrics import (
     edp_saving,
@@ -17,8 +31,9 @@ from repro.core.metrics import (
 from repro.core.oracle import OracleSolver
 from repro.core.perfmodel import OraclePerfModel, ProfiledPerfModel, RooflinePerfModel
 from repro.core.placement import PlacementState
-from repro.core.simulator import Node, simulate
+from repro.core.simulator import Node, NodeSim, simulate
 from repro.core.types import (
+    ClusterResult,
     JobProfile,
     JobSpec,
     Launch,
@@ -28,26 +43,38 @@ from repro.core.types import (
 )
 
 __all__ = [
+    "Arrival",
+    "Cluster",
+    "ClusterResult",
     "EcoSched",
+    "EnergyAwareDispatcher",
     "JobProfile",
     "JobSpec",
     "Launch",
+    "LeastLoadedDispatcher",
     "Marble",
     "ModeEstimate",
     "Node",
+    "NodeSim",
+    "NodeSpec",
     "NodeView",
     "OraclePerfModel",
     "OracleSolver",
     "PlacementState",
     "ProfiledPerfModel",
     "RooflinePerfModel",
+    "RoundRobinDispatcher",
     "ScheduleResult",
     "SequentialMax",
     "SequentialOptimal",
+    "bursty_stream",
     "edp_saving",
     "energy_saving",
+    "load_trace",
     "makespan_improvement",
     "perf_loss",
+    "poisson_stream",
+    "save_trace",
     "simulate",
     "summarize",
 ]

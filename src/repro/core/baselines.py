@@ -8,6 +8,10 @@
   first-fit packing under the same domain cap; no energy-aware
   downsizing, no τ-filter.  This reproduces the paper's characterization
   ("assumes performance-oriented GPU counts").
+
+All baselines clamp mode choices to the node's unit count, so they run
+unchanged on heterogeneous cluster nodes (``repro.core.cluster``) whose
+sizes may not cover every profiled mode.
 """
 from __future__ import annotations
 
@@ -27,8 +31,10 @@ class SequentialMax:
         if view.running or not waiting:
             return []
         job = waiting[0]
-        g = max(self.truth[job].feasible_counts)
-        return [Launch(job=job, g=min(g, view.total_units))]
+        fits = [g for g in self.truth[job].feasible_counts if g <= view.total_units]
+        if not fits:
+            raise ValueError(f"{job}: no feasible mode fits {view.total_units} units")
+        return [Launch(job=job, g=max(fits))]
 
 
 class SequentialOptimal:
@@ -42,7 +48,7 @@ class SequentialOptimal:
         if view.running or not waiting:
             return []
         job = waiting[0]
-        return [Launch(job=job, g=self.truth[job].optimal_count())]
+        return [Launch(job=job, g=self.truth[job].optimal_count(view.total_units))]
 
 
 class Marble:
@@ -64,7 +70,7 @@ class Marble:
         for job in waiting:
             if slots - len(out) <= 0:
                 break
-            g = self.truth[job].optimal_count()
+            g = self.truth[job].optimal_count(view.total_units)
             if g <= free and st.can_allocate(g):
                 st.allocate(g)
                 out.append(Launch(job=job, g=g))

@@ -1,0 +1,311 @@
+"""Cluster-scale trace-driven simulation (heterogeneous nodes, online jobs).
+
+Generalizes the single ``Node`` of ``simulator.py`` to a ``Cluster`` of
+heterogeneous nodes, each typed by a ``ChipSpec`` (H100/A100/V100 power and
+relative-runtime scaling — the paper's three evaluation systems as *one*
+datacenter).  A job stream (``repro.core.arrivals``) flows through a
+two-level policy:
+
+  1. a cluster-level **dispatcher** routes each arriving job to a node,
+  2. the node's own per-node policy (EcoSched or any baseline) decides
+     when/at what GPU count to launch it — unchanged from the single-node
+     reproduction.
+
+Per-node accounting reuses ``NodeSim`` verbatim, so a 1-node cluster
+reproduces ``simulate()``'s energy and makespan exactly
+(regression-locked in tests/test_cluster.py).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.arrivals import Arrival
+from repro.core.simulator import _ARRIVAL, _DONE, Node, NodeSim
+from repro.core.types import ClusterResult, JobProfile, NodeView, RunningJob
+from repro.roofline.hw import ChipSpec
+
+
+@dataclass(frozen=True)
+class NodeSpec:
+    """One schedulable node: allocation granularity + hardware type."""
+
+    name: str
+    chip: ChipSpec
+    units: int = 4
+    domains: int = 2
+
+    @property
+    def idle_power_per_unit(self) -> float:
+        return self.chip.power_idle
+
+
+@dataclass
+class NodeStatus:
+    """Dispatcher-visible snapshot of one node at an arrival event."""
+
+    spec: NodeSpec
+    view: NodeView
+    backlog: List[str]  # waiting instance names
+    truth: Dict[str, JobProfile]  # app-keyed ground truth on this hardware
+    outstanding_s: float  # committed busy unit-seconds / units (drain proxy)
+
+    def fits(self, app: str) -> bool:
+        prof = self.truth.get(app)
+        return prof is not None and min(prof.feasible_counts) <= self.spec.units
+
+
+# ---------------------------------------------------------------------------
+# Dispatchers (cluster level — defer launch decisions to the node policy)
+# ---------------------------------------------------------------------------
+
+
+class RoundRobinDispatcher:
+    """FIFO routing: cycle over nodes, skipping infeasible ones."""
+
+    def __init__(self):
+        self._i = 0
+
+    def name(self) -> str:
+        return "rr"
+
+    def reset(self) -> None:
+        self._i = 0
+
+    def route(self, arr: Arrival, statuses: Sequence[NodeStatus]) -> str:
+        n = len(statuses)
+        for k in range(n):
+            st = statuses[(self._i + k) % n]
+            if st.fits(arr.app):
+                self._i = (self._i + k + 1) % n
+                return st.spec.name
+        raise ValueError(f"no node can fit any feasible mode of {arr.app}")
+
+
+class LeastLoadedDispatcher:
+    """Route to the feasible node with the shallowest committed backlog."""
+
+    def name(self) -> str:
+        return "least-loaded"
+
+    def route(self, arr: Arrival, statuses: Sequence[NodeStatus]) -> str:
+        best = None
+        for i, st in enumerate(statuses):
+            if not st.fits(arr.app):
+                continue
+            key = (st.outstanding_s, i)
+            if best is None or key < best[0]:
+                best = (key, st.spec.name)
+        if best is None:
+            raise ValueError(f"no node can fit any feasible mode of {arr.app}")
+        return best[1]
+
+
+class EnergyAwareDispatcher:
+    """Route to the node minimizing congestion-inflated best-mode energy.
+
+    For each feasible node, take the job's minimum-energy mode on that
+    hardware (E*, t*) and score E* · (drain + t*) / t*: on an empty node
+    this is the pure energy-optimal hardware choice; as a node's backlog
+    grows its score inflates by the queueing slowdown, spilling work onto
+    faster (or merely idler) hardware — the EDP tradeoff at cluster level.
+    """
+
+    def name(self) -> str:
+        return "eco"
+
+    def route(self, arr: Arrival, statuses: Sequence[NodeStatus]) -> str:
+        best = None
+        for i, st in enumerate(statuses):
+            if not st.fits(arr.app):
+                continue
+            prof = st.truth[arr.app]
+            counts = [g for g in prof.feasible_counts if g <= st.spec.units]
+            e_best, t_best = min(
+                ((prof.energy(g), prof.runtime[g]) for g in counts)
+            )
+            score = e_best * (st.outstanding_s + t_best) / t_best
+            key = (score, i)
+            if best is None or key < best[0]:
+                best = (key, st.spec.name)
+        if best is None:
+            raise ValueError(f"no node can fit any feasible mode of {arr.app}")
+        return best[1]
+
+
+# ---------------------------------------------------------------------------
+# Cluster event loop — same heap protocol as simulator.simulate() (shared
+# _ARRIVAL/_DONE ordering), with dispatch layered on top of NodeSim
+# ---------------------------------------------------------------------------
+
+
+class Cluster:
+    """Heterogeneous cluster = node specs + per-node truth/policy factories.
+
+    ``truth_for(spec)``  — app-keyed ``JobProfile`` table on that hardware
+                           (runtime/power curves differ per ChipSpec).
+    ``policy_for(spec, truth)`` — per-node policy over the *instance-keyed*
+                           truth table built for one stream.
+    ``slowdown_for(spec)`` — optional residual-interference model per node.
+    """
+
+    def __init__(
+        self,
+        specs: Sequence[NodeSpec],
+        *,
+        truth_for: Callable[[NodeSpec], Dict[str, JobProfile]],
+        policy_for: Callable[[NodeSpec, Dict[str, JobProfile]], object],
+        dispatcher,
+        slowdown_for: Optional[Callable[[NodeSpec], object]] = None,
+        label: str = "",
+    ):
+        if len({s.name for s in specs}) != len(specs):
+            raise ValueError("node names must be unique")
+        self.specs = list(specs)
+        self.truth_for = truth_for
+        self.policy_for = policy_for
+        self.dispatcher = dispatcher
+        self.slowdown_for = slowdown_for
+        self.label = label
+
+    def simulate(
+        self,
+        stream: Sequence[Arrival],
+        *,
+        charge_profiling: bool = False,
+        max_events: int = 1_000_000,
+    ) -> ClusterResult:
+        # stable on t only: same-instant arrivals keep submission order
+        stream = sorted(stream, key=lambda a: a.t)
+        if hasattr(self.dispatcher, "reset"):
+            self.dispatcher.reset()  # stateful dispatchers restart per run
+        if len({a.name for a in stream}) != len(stream):
+            raise ValueError("arrival instance names must be unique")
+
+        app_truth: Dict[str, Dict[str, JobProfile]] = {
+            s.name: self.truth_for(s) for s in self.specs
+        }
+        sims: Dict[str, NodeSim] = {}
+        for s in self.specs:
+            # instance-keyed view of the hardware truth for this stream;
+            # apps this hardware has no profile for are simply absent (the
+            # dispatcher's fits() already refuses to route them here)
+            truth_n = {
+                a.name: app_truth[s.name][a.app]
+                for a in stream
+                if a.app in app_truth[s.name]
+            }
+            sims[s.name] = NodeSim(
+                Node(s.units, s.domains, s.idle_power_per_unit),
+                truth_n,
+                self.policy_for(s, truth_n),
+                slowdown_model=self.slowdown_for(s) if self.slowdown_for else None,
+                name=s.name,
+            )
+
+        def statuses(now: float) -> List[NodeStatus]:
+            out = []
+            for s in self.specs:
+                sim = sims[s.name]
+                # remaining work vs the *global* clock — a node's local sim.t
+                # lags until its next event, which would inflate its load
+                outstanding = sum(
+                    max(r.end - now, 0.0) * r.g for r in sim.running
+                ) + sum(
+                    min(
+                        sim.truth[j].runtime[g] * g
+                        for g in sim.truth[j].runtime
+                        if g <= s.units
+                    )
+                    for j in sim.waiting
+                )
+                out.append(
+                    NodeStatus(
+                        spec=s,
+                        view=sim.node_view(),
+                        backlog=list(sim.waiting),
+                        truth=app_truth[s.name],
+                        outstanding_s=outstanding / s.units,
+                    )
+                )
+            return out
+
+        def route(arr: Arrival, t: float) -> str:
+            nm = self.dispatcher.route(arr, statuses(t))
+            spec = next(s for s in self.specs if s.name == nm)
+            prof = app_truth[nm].get(arr.app)
+            if prof is None or min(prof.feasible_counts) > spec.units:
+                raise ValueError(
+                    f"{self.dispatcher.name()} routed {arr.app} to {nm} "
+                    f"(units={spec.units}) with no feasible mode"
+                )
+            sims[nm].arrive(arr.name, t)
+            return nm
+
+        heap: List[Tuple[float, int, int, object]] = []
+        seq = 0
+        for arr in stream:
+            if arr.t <= 0.0:
+                route(arr, 0.0)
+            else:
+                heapq.heappush(heap, (arr.t, _ARRIVAL, seq, arr))
+                seq += 1
+
+        def push_launched(launched: List[RunningJob], node_name: str) -> None:
+            nonlocal seq
+            for rj in launched:
+                heapq.heappush(heap, (rj.end, _DONE, seq, (node_name, rj)))
+                seq += 1
+
+        for s in self.specs:  # t=0 scheduling event on every node
+            push_launched(sims[s.name].invoke_policy(), s.name)
+
+        events = 0
+        while heap:
+            events += 1
+            if events > max_events:
+                raise RuntimeError("cluster event cap exceeded (policy deadlock?)")
+            et, kind, _, payload = heapq.heappop(heap)
+            if kind == _ARRIVAL:
+                touched: List[str] = []
+                nm = route(payload, et)
+                touched.append(nm)
+                while heap and heap[0][0] == et and heap[0][1] == _ARRIVAL:
+                    _, _, _, arr = heapq.heappop(heap)
+                    nm = route(arr, et)
+                    if nm not in touched:
+                        touched.append(nm)
+                for nm in touched:
+                    push_launched(sims[nm].invoke_policy(), nm)
+            else:
+                nm, rj = payload
+                sims[nm].complete(rj)
+                if sims[nm].waiting:
+                    push_launched(sims[nm].invoke_policy(), nm)
+
+        stuck = {nm: sim.waiting for nm, sim in sims.items() if sim.waiting}
+        if stuck:
+            raise RuntimeError(f"cluster run finished with waiting jobs {stuck}")
+
+        per_node = {
+            s.name: sims[s.name].result(charge_profiling=charge_profiling)
+            for s in self.specs
+        }
+        makespan = max((r.makespan for r in per_node.values()), default=0.0)
+        tail_idle = sum(
+            (makespan - per_node[s.name].makespan)
+            * s.units
+            * s.idle_power_per_unit
+            for s in self.specs
+        )
+        label = self.label or (
+            f"{self.dispatcher.name()}:"
+            f"{per_node[self.specs[0].name].policy if self.specs else ''}"
+        )
+        return ClusterResult(
+            policy=label,
+            per_node=per_node,
+            makespan=makespan,
+            tail_idle_energy=tail_idle,
+        )

@@ -1,15 +1,20 @@
 """Discrete-event node simulator with energy accounting.
 
-Drives any ``Policy`` through a workload: at t=0 and at every job
-completion it hands the policy the current ``NodeView`` + waiting queue and
-launches whatever the policy returns (validating capacity, domain and
-contiguity constraints — a policy bug raises, it never silently
-oversubscribes).
+Drives any ``Policy`` through a workload: at t=0, at every job completion
+and at every job *arrival* it hands the policy the current ``NodeView`` +
+waiting queue and launches whatever the policy returns (validating
+capacity, domain and contiguity constraints — a policy bug raises, it
+never silently oversubscribes).
 
 Energy integration is exact piecewise-constant:
   busy  = Σ_jobs  P_busy(job, g) · runtime(job, g)
   idle  = Σ_segments  (idle units) · P_idle_unit · dt   until makespan.
 Invariant (tested): Σ busy GPU-seconds + Σ idle GPU-seconds = M · makespan.
+
+The per-node state machine lives in ``NodeSim`` so that the single-node
+``simulate()`` entry point and the cluster-scale event loop
+(``repro.core.cluster``) share one accounting implementation — a 1-node
+cluster reproduces ``simulate()`` exactly (regression-locked).
 """
 from __future__ import annotations
 
@@ -35,111 +40,210 @@ class Node:
         self.idle_power_per_unit = idle_power_per_unit
 
 
-def simulate(
-    policy,
-    node: Node,
-    truth: Dict[str, JobProfile],
-    *,
-    queue: Optional[Sequence[str]] = None,
-    charge_profiling: bool = False,
-    slowdown_model=None,
-    max_events: int = 100_000,
-) -> ScheduleResult:
-    """Run ``policy`` over the workload; returns exact energy/makespan.
+class NodeSim:
+    """Single-node simulation state: placement, running set, waiting queue,
+    and exact piecewise-constant energy integration.
 
-    ``slowdown_model(job, g, co_running) -> factor ≥ 1`` optionally models
-    residual interference (NUMA-aware placement keeps it ≈ 1; §V-C's
-    cross-domain GPU case can be modeled by the caller).
+    The owner (``simulate`` or ``Cluster.simulate``) runs the event loop and
+    calls ``advance``/``arrive``/``complete``/``invoke_policy``; this object
+    never sees the heap, so the same accounting serves both.
     """
-    waiting: List[str] = list(queue if queue is not None else sorted(truth))
-    placement = PlacementState(node.units, node.domains)
-    running: List[RunningJob] = []
-    heap: List[Tuple[float, int, RunningJob]] = []
-    records: List[JobRecord] = []
-    t = 0.0
-    busy_energy = 0.0
-    idle_unit_seconds = 0.0
-    seq = 0
-    decision_time = 0.0
-    decision_events = 0
 
-    def node_view() -> NodeView:
+    def __init__(
+        self,
+        node: Node,
+        truth: Dict[str, JobProfile],
+        policy,
+        *,
+        slowdown_model=None,
+        name: str = "",
+    ):
+        self.node = node
+        self.truth = truth
+        self.policy = policy
+        self.slowdown_model = slowdown_model
+        self.name = name
+        self.placement = PlacementState(node.units, node.domains)
+        self.waiting: List[str] = []
+        self.running: List[RunningJob] = []
+        self.records: List[JobRecord] = []
+        self.arrival_of: Dict[str, float] = {}
+        self.t = 0.0
+        self.busy_energy = 0.0
+        self.idle_unit_seconds = 0.0
+        self.decision_time = 0.0
+        self.decision_events = 0
+
+    def node_view(self) -> NodeView:
         return NodeView(
-            t=t,
-            total_units=node.units,
-            domains=node.domains,
-            free_units=placement.free_count(),
-            running=list(running),
-            free_map=list(placement.free),
+            t=self.t,
+            total_units=self.node.units,
+            domains=self.node.domains,
+            free_units=self.placement.free_count(),
+            running=list(self.running),
+            free_map=list(self.placement.free),
         )
 
-    def invoke_policy():
-        nonlocal decision_time, decision_events, busy_energy, seq
+    def advance(self, t: float) -> None:
+        """Integrate idle unit-seconds over [self.t, t) and move the clock."""
+        assert t >= self.t - 1e-12, (self.name, self.t, t)
+        self.idle_unit_seconds += self.placement.free_count() * (t - self.t)
+        self.t = t
+
+    def arrive(self, job: str, t: float) -> None:
+        self.advance(t)
+        self.arrival_of[job] = t
+        self.waiting.append(job)
+
+    def complete(self, rj: RunningJob) -> None:
+        """Advance to the completion instant, then free the job's units."""
+        self.advance(rj.end)
+        self.running.remove(rj)
+        self.placement.release(rj.units)
+
+    def invoke_policy(self) -> List[RunningJob]:
+        """One scheduling event; returns the newly launched jobs (the owner
+        pushes their completion events)."""
         t0 = _time.perf_counter()
-        launches: List[Launch] = policy.on_event(node_view(), list(waiting)) or []
-        decision_time += _time.perf_counter() - t0
-        decision_events += 1
+        launches: List[Launch] = (
+            self.policy.on_event(self.node_view(), list(self.waiting)) or []
+        )
+        self.decision_time += _time.perf_counter() - t0
+        self.decision_events += 1
+        out: List[RunningJob] = []
         for ln in launches:
-            if ln.job not in waiting:
-                raise ValueError(f"{policy.name()} launched unknown/duplicate job {ln.job}")
-            prof = truth[ln.job]
+            if ln.job not in self.waiting:
+                raise ValueError(
+                    f"{self.policy.name()} launched unknown/duplicate job {ln.job}"
+                )
+            prof = self.truth[ln.job]
             if ln.g not in prof.runtime:
                 raise ValueError(f"{ln.job}: infeasible unit count {ln.g}")
-            if len(running) >= node.domains:
-                raise ValueError(f"{policy.name()} exceeded domain cap K={node.domains}")
-            units, domain = placement.allocate(ln.g)  # raises if impossible
+            if len(self.running) >= self.node.domains:
+                raise ValueError(
+                    f"{self.policy.name()} exceeded domain cap K={self.node.domains}"
+                )
+            units, domain = self.placement.allocate(ln.g)  # raises if impossible
             factor = 1.0
-            if slowdown_model is not None:
+            if self.slowdown_model is not None:
                 factor = float(
-                    slowdown_model(ln.job, ln.g, [r.job for r in running])
+                    self.slowdown_model(ln.job, ln.g, [r.job for r in self.running])
                 )
                 assert factor >= 1.0
             dur = prof.runtime[ln.g] * factor
             power = prof.busy_power[ln.g]
             rj = RunningJob(
                 job=ln.job, g=ln.g, units=units, domain=domain,
-                start=t, end=t + dur, power=power,
+                start=self.t, end=self.t + dur, power=power,
             )
-            waiting.remove(ln.job)
-            running.append(rj)
+            self.waiting.remove(ln.job)
+            self.running.append(rj)
+            self.busy_energy += power * dur
+            self.records.append(
+                JobRecord(
+                    job=ln.job, g=ln.g, start=self.t, end=rj.end,
+                    busy_energy=power * dur,
+                    arrival=self.arrival_of.get(ln.job, 0.0),
+                    node=self.name,
+                )
+            )
+            out.append(rj)
+        return out
+
+    def result(self, *, charge_profiling: bool = False) -> ScheduleResult:
+        """Finalize. ``self.t`` is the node's last completion (its makespan)."""
+        prof_energy = 0.0
+        if charge_profiling:
+            prof_energy = sum(
+                self.truth[r.job].profiling_energy for r in self.records
+            )
+        return ScheduleResult(
+            policy=self.policy.name(),
+            makespan=self.t,
+            busy_energy=self.busy_energy,
+            idle_energy=self.idle_unit_seconds * self.node.idle_power_per_unit,
+            profiling_energy=prof_energy,
+            records=self.records,
+            decision_time_s=self.decision_time,
+            decision_events=self.decision_events,
+        )
+
+
+_ARRIVAL = 0  # event kinds; arrivals sort before same-time completions so a
+_DONE = 1  # completion-triggered decision always sees the newcomers
+
+
+def simulate(
+    policy,
+    node: Node,
+    truth: Dict[str, JobProfile],
+    *,
+    queue: Optional[Sequence[str]] = None,
+    arrivals: Optional[Sequence[Tuple[float, str]]] = None,
+    charge_profiling: bool = False,
+    slowdown_model=None,
+    max_events: int = 100_000,
+) -> ScheduleResult:
+    """Run ``policy`` over the workload; returns exact energy/makespan.
+
+    ``arrivals`` — optional online stream of ``(time, job)`` pairs; jobs
+    with time ≤ 0 are waiting at t=0 (identical to passing them in
+    ``queue``).  Without it every ``queue`` job waits at t=0, which is the
+    paper's static single-window setup.
+
+    ``slowdown_model(job, g, co_running) -> factor ≥ 1`` optionally models
+    residual interference (NUMA-aware placement keeps it ≈ 1; §V-C's
+    cross-domain GPU case can be modeled by the caller).
+    """
+    if arrivals is None:
+        stream = [(0.0, j) for j in (queue if queue is not None else sorted(truth))]
+    else:
+        if queue is not None:
+            raise ValueError("pass either queue or arrivals, not both")
+        stream = sorted(arrivals, key=lambda a: a[0])
+    names = [j for _, j in stream]
+    if len(set(names)) != len(names):
+        raise ValueError("job names must be unique across the workload")
+
+    sim = NodeSim(node, truth, policy, slowdown_model=slowdown_model)
+    heap: List[Tuple[float, int, int, object]] = []
+    seq = 0
+    for at, job in stream:
+        if at <= 0.0:
+            sim.arrival_of[job] = 0.0
+            sim.waiting.append(job)
+        else:
+            heapq.heappush(heap, (at, _ARRIVAL, seq, job))
             seq += 1
-            heapq.heappush(heap, (rj.end, seq, rj))
-            busy_energy += power * dur
-            records.append(
-                JobRecord(job=ln.job, g=ln.g, start=t, end=rj.end, busy_energy=power * dur)
-            )
+
+    def push_launched(launched: List[RunningJob]) -> None:
+        nonlocal seq
+        for rj in launched:
+            heapq.heappush(heap, (rj.end, _DONE, seq, rj))
+            seq += 1
+
+    push_launched(sim.invoke_policy())
 
     events = 0
-    invoke_policy()
     while heap:
         events += 1
         if events > max_events:
             raise RuntimeError("simulator event cap exceeded (policy deadlock?)")
-        end_t, _, rj = heapq.heappop(heap)
-        # integrate idle unit-seconds over [t, end_t)
-        idle_unit_seconds += placement.free_count() * (end_t - t)
-        t = end_t
-        running.remove(rj)
-        placement.release(rj.units)
-        if waiting:
-            invoke_policy()
-        elif not running and waiting:
-            raise RuntimeError("deadlock: queue non-empty, nothing running")
+        et, kind, _, payload = heapq.heappop(heap)
+        if kind == _ARRIVAL:
+            # batch all arrivals at this instant into one scheduling event
+            sim.arrive(payload, et)
+            while heap and heap[0][0] == et and heap[0][1] == _ARRIVAL:
+                _, _, _, job = heapq.heappop(heap)
+                sim.arrive(job, et)
+            push_launched(sim.invoke_policy())
+        else:
+            sim.complete(payload)
+            if sim.waiting:
+                push_launched(sim.invoke_policy())
 
-    if waiting:
-        raise RuntimeError(f"policy {policy.name()} finished with waiting jobs {waiting}")
-
-    prof_energy = 0.0
-    if charge_profiling:
-        prof_energy = sum(truth[r.job].profiling_energy for r in records)
-
-    return ScheduleResult(
-        policy=policy.name(),
-        makespan=t,
-        busy_energy=busy_energy,
-        idle_energy=idle_unit_seconds * node.idle_power_per_unit,
-        profiling_energy=prof_energy,
-        records=records,
-        decision_time_s=decision_time,
-        decision_events=decision_events,
-    )
+    if sim.waiting:
+        raise RuntimeError(
+            f"policy {policy.name()} finished with waiting jobs {sim.waiting}"
+        )
+    return sim.result(charge_profiling=charge_profiling)

@@ -29,8 +29,13 @@ class JobProfile:
     def feasible_counts(self) -> Tuple[int, ...]:
         return tuple(sorted(self.runtime))
 
-    def optimal_count(self) -> int:
-        return min(self.runtime, key=lambda g: (self.runtime[g], g))
+    def optimal_count(self, limit: Optional[int] = None) -> int:
+        """Performance-optimal count, optionally capped at ``limit`` units
+        (heterogeneous cluster nodes may be smaller than every mode)."""
+        counts = [g for g in self.runtime if limit is None or g <= limit]
+        if not counts:
+            raise ValueError(f"{self.name}: no feasible mode fits {limit} units")
+        return min(counts, key=lambda g: (self.runtime[g], g))
 
     def energy(self, g: int) -> float:
         return self.runtime[g] * self.busy_power[g]
@@ -102,6 +107,12 @@ class JobRecord:
     start: float
     end: float
     busy_energy: float
+    arrival: float = 0.0  # when the job entered the system (0 = static queue)
+    node: str = ""  # cluster node id; "" for single-node simulate()
+
+    @property
+    def wait(self) -> float:
+        return self.start - self.arrival
 
 
 @dataclass
@@ -122,3 +133,53 @@ class ScheduleResult:
     @property
     def edp(self) -> float:
         return self.total_energy * self.makespan
+
+
+@dataclass
+class ClusterResult:
+    """Rollup of per-node ``ScheduleResult``s for one cluster run.
+
+    Each node integrates its own idle energy up to its *local* makespan
+    (last completion on that node); ``tail_idle_energy`` is the extra idle
+    drawn by nodes that drain early, up to the cluster makespan — so
+    Σ busy + Σ idle + tail covers exactly Σ_n M_n · makespan unit-seconds.
+    """
+
+    policy: str
+    per_node: Dict[str, ScheduleResult]
+    makespan: float
+    tail_idle_energy: float = 0.0
+
+    @property
+    def busy_energy(self) -> float:
+        return sum(r.busy_energy for r in self.per_node.values())
+
+    @property
+    def idle_energy(self) -> float:
+        return (
+            sum(r.idle_energy for r in self.per_node.values())
+            + self.tail_idle_energy
+        )
+
+    @property
+    def profiling_energy(self) -> float:
+        return sum(r.profiling_energy for r in self.per_node.values())
+
+    @property
+    def total_energy(self) -> float:
+        return self.busy_energy + self.idle_energy + self.profiling_energy
+
+    @property
+    def edp(self) -> float:
+        return self.total_energy * self.makespan
+
+    @property
+    def records(self) -> List[JobRecord]:
+        out = [rec for r in self.per_node.values() for rec in r.records]
+        out.sort(key=lambda rec: (rec.start, rec.job))
+        return out
+
+    @property
+    def mean_wait(self) -> float:
+        recs = self.records
+        return sum(r.wait for r in recs) / len(recs) if recs else 0.0

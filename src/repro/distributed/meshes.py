@@ -17,16 +17,17 @@ import numpy as np
 import jax
 from jax.sharding import Mesh
 
+from repro import compat
+
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str], devices=None) -> Mesh:
     """jax.make_mesh wrapper pinning Auto axis types (pjit-style propagation)."""
     if devices is None:
         return jax.make_mesh(
-            tuple(shape), tuple(axes),
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+            tuple(shape), tuple(axes), **compat.auto_axis_types(len(axes))
         )
     arr = np.asarray(devices).reshape(tuple(shape))
-    return Mesh(arr, tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return Mesh(arr, tuple(axes), **compat.auto_axis_types(len(axes)))
 
 
 def carve_submesh(

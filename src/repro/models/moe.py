@@ -165,8 +165,9 @@ def moe_apply_ep(
     p: dict, x: jax.Array, cfg, mesh, *, capacity_factor: float = 1.25
 ) -> jax.Array:
     """Expert-parallel MoE over ``mesh`` (model axis = EP)."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.num_experts_per_tok

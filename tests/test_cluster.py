@@ -1,0 +1,261 @@
+"""Cluster subsystem: single-node regression lock, conservation invariants,
+arrival generators, dispatcher feasibility, trace replay."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Arrival,
+    Cluster,
+    EcoSched,
+    EnergyAwareDispatcher,
+    JobProfile,
+    LeastLoadedDispatcher,
+    Node,
+    NodeSpec,
+    ProfiledPerfModel,
+    RoundRobinDispatcher,
+    SequentialMax,
+    bursty_stream,
+    poisson_stream,
+    simulate,
+)
+from repro.core import calibration as C
+from repro.core.arrivals import dumps_trace, load_trace, loads_trace, save_trace
+from repro.roofline.hw import A100, H100, V100
+
+
+def eco_policy(spec, truth):
+    return ProfiledEco(truth)
+
+
+def ProfiledEco(truth):
+    return EcoSched(ProfiledPerfModel(truth, noise=0.02, seed=1), lam=0.35, tau=0.45)
+
+
+def h100_cluster(n=1):
+    return Cluster(
+        [NodeSpec(f"h100-{i}", H100) for i in range(n)],
+        truth_for=lambda s: C.build_system("h100"),
+        policy_for=eco_policy,
+        dispatcher=RoundRobinDispatcher(),
+        slowdown_for=lambda s: C.cross_numa_slowdown,
+    )
+
+
+def static_stream(apps=C.APP_ORDER):
+    return [Arrival(t=0.0, name=a, app=a) for a in apps]
+
+
+# ---------------------------------------------------------------------------
+# Regression lock: 1-node cluster == single-node simulate(), exactly
+# ---------------------------------------------------------------------------
+
+
+def test_one_node_cluster_reproduces_simulate_exactly():
+    truth = C.build_system("h100")
+    node = Node(units=4, domains=2, idle_power_per_unit=C.idle_power("h100"))
+    single = simulate(
+        ProfiledEco(truth), node, truth,
+        queue=list(C.APP_ORDER), slowdown_model=C.cross_numa_slowdown,
+    )
+    res = h100_cluster().simulate(static_stream())
+    assert res.makespan == single.makespan  # bit-exact, not approx
+    assert res.total_energy == single.total_energy
+    nr = res.per_node["h100-0"]
+    assert [(r.job, r.g, r.start) for r in nr.records] == [
+        (r.job, r.g, r.start) for r in single.records
+    ]
+    assert res.tail_idle_energy == 0.0
+
+
+def test_simulate_arrivals_at_zero_match_static_queue():
+    truth = C.build_system("v100")
+    node = Node(units=4, domains=2, idle_power_per_unit=C.idle_power("v100"))
+    r_queue = simulate(ProfiledEco(truth), node, truth, queue=list(C.APP_ORDER))
+    r_arr = simulate(
+        ProfiledEco(truth), node, truth,
+        arrivals=[(0.0, a) for a in C.APP_ORDER],
+    )
+    assert r_arr.makespan == r_queue.makespan
+    assert r_arr.total_energy == r_queue.total_energy
+
+
+# ---------------------------------------------------------------------------
+# Conservation invariants
+# ---------------------------------------------------------------------------
+
+
+def hetero_cluster(dispatcher):
+    return Cluster(
+        [NodeSpec("h100-0", H100), NodeSpec("a100-0", A100), NodeSpec("v100-0", V100)],
+        truth_for=lambda s: C.build_system(s.chip.name),
+        policy_for=eco_policy,
+        dispatcher=dispatcher,
+        slowdown_for=lambda s: C.cross_numa_slowdown,
+    )
+
+
+@pytest.mark.parametrize(
+    "dispatcher", [RoundRobinDispatcher(), LeastLoadedDispatcher(), EnergyAwareDispatcher()],
+    ids=["rr", "least-loaded", "eco"],
+)
+def test_per_node_gpu_second_conservation(dispatcher):
+    stream = poisson_stream(C.APP_ORDER, rate=1 / 800, n=18, seed=3)
+    res = hetero_cluster(dispatcher).simulate(stream)
+    assert sorted(r.job for r in res.records) == sorted(a.name for a in stream)
+    idle_w = {"h100-0": H100, "a100-0": A100, "v100-0": V100}
+    for name, nr in res.per_node.items():
+        busy_us = sum((rec.end - rec.start) * rec.g for rec in nr.records)
+        idle_us = nr.idle_energy / idle_w[name].power_idle
+        # per node: busy + idle GPU-seconds == M * node makespan
+        assert busy_us + idle_us == pytest.approx(4 * nr.makespan, rel=1e-9)
+        assert nr.makespan <= res.makespan
+    # cluster-wide: adding the tail idle covers M_total * cluster makespan
+    total_us = sum(
+        sum((rec.end - rec.start) * rec.g for rec in nr.records)
+        + nr.idle_energy / idle_w[name].power_idle
+        + (res.makespan - nr.makespan) * 4
+        for name, nr in res.per_node.items()
+    )
+    assert total_us == pytest.approx(12 * res.makespan, rel=1e-9)
+
+
+def test_jobs_never_start_before_arrival():
+    stream = bursty_stream(C.APP_ORDER, rate=1 / 500, n=20, burst=3, seed=5)
+    res = hetero_cluster(EnergyAwareDispatcher()).simulate(stream)
+    arr_of = {a.name: a.t for a in stream}
+    for rec in res.records:
+        assert rec.arrival == pytest.approx(arr_of[rec.job])
+        assert rec.start >= rec.arrival - 1e-9
+        assert rec.wait >= -1e-9
+
+
+# ---------------------------------------------------------------------------
+# Arrival generators + trace replay
+# ---------------------------------------------------------------------------
+
+
+def test_generators_byte_stable_under_seed():
+    a = poisson_stream(C.APP_ORDER, rate=1 / 300, n=40, seed=9)
+    b = poisson_stream(C.APP_ORDER, rate=1 / 300, n=40, seed=9)
+    assert dumps_trace(a).encode() == dumps_trace(b).encode()
+    c = bursty_stream(C.APP_ORDER, rate=1 / 300, n=40, burst=5, seed=9)
+    d = bursty_stream(C.APP_ORDER, rate=1 / 300, n=40, burst=5, seed=9)
+    assert dumps_trace(c).encode() == dumps_trace(d).encode()
+    assert dumps_trace(a) != dumps_trace(
+        poisson_stream(C.APP_ORDER, rate=1 / 300, n=40, seed=10)
+    )
+
+
+def test_stream_shapes():
+    s = poisson_stream(C.APP_ORDER, rate=1 / 100, n=30, seed=0)
+    assert len(s) == 30
+    assert all(s[i].t <= s[i + 1].t for i in range(len(s) - 1))
+    assert len({a.name for a in s}) == 30  # unique instance names
+    assert all(a.app in C.APP_ORDER for a in s)
+    b = bursty_stream(C.APP_ORDER, rate=1 / 100, n=30, burst=4, seed=0)
+    assert len(b) == 30
+    assert len({a.name for a in b}) == 30
+
+
+def test_trace_roundtrip(tmp_path):
+    s = bursty_stream(C.APP_ORDER, rate=1 / 250, n=25, burst=3, seed=2)
+    p = tmp_path / "trace.csv"
+    save_trace(str(p), s)
+    assert load_trace(str(p)) == s
+    assert loads_trace(dumps_trace(s)) == s
+
+
+def test_trace_replay_gives_identical_schedule():
+    s = poisson_stream(C.APP_ORDER, rate=1 / 600, n=12, seed=4)
+    replay = loads_trace(dumps_trace(s))
+    r1 = hetero_cluster(EnergyAwareDispatcher()).simulate(s)
+    r2 = hetero_cluster(EnergyAwareDispatcher()).simulate(replay)
+    assert r1.makespan == r2.makespan
+    assert r1.total_energy == r2.total_energy
+    assert [(a.job, a.node, a.start) for a in r1.records] == [
+        (a.job, a.node, a.start) for a in r2.records
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher feasibility
+# ---------------------------------------------------------------------------
+
+
+def tiny_truth():
+    """One app that only has 2- and 4-GPU modes."""
+    return {
+        "big": JobProfile(
+            name="big",
+            runtime={2: 100.0, 4: 60.0},
+            busy_power={2: 200.0, 4: 380.0},
+        )
+    }
+
+
+@pytest.mark.parametrize(
+    "dispatcher", [RoundRobinDispatcher(), LeastLoadedDispatcher(), EnergyAwareDispatcher()],
+    ids=["rr", "least-loaded", "eco"],
+)
+def test_dispatcher_skips_undersized_nodes(dispatcher):
+    # node 0 has 1 unit: cannot fit any feasible mode of "big"
+    specs = [
+        NodeSpec("tiny", H100, units=1, domains=1),
+        NodeSpec("full", H100, units=4, domains=2),
+    ]
+    cl = Cluster(
+        specs,
+        truth_for=lambda s: tiny_truth(),
+        policy_for=lambda s, t: SequentialMax(t),
+        dispatcher=dispatcher,
+    )
+    stream = [Arrival(t=float(i) * 10.0, name=f"big#{i}", app="big") for i in range(4)]
+    res = cl.simulate(stream)
+    assert len(res.per_node["tiny"].records) == 0
+    assert len(res.per_node["full"].records) == 4
+
+
+def test_dispatcher_skips_nodes_without_app_profile():
+    # node "gpuless" has no profile at all for "big": must never receive it
+    specs = [NodeSpec("gpuless", V100), NodeSpec("full", H100)]
+    cl = Cluster(
+        specs,
+        truth_for=lambda s: {} if s.name == "gpuless" else tiny_truth(),
+        policy_for=lambda s, t: SequentialMax(t),
+        dispatcher=RoundRobinDispatcher(),
+    )
+    res = cl.simulate([Arrival(0.0, "big#0", "big"), Arrival(5.0, "big#1", "big")])
+    assert len(res.per_node["gpuless"].records) == 0
+    assert len(res.per_node["full"].records) == 2
+
+
+def test_no_feasible_node_raises():
+    cl = Cluster(
+        [NodeSpec("tiny", H100, units=1, domains=1)],
+        truth_for=lambda s: tiny_truth(),
+        policy_for=lambda s, t: SequentialMax(t),
+        dispatcher=RoundRobinDispatcher(),
+    )
+    with pytest.raises(ValueError, match="no node"):
+        cl.simulate([Arrival(t=0.0, name="big#0", app="big")])
+
+
+def test_duplicate_instance_names_rejected():
+    cl = h100_cluster()
+    with pytest.raises(ValueError, match="unique"):
+        cl.simulate([Arrival(0.0, "x", "gpt2"), Arrival(1.0, "x", "bert")])
+
+
+# ---------------------------------------------------------------------------
+# Online-vs-baseline sanity on the benchmark configuration
+# ---------------------------------------------------------------------------
+
+
+def test_ecosched_cluster_beats_fifo_max_on_edp():
+    import benchmarks.common as BC
+
+    stream = poisson_stream(C.APP_ORDER, rate=1 / 1000, n=16, seed=7)
+    res = BC.run_cluster(stream)
+    assert res["ecosched"].edp < res["fifo_max"].edp
+    assert res["ecosched"].total_energy < res["fifo_max"].total_energy * 1.001

@@ -1,0 +1,163 @@
+"""Decision-overhead sweep — vectorized engine vs pure-Python reference.
+
+The paper's §V-C argues the online decision must stay lightweight
+(< 0.5 ms/event in their C implementation).  Our reference enumeration
+(`core.actions`) is pure Python and dominates decision time at pod scale;
+the vectorized engine (`core.engine`) batches Eq. (1) scoring and
+placement feasibility.  This benchmark sweeps node size M, domains K and
+scheduling-window size over seeded synthetic windows and reports the
+per-event decision latency of both backends plus the speedup
+(ISSUE 2 target: ≥10× at M=16, K=4, window=17).
+
+Every measured case also argmin-parity-checks the two backends — a perf
+number from a diverged scorer would be meaningless.
+
+    PYTHONPATH=src python -m benchmarks.bench_decision_overhead [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import Csv
+from repro.core.actions import enumerate_actions
+from repro.core.engine import enumerate_scored
+from repro.core.perfmodel import _mk_spec
+from repro.core.types import NodeView
+
+FULL_SWEEP = [
+    (M, K, W)
+    for M in (4, 8, 16)
+    for K in (2, 4)
+    for W in (4, 8, 17)
+    if K <= M
+]
+SMOKE_SWEEP = [(4, 2, 4), (8, 2, 8), (16, 4, 8)]
+TARGET = (16, 4, 17)  # the pod-scale acceptance case (full sweep, >=10x)
+SMOKE_TARGET = (16, 4, 8)  # largest smoke case; relaxed gate for CI jitter
+SMOKE_MIN_SPEEDUP = 3.0  # measured ~16x; trips on real regressions only
+SEED = 7
+LAM = 0.35
+
+
+def synth_window(window: int, M: int, seed: int):
+    """Seeded synthetic scheduling window: sublinear speedup curves and
+    power-law busy power, the same shape the calibrated workload has."""
+    rng = np.random.default_rng(seed)
+    counts = [g for g in (1, 2, 3, 4, 6, 8, 12, 16) if g <= M]
+    specs = []
+    for i in range(window):
+        t_hat = {g: 100.0 / g ** float(rng.uniform(0.35, 0.95)) for g in counts}
+        p_hat = {g: 300.0 * g ** float(rng.uniform(0.6, 0.9)) for g in counts}
+        specs.append(_mk_spec(f"job{i}", t_hat, p_hat))
+    return specs
+
+
+def empty_view(M: int, K: int) -> NodeView:
+    # an idle node maximizes the feasible action space — the worst case
+    return NodeView(
+        t=0.0, total_units=M, domains=K, free_units=M,
+        running=[], free_map=[True] * M, domain_jobs=[0] * K,
+    )
+
+
+def _best_python(scored):
+    scored = sorted(scored, key=lambda kv: (kv[0], -sum(m.g for _, m in kv[1])))
+    return scored[0]
+
+
+def _time(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_case(
+    M: int, K: int, W: int, *, repeats: int, beam: int = 64
+) -> Dict[str, float]:
+    specs = synth_window(W, M, seed=SEED)
+    view = empty_view(M, K)
+    free = list(view.free_map)
+
+    def run_python():
+        return _best_python(
+            enumerate_actions(specs, view, list(free), lam=LAM, beam=beam)
+        )
+
+    def run_vector():
+        batch = enumerate_scored(specs, view, list(free), lam=LAM, beam=beam)
+        i = batch.best_index()
+        return batch.scores[i], batch.action(i)
+
+    # parity gate: a fast-but-wrong argmin is not a result
+    s_py, a_py = run_python()
+    s_vec, a_vec = run_vector()
+    assert abs(s_py - float(s_vec)) <= 1e-9, (M, K, W, s_py, s_vec)
+    assert [(sp.name, m.g) for sp, m in a_py] == [
+        (sp.name, m.g) for sp, m in a_vec
+    ], (M, K, W)
+
+    t_py = _time(run_python, repeats)
+    t_vec = _time(run_vector, repeats)
+    n_actions = len(enumerate_scored(specs, view, list(free), lam=LAM, beam=beam))
+    return {
+        "python_ms": t_py * 1e3,
+        "vector_ms": t_vec * 1e3,
+        "speedup": t_py / t_vec if t_vec > 0 else float("inf"),
+        "actions": n_actions,
+    }
+
+
+def run(csv: Csv, verbose: bool = True, smoke: bool = False) -> Dict[Tuple, Dict]:
+    sweep = SMOKE_SWEEP if smoke else FULL_SWEEP
+    repeats = 3 if smoke else 7
+    results: Dict[Tuple, Dict] = {}
+    for M, K, W in sweep:
+        r = measure_case(M, K, W, repeats=repeats)
+        results[(M, K, W)] = r
+        if verbose:
+            print(
+                f"decision M={M:2d} K={K} window={W:2d}: "
+                f"python {r['python_ms']:8.2f} ms  vector {r['vector_ms']:7.2f} ms  "
+                f"speedup {r['speedup']:6.1f}x  ({r['actions']} scored actions)"
+            )
+        csv.add(
+            f"decision_M{M}_K{K}_W{W}",
+            r["vector_ms"] * 1e3,
+            f"python_ms={r['python_ms']:.3f};speedup={r['speedup']:.1f}x",
+        )
+    if TARGET in results and verbose:
+        sp = results[TARGET]["speedup"]
+        M, K, W = TARGET
+        verdict = "MET" if sp >= 10 else "MISSED"
+        print(f"target M={M} K={K} window={W}: {sp:.1f}x (>=10x {verdict})")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny sweep + parity gate only (CI perf tripwire)",
+    )
+    args = ap.parse_args()
+    c = Csv()
+    res = run(c, smoke=args.smoke)
+    c.emit()
+    if args.smoke:
+        sp = res[SMOKE_TARGET]["speedup"]
+        if sp < SMOKE_MIN_SPEEDUP:
+            raise SystemExit(
+                f"smoke perf tripwire: {sp:.1f}x < {SMOKE_MIN_SPEEDUP:.0f}x "
+                f"at M={SMOKE_TARGET[0]} K={SMOKE_TARGET[1]} W={SMOKE_TARGET[2]}"
+            )
+    else:
+        sp = res[TARGET]["speedup"]
+        if sp < 10:
+            raise SystemExit(f"pod-scale speedup target missed: {sp:.1f}x < 10x")

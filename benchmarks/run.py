@@ -17,6 +17,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_cluster,
+        bench_decision_overhead,
         bench_fig1_scaling,
         bench_fig2_tradeoff,
         bench_fig6_end2end,
@@ -39,6 +40,7 @@ def main() -> None:
     bench_table2_choices.run(csv, verbose=verbose)
     bench_fig9_perf_loss.run(csv, verbose=verbose)
     bench_overhead.run(csv, verbose=verbose)
+    bench_decision_overhead.run(csv, verbose=verbose, smoke=args.quick)
     bench_roofline.run(csv, verbose=verbose)
     bench_tpu_pod.run(csv, verbose=verbose)
     bench_sensitivity.run(csv, verbose=verbose)

@@ -1,7 +1,8 @@
 """EcoSched core: the paper's contribution as a composable library.
 
 Phase I:  perfmodel   (ProfiledPerfModel / RooflinePerfModel / Oracle)
-Phase II: score (Eq.1) + actions + ecosched (the policy)
+Phase II: score (Eq.1) + actions (pure-Python reference) + engine
+          (vectorized batch scorer, parity-locked) + ecosched (the policy)
 Substrate: placement (NUMA/ICI domains), simulator (event-driven energy
 accounting), baselines, oracle (exact B&B), metrics.
 """
@@ -21,6 +22,7 @@ from repro.core.cluster import (
     RoundRobinDispatcher,
 )
 from repro.core.ecosched import EcoSched
+from repro.core.engine import PlacementOracle, ScoredBatch, enumerate_scored
 from repro.core.metrics import (
     edp_saving,
     energy_saving,
@@ -60,8 +62,10 @@ __all__ = [
     "NodeView",
     "OraclePerfModel",
     "OracleSolver",
+    "PlacementOracle",
     "PlacementState",
     "ProfiledPerfModel",
+    "ScoredBatch",
     "RooflinePerfModel",
     "RoundRobinDispatcher",
     "ScheduleResult",
@@ -70,6 +74,7 @@ __all__ = [
     "bursty_stream",
     "edp_saving",
     "energy_saving",
+    "enumerate_scored",
     "load_trace",
     "makespan_improvement",
     "perf_loss",

@@ -18,6 +18,8 @@ tests/test_cluster.py).
 """
 from __future__ import annotations
 
+import csv
+import io
 from dataclasses import dataclass
 from typing import List, Sequence
 
@@ -98,17 +100,33 @@ def dumps_trace(stream: Sequence[Arrival]) -> str:
 
     Times use ``repr`` (shortest exact float form) so the round-trip is
     lossless for *any* stream, not just the 6-decimal generator output.
+    Names and apps go through ``csv`` quoting, so adversarial values
+    (commas, quotes, even newlines) survive the round-trip instead of
+    corrupting neighbouring fields; plain names serialize byte-identically
+    to the unquoted legacy format.
     """
-    lines = ["t,name,app"]
+    buf = io.StringIO()
+    w = csv.writer(buf, lineterminator="\n")
+    w.writerow(["t", "name", "app"])
     for a in stream:
-        lines.append(f"{a.t!r},{a.name},{a.app}")
-    return "\n".join(lines) + "\n"
+        if not a.name or not a.app:
+            raise ValueError(f"arrival at t={a.t} has an empty name/app")
+        w.writerow([repr(a.t), a.name, a.app])
+    return buf.getvalue()
 
 
 def loads_trace(text: str) -> List[Arrival]:
+    rows = csv.reader(io.StringIO(text))
+    header = next(rows, None)
+    if header is not None and header[:1] != ["t"]:
+        raise ValueError(f"not a trace file (header {header!r})")
     out: List[Arrival] = []
-    for line in text.strip().splitlines()[1:]:
-        t, name, app = line.split(",")
+    for row in rows:
+        if not row:
+            continue
+        if len(row) != 3:
+            raise ValueError(f"malformed trace row {row!r}")
+        t, name, app = row
         out.append(Arrival(t=float(t), name=name, app=app))
     return out
 

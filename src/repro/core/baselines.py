@@ -62,11 +62,15 @@ class Marble:
         out: List[Launch] = []
         free = view.free_units
         slots = view.free_domains
-        # FCFS first-fit at performance-optimal counts
+        # FCFS first-fit at performance-optimal counts; replay on the real
+        # domain state so launches land exactly where the simulator's
+        # domain-spreading allocator will place them
         from repro.core.placement import PlacementState
 
-        st = PlacementState(view.total_units, 1)
+        st = PlacementState(view.total_units, view.domains)
         st.free = list(view.free_map)
+        if view.domain_jobs:
+            st.domain_jobs = list(view.domain_jobs)
         for job in waiting:
             if slots - len(out) <= 0:
                 break

@@ -186,6 +186,19 @@ class Cluster:
         app_truth: Dict[str, Dict[str, JobProfile]] = {
             s.name: self.truth_for(s) for s in self.specs
         }
+        app_of = {a.name: a.app for a in stream}
+        # per-node per-app minimum busy unit-seconds (drain proxy for the
+        # dispatcher's outstanding-work estimate) — hoisted out of the
+        # per-arrival statuses() hot path, which previously recomputed the
+        # min over every waiting job's whole runtime table on every event
+        min_unit_s: Dict[str, Dict[str, float]] = {}
+        for s in self.specs:
+            table: Dict[str, float] = {}
+            for app, prof in app_truth[s.name].items():
+                fits = [prof.runtime[g] * g for g in prof.runtime if g <= s.units]
+                if fits:  # apps that don't fit are never routed here
+                    table[app] = min(fits)
+            min_unit_s[s.name] = table
         sims: Dict[str, NodeSim] = {}
         for s in self.specs:
             # instance-keyed view of the hardware truth for this stream;
@@ -210,16 +223,10 @@ class Cluster:
                 sim = sims[s.name]
                 # remaining work vs the *global* clock — a node's local sim.t
                 # lags until its next event, which would inflate its load
+                mins = min_unit_s[s.name]
                 outstanding = sum(
                     max(r.end - now, 0.0) * r.g for r in sim.running
-                ) + sum(
-                    min(
-                        sim.truth[j].runtime[g] * g
-                        for g in sim.truth[j].runtime
-                        if g <= s.units
-                    )
-                    for j in sim.waiting
-                )
+                ) + sum(mins[app_of[j]] for j in sim.waiting)
                 out.append(
                     NodeStatus(
                         spec=s,

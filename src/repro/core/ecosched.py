@@ -10,6 +10,18 @@ tradeoff: launching an energy-regretful mode must beat idling.  A
 deadlock guard forces the best non-empty action when the node is
 completely idle.
 
+Scoring backends (``engine=``):
+  * ``"vector"`` (default) — the batched numpy engine
+    (``repro.core.engine``): one vector expression scores the whole
+    candidate space, bitmask replay checks placement; the decision stays
+    lightweight at pod scale (M=16, K=4, 17-job windows).
+  * ``"python"`` — the pure-Python reference (``repro.core.actions``),
+    parity-locked against the engine in tests/test_engine.py.
+
+Launches are returned largest-count first — the same order the
+feasibility replay allocated them — so the simulator's placement is
+guaranteed to succeed and land on the checked units.
+
 Beyond-paper options (all default-off; §Perf ablations):
   * ``lookahead``  — penalize actions whose predicted completion times
     diverge (tail fragmentation), a lightweight fix for the greedy
@@ -22,6 +34,7 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.actions import enumerate_actions
+from repro.core.engine import enumerate_scored
 from repro.core.score import tau_filter
 from repro.core.types import JobSpec, Launch, NodeView
 
@@ -37,7 +50,10 @@ class EcoSched:
         exact_limit: int = 50_000,
         beam: int = 64,
         lookahead: float = 0.0,
+        engine: str = "vector",
     ):
+        if engine not in ("vector", "python"):
+            raise ValueError(f"unknown scoring engine {engine!r}")
         self.perf_model = perf_model
         self.lam = lam
         self.tau = tau
@@ -45,6 +61,7 @@ class EcoSched:
         self.exact_limit = exact_limit
         self.beam = beam
         self.lookahead = lookahead
+        self.engine = engine
 
     def name(self) -> str:
         return "ecosched" if not self.lookahead else "ecosched+lookahead"
@@ -54,6 +71,41 @@ class EcoSched:
         if not window_jobs or view.free_domains <= 0 or view.free_units <= 0:
             return []
         specs = [tau_filter(self.perf_model.spec(j), self.tau) for j in window_jobs]
+        # a job whose mode list is empty (nothing feasible survives the
+        # filter) can never launch; drop it rather than crash the scorer
+        specs = [s for s in specs if s.modes]
+        if not specs:
+            return []
+        if self.engine == "python":
+            action = self._best_python(specs, view)
+        else:
+            action = self._best_vector(specs, view)
+        launches = [Launch(job=sp.name, g=m.g) for sp, m in action]
+        # descending count — the order the feasibility replay allocated
+        launches.sort(key=lambda ln: -ln.g)
+        return launches
+
+    def _best_vector(self, specs, view: NodeView):
+        try:
+            batch = enumerate_scored(
+                specs, view, list(view.free_map),
+                lam=self.lam, exact_limit=self.exact_limit, beam=self.beam,
+            )
+        except OverflowError:
+            # windows too wide for the engine's int64 action-set keys
+            # (never the pod-scale target); the reference path has no limit
+            return self._best_python(specs, view)
+        scores = batch.scores
+        if self.lookahead:
+            scores = scores + self.lookahead * batch.spread
+        i = batch.best_index(scores)
+        if batch.n_jobs[i] == 0 and not view.running:
+            j = batch.best_index(scores, nonempty=True)
+            if j is not None:
+                i = j
+        return batch.action(i)
+
+    def _best_python(self, specs, view: NodeView):
         scored = enumerate_actions(
             specs, view, list(view.free_map),
             lam=self.lam, exact_limit=self.exact_limit, beam=self.beam,
@@ -66,7 +118,7 @@ class EcoSched:
             nonempty = [sa for sa in scored if sa[1]]
             if nonempty:
                 best_s, best_a = nonempty[0]
-        return [Launch(job=sp.name, g=m.g) for sp, m in best_a]
+        return best_a
 
     # -- beyond-paper: completion-alignment lookahead ----------------------
     def _lookahead_penalty(self, action, view: NodeView) -> float:

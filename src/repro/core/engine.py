@@ -1,0 +1,399 @@
+"""Vectorized pod-scale scoring engine (ROADMAP: Perf).
+
+``repro.core.actions.enumerate_actions`` is the pure-Python reference for
+the paper's Phase-II decision (§III-C): enumerate feasible joint actions,
+score each with Eq. (1), pick the argmin.  At the paper's node scale
+(M=4, K=2) it is cheap; at pod scale (M=16, K=4, 17-job windows) its
+per-candidate ``score()`` call and first-fit replay dominate decision
+time.  This module reimplements both the exact and the beam path as
+batched numpy computation:
+
+  * a scheduling window becomes a ``_SpecTable`` of per-(job, mode)
+    columns (unit counts, ``e_norm`` deviations, ``t_norm·g`` loads),
+  * Eq. (1) scores for whole candidate batches are one vector expression,
+  * placement feasibility replays the simulator's domain-spreading
+    first-fit on an *integer bitmask* of the free map (shift/AND finds
+    every contiguous run), memoized per count-multiset — thousands of
+    candidates share a handful of multisets,
+  * beam rounds become batched extend → dedupe → score → stable top-k.
+
+The engine is parity-locked against the reference: identical candidate
+order, identical argmin action, scores within 1e-9 (tests/test_engine.py
+property-checks this over seeded random node states).  ``EcoSched``
+consumes it through ``enumerate_scored`` + ``ScoredBatch.best_index`` so
+the argmin never materializes Python tuples for the full action space.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.actions import _space_estimate
+from repro.core.score import score
+from repro.core.types import JobSpec, ModeEstimate, NodeView
+
+# Cap on elements per vectorized exact-path chunk; bounds peak memory when
+# padded mode grids are much larger than the true action space.
+_CHUNK_ELEMS = 2_000_000
+
+
+class PlacementOracle:
+    """Memoized bitmask replay of ``PlacementState.allocate``.
+
+    The free map is one integer (bit u set = unit u free); the feasible
+    starts for a g-unit job are the set bits of ``m = mask & mask>>1 &
+    ... & mask>>(g-1)``.  Start selection replicates the simulator's
+    domain-spreading first-fit exactly: among feasible starts, minimize
+    (home-domain occupancy, start) where the home domain is the
+    least-occupied domain the range overlaps.  Feasibility of an action
+    depends only on its count multiset, so verdicts are memoized per
+    descending count tuple.
+    """
+
+    def __init__(
+        self,
+        free_map: Sequence[bool],
+        domains: int,
+        domain_jobs: Optional[Sequence[int]] = None,
+    ):
+        self.units = len(free_map)
+        self.domains = domains
+        self.mask0 = 0
+        for u, f in enumerate(free_map):
+            if f:
+                self.mask0 |= 1 << u
+        self.occ0 = tuple(domain_jobs) if domain_jobs else (0,) * domains
+        self._dom = [u * domains // self.units for u in range(self.units)]
+        self._memo: Dict[Tuple[int, ...], bool] = {}
+
+    def placeable(self, counts_desc: Tuple[int, ...]) -> bool:
+        hit = self._memo.get(counts_desc)
+        if hit is not None:
+            return hit
+        mask = self.mask0
+        occ = list(self.occ0)
+        ok = True
+        for g in counts_desc:
+            mask = self._alloc(mask, occ, g)
+            if mask is None:
+                ok = False
+                break
+        self._memo[counts_desc] = ok
+        return ok
+
+    def _alloc(self, mask: int, occ: List[int], g: int) -> Optional[int]:
+        m = mask
+        for i in range(1, g):
+            m &= mask >> i
+        if not m:
+            return None
+        best = None  # ((home occupancy, start), start, home)
+        while m:
+            s = (m & -m).bit_length() - 1
+            d_lo = self._dom[s]
+            d_hi = self._dom[s + g - 1]
+            home = min(range(d_lo, d_hi + 1), key=lambda d: (occ[d], d))
+            key = (occ[home], s)
+            if best is None or key < best[0]:
+                best = (key, s, home)
+            if occ[home] == 0:
+                break  # starts ascend: (0, s) is unbeatable
+            m &= m - 1
+        _, s, home = best
+        occ[home] += 1
+        return mask & ~(((1 << g) - 1) << s)
+
+
+class _SpecTable:
+    """Column-oriented view of one scheduling window's τ-filtered specs."""
+
+    def __init__(self, specs: Sequence[JobSpec]):
+        self.specs = list(specs)
+        J = len(self.specs)
+        n_modes = [len(s.modes) for s in self.specs]
+        self.mode_count = np.asarray(n_modes, dtype=np.int64)
+        mm = max(n_modes) if J else 0
+        self.max_modes = mm
+        self.mode_g = np.zeros((J, mm), dtype=np.int64)
+        self.mode_dev = np.zeros((J, mm))  # e_norm - 1
+        self.mode_load = np.zeros((J, mm))  # t_norm * g (lookahead proxy)
+        for j, s in enumerate(self.specs):
+            for k, m in enumerate(s.modes):
+                self.mode_g[j, k] = m.g
+                self.mode_dev[j, k] = m.e_norm - 1.0
+                self.mode_load[j, k] = m.t_norm * m.g
+        # flattened (job, mode) pairs, job-major/mode-minor — the reference
+        # path's iteration order
+        self.pair_job = np.repeat(np.arange(J, dtype=np.int64), n_modes)
+        self.pair_mode = (
+            np.concatenate([np.arange(n, dtype=np.int64) for n in n_modes])
+            if J
+            else np.zeros(0, dtype=np.int64)
+        )
+        self.pair_g = self.mode_g[self.pair_job, self.pair_mode]
+        self.pair_dev = self.mode_dev[self.pair_job, self.pair_mode]
+        self.pair_load = self.mode_load[self.pair_job, self.pair_mode]
+
+
+# One enumeration block: actions of a single size s as column arrays.
+# (scores, total_g, spread, job_mat (B, s), mode_mat (B, s))
+_Block = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+
+
+class ScoredBatch:
+    """Array-backed scored action set; rows follow the reference order."""
+
+    def __init__(self, specs: Sequence[JobSpec], blocks: List[_Block]):
+        self.specs = list(specs)
+        self._blocks = blocks
+        self.scores = np.concatenate([b[0] for b in blocks])
+        self.total_g = np.concatenate([b[1] for b in blocks])
+        self.spread = np.concatenate([b[2] for b in blocks])
+        self.n_jobs = np.concatenate(
+            [np.full(len(b[0]), b[3].shape[1], dtype=np.int64) for b in blocks]
+        )
+        self._starts = np.cumsum([0] + [len(b[0]) for b in blocks])
+
+    def __len__(self) -> int:
+        return len(self.scores)
+
+    def action(self, i: int) -> Tuple[Tuple[JobSpec, ModeEstimate], ...]:
+        b = int(np.searchsorted(self._starts, i, side="right")) - 1
+        row = i - self._starts[b]
+        _, _, _, job_mat, mode_mat = self._blocks[b]
+        return tuple(
+            (self.specs[j], self.specs[j].modes[k])
+            for j, k in zip(job_mat[row], mode_mat[row])
+        )
+
+    def to_list(self):
+        """Reference-format [(score, action), ...] — for parity tests."""
+        return [(float(self.scores[i]), self.action(i)) for i in range(len(self))]
+
+    def best_index(
+        self, scores: Optional[np.ndarray] = None, *, nonempty: bool = False
+    ) -> Optional[int]:
+        """Argmin under the policy's tie-break: lowest score, then largest
+        total unit count, then earliest generation order — exactly what a
+        stable sort by (score, -total_g) over the reference list picks."""
+        sc = self.scores if scores is None else scores
+        idxs = np.flatnonzero(self.n_jobs > 0) if nonempty else np.arange(len(sc))
+        if idxs.size == 0:
+            return None
+        sub = sc[idxs]
+        tie = idxs[sub == sub.min()]
+        return int(tie[np.argmax(self.total_g[tie])])
+
+
+def enumerate_scored(
+    specs: Sequence[JobSpec],
+    view: NodeView,
+    free_map: List[bool],
+    *,
+    lam: float,
+    exact_limit: int = 50_000,
+    beam: int = 64,
+) -> ScoredBatch:
+    """Vectorized twin of ``actions.enumerate_actions`` (same feasible set,
+    same scores, same row order)."""
+    specs = list(specs)
+    k_avail = view.domains - view.occupied_domains
+    g_free = view.free_units
+    M = view.total_units
+    empty = _empty_block(score((), g_free=g_free, M=M, lam=lam))
+    if k_avail <= 0 or not specs:
+        return ScoredBatch(specs, [empty])
+    table = _SpecTable(specs)
+    oracle = PlacementOracle(free_map, view.domains, view.domain_jobs)
+    est = _space_estimate([len(s.modes) for s in specs], k_avail, exact_limit)
+    if est <= exact_limit:
+        blocks = _exact_blocks(table, oracle, k_avail, g_free, M, lam)
+    else:
+        blocks = _beam_blocks(table, oracle, k_avail, g_free, M, lam, beam)
+    return ScoredBatch(specs, [empty] + blocks)
+
+
+def _empty_block(empty_score: float) -> _Block:
+    return (
+        np.array([empty_score]),
+        np.zeros(1, dtype=np.int64),
+        np.zeros(1),
+        np.zeros((1, 0), dtype=np.int64),
+        np.zeros((1, 0), dtype=np.int64),
+    )
+
+
+def _placeable_rows(oracle: PlacementOracle, counts: np.ndarray) -> np.ndarray:
+    """Feasibility mask for a (B, s) count matrix.
+
+    Feasibility depends only on the count *multiset*, so rows are encoded
+    as one base-(units+1) integer each and the oracle runs once per
+    distinct code — thousands of candidates share a handful of multisets.
+    """
+    counts_desc = -np.sort(-counts, axis=1)
+    base = oracle.units + 1
+    weights = base ** np.arange(counts_desc.shape[1], dtype=np.int64)
+    codes = counts_desc @ weights
+    uniq, first, inv = np.unique(codes, return_index=True, return_inverse=True)
+    uok = np.fromiter(
+        (
+            oracle.placeable(tuple(int(g) for g in counts_desc[i]))
+            for i in first
+        ),
+        dtype=bool,
+        count=len(first),
+    )
+    return uok[inv]
+
+
+def _spread(lmax: np.ndarray, lmin: np.ndarray, size: int) -> np.ndarray:
+    """Completion-alignment proxy (EcoSched lookahead): load spread."""
+    if size < 2:
+        return np.zeros(len(lmax))
+    return (lmax - lmin) / np.maximum(lmax, 1e-9)
+
+
+def _exact_blocks(
+    table: _SpecTable,
+    oracle: PlacementOracle,
+    k_avail: int,
+    g_free: int,
+    M: int,
+    lam: float,
+) -> List[_Block]:
+    J = len(table.specs)
+    mm = table.max_modes
+    out: List[_Block] = []
+    for s in range(1, min(k_avail, J) + 1):
+        combos = np.array(
+            list(itertools.combinations(range(J), s)), dtype=np.int64
+        )  # (C, s) in reference order
+        # (P, s) padded mode-index grid, last index fastest = product order
+        grid = np.indices((mm,) * s).reshape(s, -1).T
+        P = len(grid)
+        chunk = max(1, _CHUNK_ELEMS // max(P * s, 1))
+        parts: List[Tuple[np.ndarray, ...]] = []
+        for c0 in range(0, len(combos), chunk):
+            cs = combos[c0 : c0 + chunk]
+            jm = cs[:, None, :]  # (c, 1, s)
+            gb = grid[None, :, :]  # (1, P, s)
+            valid = (gb < table.mode_count[jm]).all(axis=2)  # (c, P)
+            g = table.mode_g[jm, gb]  # (c, P, s)
+            tot = g.sum(axis=2)
+            ok = valid & (tot <= g_free)
+            ci, pi = np.nonzero(ok)  # row-major == combo-major, product-minor
+            if ci.size == 0:
+                continue
+            parts.append((cs[ci], grid[pi], g[ci, pi]))
+        if not parts:
+            continue
+        job_mat = np.concatenate([p[0] for p in parts])
+        mode_mat = np.concatenate([p[1] for p in parts])
+        counts = np.concatenate([p[2] for p in parts])
+        keep = _placeable_rows(oracle, counts)
+        if not keep.any():
+            continue
+        job_mat, mode_mat, counts = job_mat[keep], mode_mat[keep], counts[keep]
+        dev = table.mode_dev[job_mat, mode_mat]
+        loads = table.mode_load[job_mat, mode_mat]
+        tot = counts.sum(axis=1)
+        scores = dev.sum(axis=1) / s + lam * ((g_free - tot) / M)
+        spread = _spread(loads.max(axis=1), loads.min(axis=1), s)
+        out.append((scores, tot, spread, job_mat, mode_mat))
+    return out
+
+
+def _beam_blocks(
+    table: _SpecTable,
+    oracle: PlacementOracle,
+    k_avail: int,
+    g_free: int,
+    M: int,
+    lam: float,
+    beam: int,
+) -> List[_Block]:
+    J = len(table.specs)
+    out: List[_Block] = []
+    # A partial action's identity is its {(job, g)} set.  Encode each
+    # member as job·(maxg+1)+g and the whole set as a base-B little-endian
+    # integer over members in ascending order — order-free and injective,
+    # so set equality becomes int64 equality and the dedupe vectorizes.
+    maxg = int(table.pair_g.max()) if len(table.pair_g) else 0
+    B = J * (maxg + 1) + 1
+    if float(B) ** k_avail >= 2**62:  # never at pod scale (17·17 base, K=4)
+        raise OverflowError(
+            f"action-set key space {B}^{k_avail} overflows int64; "
+            "use the pure-Python reference path for windows this large"
+        )
+    pair_code = table.pair_job * (maxg + 1) + table.pair_g
+    # frontier = the single empty partial
+    f_jobs = np.zeros((1, 0), dtype=np.int64)
+    f_modes = np.zeros((1, 0), dtype=np.int64)
+    f_counts = np.zeros((1, 0), dtype=np.int64)  # rows sorted descending
+    f_codes = np.zeros((1, 0), dtype=np.int64)  # member codes, ascending
+    f_dev = np.zeros(1)  # running Σ(e_norm-1) in extension order
+    f_g = np.zeros(1, dtype=np.int64)
+    f_lmax = np.full(1, -np.inf)
+    f_lmin = np.full(1, np.inf)
+    f_used = np.zeros((1, J), dtype=bool)
+    for size in range(1, k_avail + 1):
+        used = f_used[:, table.pair_job]  # (F, P)
+        new_g = f_g[:, None] + table.pair_g[None, :]
+        ok = ~used & (new_g <= g_free)
+        fi, pi = np.nonzero(ok)  # frontier-major == reference iteration order
+        if fi.size == 0:
+            break
+        # dedupe by {(job, g)} set, keep-first in iteration order: the same
+        # action reached through different extension orders must occupy one
+        # beam slot, not many.  Key = parent digits with the new member
+        # code inserted at its sorted position.
+        codes = f_codes[fi]  # (N, size-1), ascending member codes
+        add = pair_code[pi]
+        w = B ** np.arange(size - 1, dtype=np.int64)
+        less = codes < add[:, None]
+        low = (codes * w * less).sum(axis=1)
+        high = (codes * w * ~less).sum(axis=1) * B
+        keys = low + add * B ** less.sum(axis=1) + high
+        _, first = np.unique(keys, return_index=True)
+        kept = np.sort(first)  # back to generation order
+        fi, pi = fi[kept], pi[kept]
+        counts = np.concatenate([f_counts[fi], table.pair_g[pi][:, None]], axis=1)
+        keep = _placeable_rows(oracle, counts)
+        if not keep.any():
+            break
+        fi, pi, counts = fi[keep], pi[keep], counts[keep]
+        pj, pg = table.pair_job, table.pair_g
+        scores = (f_dev[fi] + table.pair_dev[pi]) / size + lam * (
+            (g_free - (f_g[fi] + pg[pi])) / M
+        )
+        # stable top-k by score: ties keep generation order, like the
+        # reference's stable list sort
+        sel = np.argsort(scores, kind="stable")[:beam]
+        fsel, psel = fi[sel], pi[sel]
+        f_jobs = np.concatenate([f_jobs[fsel], pj[psel][:, None]], axis=1)
+        f_modes = np.concatenate(
+            [f_modes[fsel], table.pair_mode[psel][:, None]], axis=1
+        )
+        f_counts = -np.sort(-counts[sel], axis=1)
+        f_codes = np.sort(
+            np.concatenate([f_codes[fsel], pair_code[psel][:, None]], axis=1),
+            axis=1,
+        )
+        f_dev = f_dev[fsel] + table.pair_dev[psel]
+        f_g = f_g[fsel] + pg[psel]
+        f_lmax = np.maximum(f_lmax[fsel], table.pair_load[psel])
+        f_lmin = np.minimum(f_lmin[fsel], table.pair_load[psel])
+        f_used = f_used[fsel].copy()
+        f_used[np.arange(len(fsel)), pj[psel]] = True
+        out.append(
+            (
+                scores[sel],
+                f_g.copy(),
+                _spread(f_lmax, f_lmin, size),
+                f_jobs.copy(),
+                f_modes.copy(),
+            )
+        )
+    return out

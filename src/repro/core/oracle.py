@@ -81,7 +81,14 @@ class OracleSolver:
         def lb(waiting, busy, idle):
             return busy + idle + sum(min_busy[j] for j in waiting)
 
-        def recurse(waiting: Tuple[str, ...], running: Tuple[Tuple[float, str, int, Tuple[int, ...]], ...],
+        def occupancy(running) -> List[int]:
+            occ = [0] * node.domains
+            for _, _, _, _, dom in running:
+                occ[dom] += 1
+            return occ
+
+        def recurse(waiting: Tuple[str, ...],
+                    running: Tuple[Tuple[float, str, int, Tuple[int, ...], int], ...],
                     free: Tuple[bool, ...], t: float, busy: float, idle: float,
                     plan: Tuple):
             if _time.perf_counter() > deadline:
@@ -96,10 +103,14 @@ class OracleSolver:
             if lb(waiting, busy, idle) >= best["total"]:
                 return
 
-            # enumerate feasible launch sets at this event
-            st = PlacementState(node.units, 1)
-            st.free = list(free)
-            k_avail = node.domains - len(running)
+            # enumerate feasible launch sets at this event under the same
+            # placement model the simulator enforces (domain-spreading
+            # first-fit, co-run cap on *occupied* domains) — anything less
+            # and the "oracle" would search a smaller space than the
+            # online policies it is supposed to lower-bound
+            occ = occupancy(running)
+            free_count = sum(free)
+            k_avail = node.domains - sum(1 for c in occ if c)
             choices: List[Tuple[Launch, ...]] = []
             if k_avail > 0 and waiting:
                 jobs = list(dict.fromkeys(waiting))
@@ -107,13 +118,14 @@ class OracleSolver:
                 for size in range(1, min(k_avail, len(jobs)) + 1):
                     for combo in itertools.combinations(jobs, size):
                         for modes in itertools.product(*[per_job_modes[j] for j in combo]):
-                            if sum(modes) > st.free_count():
+                            if sum(modes) > free_count:
                                 continue
-                            st2 = PlacementState(node.units, 1)
+                            st2 = PlacementState(node.units, node.domains)
                             st2.free = list(free)
+                            st2.domain_jobs = list(occ)
                             ok = True
                             try:
-                                for g in sorted(modes, reverse=True):
+                                for g in modes:  # launch order, as applied
                                     st2.allocate(g)
                             except ValueError:
                                 ok = False
@@ -144,25 +156,26 @@ class OracleSolver:
 
             for ch in sorted(choices, key=order_key):
                 new_running = list(running)
-                st3 = PlacementState(node.units, 1)
+                st3 = PlacementState(node.units, node.domains)
                 st3.free = list(free)
+                st3.domain_jobs = list(occ)
                 nbusy = busy
                 nplan = plan
                 ok = True
                 for l in ch:
                     try:
-                        ids, _ = st3.allocate(l.g)
+                        ids, dom = st3.allocate(l.g)
                     except ValueError:
                         ok = False
                         break
                     dur = truth[l.job].runtime[l.g]
                     nbusy += truth[l.job].energy(l.g)
-                    new_running.append((t + dur, l.job, l.g, ids))
+                    new_running.append((t + dur, l.job, l.g, ids, dom))
                     nplan = nplan + ((l.job, l.g, t, t + dur),)
                 if not ok or not new_running:
                     continue
                 new_running.sort()
-                end_t, jdone, gdone, ids_done = new_running[0]
+                end_t, jdone, gdone, ids_done, _ = new_running[0]
                 free_now = st3.free_count()
                 nidle = idle + free_now * (end_t - t) * node.idle_power_per_unit
                 for u in ids_done:

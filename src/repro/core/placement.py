@@ -1,19 +1,29 @@
 """NUMA/ICI-domain-aware placement (paper §III-C, DESIGN.md §2).
 
 Constraints enforced:
-  * at most K co-running jobs (one per isolation domain),
+  * at most K *occupied* isolation domains (each job is homed in exactly
+    one domain; a domain only hosts a second job when no empty domain is
+    reachable),
   * a job's units are **contiguous** (ICI torus contiguity on TPU; on a GPU
     node contiguity is vacuous but harmless),
   * unit counts need NOT align with domain boundaries (paper: a 3-GPU job
     + 1-GPU job share a 2-domain node).
 
-Allocation is first-fit over contiguous free ranges; the domain label is
-the index of the first unit's domain (CPU-side resources are partitioned
-by domain in the real system; the simulator only needs the count cap).
+Allocation is **domain-spreading first-fit**: among all feasible contiguous
+starts, prefer the one whose *home domain* (the least-occupied domain the
+range overlaps) currently hosts the fewest jobs, breaking ties toward the
+lowest start.  On an empty node this degenerates to plain first-fit, but
+once jobs are running it steers new jobs away from occupied domains —
+two co-running jobs never share CPU-side domain resources while another
+domain sits empty, which is what the paper's NUMA-aware placement means.
+
+``domain_jobs`` tracks actual per-domain occupancy (jobs homed in each
+domain); callers that care about the K co-run cap should count occupied
+domains, not running jobs, via ``occupied_domains()``.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 
 class PlacementState:
@@ -22,9 +32,16 @@ class PlacementState:
         self.units = units
         self.domains = domains
         self.free = [True] * units
+        self.domain_jobs = [0] * domains  # jobs homed in each domain
 
     def free_count(self) -> int:
         return sum(self.free)
+
+    def occupied_domains(self) -> int:
+        return sum(1 for c in self.domain_jobs if c)
+
+    def domain_of_unit(self, u: int) -> int:
+        return u * self.domains // self.units
 
     def _ranges(self) -> List[Tuple[int, int]]:
         """Maximal contiguous free (start, length) ranges."""
@@ -47,18 +64,42 @@ class PlacementState:
     def max_contiguous(self) -> int:
         return max((length for _, length in self._ranges()), default=0)
 
-    def allocate(self, g: int) -> Tuple[Tuple[int, ...], int]:
-        """First-fit contiguous allocation; returns (unit ids, domain)."""
-        for start, length in self._ranges():
-            if length >= g:
-                ids = tuple(range(start, start + g))
-                for u in ids:
-                    self.free[u] = False
-                domain = start * self.domains // self.units
-                return ids, domain
-        raise ValueError(f"cannot allocate {g} contiguous units (free={self.free})")
+    def _home_domain(self, start: int, g: int) -> int:
+        """Least-occupied domain overlapped by [start, start+g)."""
+        d_lo = self.domain_of_unit(start)
+        d_hi = self.domain_of_unit(start + g - 1)
+        return min(range(d_lo, d_hi + 1), key=lambda d: (self.domain_jobs[d], d))
 
-    def release(self, ids) -> None:
+    def allocate(self, g: int) -> Tuple[Tuple[int, ...], int]:
+        """Domain-spreading first-fit contiguous allocation.
+
+        Returns (unit ids, home domain).  The home domain's occupancy is
+        incremented; pass it back to ``release`` when the job finishes.
+        """
+        best = None  # ((home occupancy, start), start, home)
+        for start, length in self._ranges():
+            for s in range(start, start + length - g + 1):
+                home = self._home_domain(s, g)
+                key = (self.domain_jobs[home], s)
+                if best is None or key < best[0]:
+                    best = (key, s, home)
+                if self.domain_jobs[home] == 0:
+                    break  # scanning right can't beat (0, s) within the range
+            if best is not None and best[0][0] == 0:
+                break  # later ranges have strictly larger starts
+        if best is None:
+            raise ValueError(f"cannot allocate {g} contiguous units (free={self.free})")
+        _, s, home = best
+        ids = tuple(range(s, s + g))
+        for u in ids:
+            self.free[u] = False
+        self.domain_jobs[home] += 1
+        return ids, home
+
+    def release(self, ids, domain: Optional[int] = None) -> None:
         for u in ids:
             assert not self.free[u], f"double free of unit {u}"
             self.free[u] = True
+        if domain is not None:
+            assert self.domain_jobs[domain] > 0, f"release of empty domain {domain}"
+            self.domain_jobs[domain] -= 1

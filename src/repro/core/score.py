@@ -17,6 +17,8 @@ from repro.core.types import JobSpec, Launch, ModeEstimate
 
 
 def tau_filter(spec: JobSpec, tau: float) -> JobSpec:
+    if not spec.modes:  # nothing to filter; callers must skip modeless jobs
+        return spec
     best = min(m.t_norm for m in spec.modes)
     keep = tuple(m for m in spec.modes if m.t_norm <= (1.0 + tau) * best)
     return JobSpec(name=spec.name, modes=keep)

@@ -82,6 +82,7 @@ class NodeSim:
             free_units=self.placement.free_count(),
             running=list(self.running),
             free_map=list(self.placement.free),
+            domain_jobs=list(self.placement.domain_jobs),
         )
 
     def advance(self, t: float) -> None:
@@ -99,7 +100,7 @@ class NodeSim:
         """Advance to the completion instant, then free the job's units."""
         self.advance(rj.end)
         self.running.remove(rj)
-        self.placement.release(rj.units)
+        self.placement.release(rj.units, rj.domain)
 
     def invoke_policy(self) -> List[RunningJob]:
         """One scheduling event; returns the newly launched jobs (the owner
@@ -119,7 +120,7 @@ class NodeSim:
             prof = self.truth[ln.job]
             if ln.g not in prof.runtime:
                 raise ValueError(f"{ln.job}: infeasible unit count {ln.g}")
-            if len(self.running) >= self.node.domains:
+            if self.placement.occupied_domains() >= self.node.domains:
                 raise ValueError(
                     f"{self.policy.name()} exceeded domain cap K={self.node.domains}"
                 )
@@ -145,6 +146,7 @@ class NodeSim:
                     busy_energy=power * dur,
                     arrival=self.arrival_of.get(ln.job, 0.0),
                     node=self.name,
+                    domain=domain,
                 )
             )
             out.append(rj)

@@ -94,10 +94,20 @@ class NodeView:
     free_units: int
     running: List[RunningJob]
     free_map: List[bool] = field(default_factory=list)  # per-unit freedom
+    domain_jobs: List[int] = field(default_factory=list)  # per-domain occupancy
+
+    @property
+    def occupied_domains(self) -> int:
+        """Isolation domains hosting at least one job.  Falls back to the
+        running-job count when the view carries no occupancy map (older
+        callers); with correct labeling the two coincide."""
+        if self.domain_jobs:
+            return sum(1 for c in self.domain_jobs if c)
+        return len(self.running)
 
     @property
     def free_domains(self) -> int:
-        return self.domains - len(self.running)
+        return self.domains - self.occupied_domains
 
 
 @dataclass
@@ -109,6 +119,7 @@ class JobRecord:
     busy_energy: float
     arrival: float = 0.0  # when the job entered the system (0 = static queue)
     node: str = ""  # cluster node id; "" for single-node simulate()
+    domain: int = -1  # isolation domain the job was homed in (-1 = unknown)
 
     @property
     def wait(self) -> float:
@@ -172,6 +183,14 @@ class ClusterResult:
     @property
     def edp(self) -> float:
         return self.total_energy * self.makespan
+
+    @property
+    def decision_time_s(self) -> float:
+        return sum(r.decision_time_s for r in self.per_node.values())
+
+    @property
+    def decision_events(self) -> int:
+        return sum(r.decision_events for r in self.per_node.values())
 
     @property
     def records(self) -> List[JobRecord]:

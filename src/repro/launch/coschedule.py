@@ -131,7 +131,7 @@ def main():
             timeline.append(
                 f"t={time.perf_counter()-t_start:6.1f}s  finish {name} (loss {out['final_loss']:.3f})"
             )
-            placement.release(units)
+            placement.release(units, running[name]["domain"])
             del running[name]
             lock.notify_all()
 
@@ -140,14 +140,15 @@ def main():
             view = NodeView(
                 t=time.perf_counter() - t_start, total_units=M, domains=args.domains,
                 free_units=placement.free_count(),
-                running=[RunningJob(n, r["g"], r["units"], 0, 0, 0, 0) for n, r in running.items()],
+                running=[RunningJob(n, r["g"], r["units"], r["domain"], 0, 0, 0) for n, r in running.items()],
                 free_map=list(placement.free),
+                domain_jobs=list(placement.domain_jobs),
             )
             launches = policy.on_event(view, list(waiting)) if waiting else []
             for ln in launches:
-                units, _dom = placement.allocate(ln.g)
+                units, dom = placement.allocate(ln.g)
                 waiting.remove(ln.job)
-                running[ln.job] = {"g": ln.g, "units": units}
+                running[ln.job] = {"g": ln.g, "units": units, "domain": dom}
                 timeline.append(
                     f"t={time.perf_counter()-t_start:6.1f}s  launch {ln.job} on units {units}"
                 )

@@ -1,0 +1,370 @@
+"""Vectorized scoring engine (core/engine.py): parity locks against the
+pure-Python reference, beam-dedup regression, NUMA-domain occupancy
+invariants, adversarial trace round-trip, benchmark smoke."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    EcoSched,
+    JobProfile,
+    Node,
+    OraclePerfModel,
+    PlacementState,
+    ProfiledPerfModel,
+    simulate,
+)
+from repro.core.actions import enumerate_actions
+from repro.core.arrivals import Arrival, dumps_trace, loads_trace
+from repro.core.engine import PlacementOracle, enumerate_scored
+from repro.core.perfmodel import _mk_spec
+from repro.core.score import tau_filter
+from repro.core.types import JobSpec, Launch, ModeEstimate, NodeView
+
+
+# ---------------------------------------------------------------------------
+# Seeded random node states
+# ---------------------------------------------------------------------------
+
+
+def rand_state(seed):
+    """Random (specs, view): node size/domains, fragmented free map with
+    honest per-domain occupancy, jobs with random feasible mode subsets."""
+    rng = np.random.default_rng(seed)
+    M = int(rng.choice([4, 8, 16]))
+    K = int(rng.choice([2, 4]))
+    W = int(rng.integers(1, 8))
+    counts = [g for g in (1, 2, 3, 4, 8, 16) if g <= M]
+    specs = []
+    for i in range(W):
+        sub = sorted(
+            rng.choice(counts, size=int(rng.integers(1, len(counts) + 1)), replace=False)
+        )
+        t_hat = {int(g): float(100.0 / g ** rng.uniform(0.3, 1.0)) for g in sub}
+        p_hat = {int(g): float(300.0 * g ** rng.uniform(0.6, 0.95)) for g in sub}
+        specs.append(_mk_spec(f"j{i}", t_hat, p_hat))
+    st = PlacementState(M, K)
+    running = []
+    for _ in range(int(rng.integers(0, K))):
+        g = int(rng.integers(1, max(2, M // 2)))
+        if st.can_allocate(g) and st.occupied_domains() < K:
+            st.allocate(g)
+            running.append(object())  # only len()/fallback is ever used
+    view = NodeView(
+        t=0.0, total_units=M, domains=K, free_units=st.free_count(),
+        running=running, free_map=list(st.free), domain_jobs=list(st.domain_jobs),
+    )
+    return specs, view
+
+
+def names_g(action):
+    return [(sp.name, m.g) for sp, m in action]
+
+
+def pick(scored):
+    """EcoSched's selection rule over a reference-format scored list."""
+    scored = sorted(scored, key=lambda kv: (kv[0], -sum(m.g for _, m in kv[1])))
+    return scored[0]
+
+
+# ---------------------------------------------------------------------------
+# Parity locks (ISSUE 2 acceptance: argmin identical, scores within 1e-9)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("exact_limit,beam", [(50_000, 16), (1, 8)], ids=["exact", "beam"])
+def test_engine_parity_property(exact_limit, beam):
+    for seed in range(120):
+        specs, view = rand_state(seed)
+        ref = enumerate_actions(
+            specs, view, list(view.free_map), lam=0.5, exact_limit=exact_limit, beam=beam
+        )
+        batch = enumerate_scored(
+            specs, view, list(view.free_map), lam=0.5, exact_limit=exact_limit, beam=beam
+        )
+        vec = batch.to_list()
+        assert len(ref) == len(vec)
+        for (rs, ra), (vs, va) in zip(ref, vec):
+            assert abs(rs - vs) <= 1e-9
+            assert names_g(ra) == names_g(va)
+        rs, ra = pick(ref)
+        i = batch.best_index()
+        assert abs(rs - float(batch.scores[i])) <= 1e-9
+        assert names_g(ra) == names_g(batch.action(i))
+
+
+def test_engine_policy_parity_end_to_end():
+    """Vector and python EcoSched backends produce the identical schedule."""
+    truth = {
+        name: JobProfile(
+            name=name,
+            runtime={1: t, 2: t / 1.8, 3: t / 2.4, 4: t / 2.8},
+            busy_power={1: p, 2: 1.9 * p, 3: 2.7 * p, 4: 3.4 * p},
+        )
+        for name, t, p in [
+            ("a", 100.0, 100.0), ("b", 200.0, 120.0), ("c", 50.0, 90.0),
+            ("d", 140.0, 105.0), ("e", 90.0, 115.0),
+        ]
+    }
+    node = Node(units=4, domains=2, idle_power_per_unit=10.0)
+    pm = ProfiledPerfModel(truth, noise=0.02, seed=3)
+    kw = dict(lam=0.4, tau=0.5)
+    r_vec = simulate(EcoSched(pm, engine="vector", **kw), node, truth, queue=list(truth))
+    r_py = simulate(EcoSched(pm, engine="python", **kw), node, truth, queue=list(truth))
+    assert [(r.job, r.g, r.start, r.domain) for r in r_vec.records] == [
+        (r.job, r.g, r.start, r.domain) for r in r_py.records
+    ]
+    assert r_vec.total_energy == r_py.total_energy
+
+
+def test_placement_oracle_matches_state_replay():
+    """Bitmask replay == PlacementState replay for random count multisets."""
+    for seed in range(200):
+        rng = np.random.default_rng(seed)
+        _, view = rand_state(seed)
+        oracle = PlacementOracle(view.free_map, view.domains, view.domain_jobs)
+        n = int(rng.integers(1, view.domains + 1))
+        counts = tuple(
+            sorted((int(rng.integers(1, view.total_units + 1)) for _ in range(n)),
+                   reverse=True)
+        )
+        st = PlacementState(view.total_units, view.domains)
+        st.free = list(view.free_map)
+        st.domain_jobs = list(view.domain_jobs)
+        try:
+            for g in counts:
+                st.allocate(g)
+            expect = True
+        except ValueError:
+            expect = False
+        assert oracle.placeable(counts) == expect
+
+
+# ---------------------------------------------------------------------------
+# Beam dedupe (satellite): duplicates must not crowd out the argmin
+# ---------------------------------------------------------------------------
+
+
+def crowding_window(seed=5, W=6):
+    """Seeded window where the pre-fix beam (no dedupe) lost the exact
+    argmin to duplicate partials at beam=2 (found by replaying the PR-1
+    beam against exhaustive enumeration)."""
+    rng = np.random.default_rng(seed)
+    specs = []
+    for i in range(W):
+        sub = sorted(rng.choice([1, 2, 4, 8], size=int(rng.integers(2, 5)), replace=False))
+        t_hat = {int(g): float(100.0 / g ** rng.uniform(0.3, 1.0)) for g in sub}
+        p_hat = {int(g): float(300.0 * g ** rng.uniform(0.6, 0.95)) for g in sub}
+        specs.append(_mk_spec(f"j{i}", t_hat, p_hat))
+    view = NodeView(
+        t=0.0, total_units=16, domains=4, free_units=16,
+        running=[], free_map=[True] * 16, domain_jobs=[0] * 4,
+    )
+    return specs, view
+
+
+def test_beam_dedup_finds_exact_argmin():
+    specs, view = crowding_window()
+    exact = pick(enumerate_actions(specs, view, list(view.free_map),
+                                   lam=0.35, exact_limit=10**9))
+    beam = pick(enumerate_actions(specs, view, list(view.free_map),
+                                  lam=0.35, exact_limit=1, beam=2))
+    assert set(names_g(beam[1])) == set(names_g(exact[1]))
+    assert beam[0] == pytest.approx(exact[0], abs=1e-12)
+
+
+def test_beam_results_have_no_duplicate_actions():
+    for seed in (5, 23, 30):
+        specs, view = crowding_window(seed)
+        for enum in (enumerate_actions, lambda *a, **k: enumerate_scored(*a, **k).to_list()):
+            res = enum(specs, view, list(view.free_map), lam=0.35, exact_limit=1, beam=4)
+            keys = [frozenset(names_g(a)) for _, a in res]
+            assert len(keys) == len(set(keys))
+
+
+# ---------------------------------------------------------------------------
+# NUMA-domain occupancy (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_placement_spreads_across_domains():
+    # pre-fix: unit 1 on a 4-unit/2-domain node was labeled domain 0
+    # (1*2//4), stacking two jobs in domain 0 while domain 1 sat empty
+    st = PlacementState(4, 2)
+    _, d1 = st.allocate(1)
+    _, d2 = st.allocate(1)
+    assert {d1, d2} == {0, 1}
+    assert st.occupied_domains() == 2
+
+
+def test_placement_occupancy_released():
+    st = PlacementState(4, 2)
+    ids1, d1 = st.allocate(2)
+    ids2, d2 = st.allocate(2)
+    assert {d1, d2} == {0, 1}
+    st.release(ids1, d1)
+    assert st.occupied_domains() == 1
+    ids3, d3 = st.allocate(1)
+    assert d3 == d1  # the freed domain is reused, not the occupied one
+
+
+def test_domain_occupancy_invariant_under_random_churn():
+    """Whenever an empty domain exists, a new job must be homed in one —
+    co-running jobs never share a domain while another sits empty."""
+    for seed in range(50):
+        rng = np.random.default_rng(seed)
+        M = int(rng.choice([4, 8, 16]))
+        K = int(rng.choice([2, 4]))
+        st = PlacementState(M, K)
+        live = []
+        for _ in range(60):
+            if live and rng.random() < 0.4:
+                ids, dom = live.pop(int(rng.integers(len(live))))
+                st.release(ids, dom)
+                continue
+            if st.occupied_domains() >= K:
+                continue
+            g = int(rng.integers(1, M + 1))
+            if not st.can_allocate(g):
+                continue
+            had_empty = st.occupied_domains() < K
+            before = list(st.domain_jobs)
+            ids, dom = st.allocate(g)
+            if had_empty and 0 in [
+                before[d]
+                for d in range(st.domain_of_unit(ids[0]), st.domain_of_unit(ids[-1]) + 1)
+            ]:
+                assert before[dom] == 0, (seed, before, ids, dom)
+            live.append((ids, dom))
+        assert sum(st.domain_jobs) == len(live)
+
+
+def test_marble_replay_matches_spreading_allocator():
+    """Marble's feasibility replay must use the real domain state: with
+    1-domain plain first-fit it predicted placements the domain-spreading
+    allocator doesn't make, and the simulator crashed on M=16/K=4 with
+    optimal counts [1, 1, 12]."""
+    from repro.core import Marble
+
+    truth = {
+        "a": JobProfile(name="a", runtime={1: 100.0}, busy_power={1: 100.0}),
+        "b": JobProfile(name="b", runtime={1: 100.0}, busy_power={1: 100.0}),
+        "c": JobProfile(name="c", runtime={12: 50.0}, busy_power={12: 900.0}),
+    }
+    node = Node(units=16, domains=4, idle_power_per_unit=10.0)
+    r = simulate(Marble(truth), node, truth, queue=["a", "b", "c"])
+    assert sorted(rec.job for rec in r.records) == ["a", "b", "c"]
+
+
+def test_simulated_corunners_get_distinct_domains():
+    truth = {
+        name: JobProfile(
+            name=name,
+            runtime={1: 100.0, 2: 60.0},
+            busy_power={1: 100.0, 2: 180.0},
+        )
+        for name in ("a", "b", "c", "d")
+    }
+    node = Node(units=4, domains=2, idle_power_per_unit=10.0)
+    r = simulate(EcoSched(OraclePerfModel(truth), lam=0.2, tau=1.0),
+                 node, truth, queue=list(truth))
+    assert all(rec.domain >= 0 for rec in r.records)
+    for i, a in enumerate(r.records):
+        for b in r.records[i + 1:]:
+            if a.start < b.end - 1e-9 and b.start < a.end - 1e-9:  # overlap
+                assert a.domain != b.domain, (a, b)
+
+
+def test_engine_overflow_falls_back_to_reference():
+    """Windows too wide for int64 action-set keys: enumerate_scored raises
+    a clear error and EcoSched transparently uses the reference path."""
+    specs = [
+        JobSpec(f"j{i}", tuple(
+            ModeEstimate(g=g, t_norm=1.0 + 0.01 * g, p_bar=100.0, e_norm=1.0 + 0.02 * g)
+            for g in (1, 2, 16)
+        ))
+        for i in range(13)
+    ]
+    view = NodeView(t=0.0, total_units=64, domains=8, free_units=64,
+                    running=[], free_map=[True] * 64, domain_jobs=[0] * 8)
+    with pytest.raises(OverflowError):
+        enumerate_scored(specs, view, list(view.free_map), lam=0.3, exact_limit=1, beam=4)
+
+    class Model:
+        def spec(self, job):
+            return specs[int(job[1:])]
+
+    pol = EcoSched(Model(), lam=0.3, tau=1.0, exact_limit=1, beam=4, engine="vector")
+    ref = EcoSched(Model(), lam=0.3, tau=1.0, exact_limit=1, beam=4, engine="python")
+    jobs = [s.name for s in specs]
+    assert pol.on_event(view, jobs) == ref.on_event(view, jobs)
+
+
+# ---------------------------------------------------------------------------
+# τ-filter guard (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_tau_filter_empty_modes_no_crash():
+    spec = JobSpec("x", ())
+    out = tau_filter(spec, 0.3)
+    assert out.modes == ()
+
+
+def test_ecosched_skips_modeless_jobs():
+    class HoleyModel:
+        def spec(self, job):
+            if job == "bad":
+                return JobSpec("bad", ())
+            return JobSpec(job, (ModeEstimate(g=1, t_norm=1.0, p_bar=100.0, e_norm=1.0),))
+
+    view = NodeView(t=0.0, total_units=4, domains=2, free_units=4,
+                    running=[], free_map=[True] * 4, domain_jobs=[0, 0])
+    for engine in ("vector", "python"):
+        pol = EcoSched(HoleyModel(), lam=0.2, tau=0.3, engine=engine)
+        launches = pol.on_event(view, ["bad", "ok"])
+        assert [ln.job for ln in launches] == ["ok"]
+        assert pol.on_event(view, ["bad"]) == []
+
+
+# ---------------------------------------------------------------------------
+# Trace parsing (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_trace_roundtrip_adversarial_names():
+    stream = [
+        Arrival(t=0.5, name="sweep,lr=0.1#0", app="sweep,lr=0.1"),
+        Arrival(t=1.25, name='he said "go"#1', app='he said "go"'),
+        Arrival(t=2.0, name="plain#2", app="plain"),
+        Arrival(t=3.0, name="multi\nline#3", app="multi\nline"),
+    ]
+    assert loads_trace(dumps_trace(stream)) == stream
+
+
+def test_trace_plain_names_keep_legacy_bytes():
+    stream = [Arrival(t=1.5, name="gpt2#0", app="gpt2")]
+    assert dumps_trace(stream) == "t,name,app\n1.5,gpt2#0,gpt2\n"
+    legacy = "t,name,app\n1.5,gpt2#0,gpt2\n"
+    assert loads_trace(legacy) == stream
+
+
+def test_trace_rejects_empty_fields_and_garbage():
+    with pytest.raises(ValueError):
+        dumps_trace([Arrival(t=0.0, name="", app="x")])
+    with pytest.raises(ValueError):
+        loads_trace("nope\n1,2\n")
+    with pytest.raises(ValueError):
+        loads_trace("t,name,app\n1.0,only-two\n")
+
+
+# ---------------------------------------------------------------------------
+# Benchmark smoke (satellite): the decision-overhead tripwire must run
+# ---------------------------------------------------------------------------
+
+
+def test_bench_decision_overhead_smoke():
+    from benchmarks.bench_decision_overhead import run
+    from benchmarks.common import Csv
+
+    res = run(Csv(), verbose=False, smoke=True)  # parity-gates internally
+    assert res and all(r["vector_ms"] > 0 for r in res.values())

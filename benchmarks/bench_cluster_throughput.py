@@ -1,0 +1,284 @@
+"""Cluster decision-throughput sweep — nodes × arrival rate × window.
+
+The regime of arXiv:2412.17484 / arXiv:2304.06381: an online scheduler at
+datacenter scale is judged by how many scheduling events per second it
+sustains end-to-end, not by one decision's latency.  This benchmark drives
+pod-scale nodes (M=16 units, K=4 domains) behind the energy-aware
+dispatcher and measures ``Cluster.simulate`` wall time in three modes:
+
+  * ``pr2``    — the PR 2 baseline: per-event enumeration from scratch
+                 (``EcoSched(cache=False)``) + the per-arrival Python
+                 status scan (``fast_status=False``),
+  * ``cached`` — ISSUE 3: incremental ``DecisionCache`` + vectorized
+                 ``ClusterState`` dispatch,
+  * ``jax``    — ``cached`` with the Eq. (1) score reduction offloaded to
+                 ``kernels/score_reduce`` (ref backend on CPU CI; pallas
+                 on TPU).
+
+Phase-I noise is 0, so instances of one application share their mode
+structure and repeated decisions hit the cache's name-free keys — the
+recurrent regime the cache targets (with noise > 0 only same-window hits
+remain).  Every measured case first asserts the cached schedule is
+bit-identical to the baseline schedule: a fast-but-diverged cluster run
+would be meaningless.
+
+    PYTHONPATH=src python -m benchmarks.bench_cluster_throughput [--smoke]
+
+Acceptance gate (full mode): >= 3x end-to-end speedup at the pod-scale
+config (M=16, K=4, 8 nodes) vs the PR 2 baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, Csv
+from repro.core import (
+    Cluster,
+    EcoSched,
+    EnergyAwareDispatcher,
+    JobProfile,
+    NodeSpec,
+    ProfiledPerfModel,
+    poisson_stream,
+)
+from repro.roofline.hw import H100
+
+M, K = 16, 4  # pod-scale node geometry (ISSUE 2/3 target)
+N_APPS = 10
+COUNTS = (1, 2, 3, 4, 6, 8, 12, 16)
+SEED = 3
+LAM, TAU = 0.35, 0.45
+
+# (nodes, rate jobs/s, window cap, jobs): sparse -> steady-state backlogs
+FULL_SWEEP = [
+    (2, 0.05, 4, 200),
+    (2, 0.20, 8, 200),
+    (8, 0.20, 4, 800),
+    (8, 0.20, 8, 800),
+]
+POD = (8, 0.20, 8, 800)  # the acceptance config: 8 pod-scale nodes
+SMOKE_SWEEP = [(2, 0.20, 4, 60)]
+MIN_SPEEDUP = 3.0  # full-mode gate vs the PR 2 baseline at POD
+
+
+def synth_apps(n_apps: int = N_APPS, seed: int = SEED) -> Dict[str, JobProfile]:
+    """Seeded app mix with sublinear speedup and power-law busy power —
+    the calibrated workload's shape, scaled out to 16-unit modes."""
+    rng = np.random.default_rng(seed)
+    counts = [g for g in COUNTS if g <= M]
+    out = {}
+    for i in range(n_apps):
+        t1 = float(rng.uniform(60.0, 240.0))
+        alpha = float(rng.uniform(0.35, 0.95))
+        beta = float(rng.uniform(0.6, 0.9))
+        p0 = float(rng.uniform(250.0, 400.0))
+        out[f"app{i}"] = JobProfile(
+            name=f"app{i}",
+            runtime={g: t1 / g ** alpha for g in counts},
+            busy_power={g: p0 * g ** beta for g in counts},
+        )
+    return out
+
+
+def pod_cluster(
+    n_nodes: int, window: int, *, engine: str, cache: bool,
+    policies: Optional[List[EcoSched]] = None,
+) -> Cluster:
+    apps = synth_apps()
+
+    def policy_for(spec, truth):
+        pol = EcoSched(
+            ProfiledPerfModel(truth, noise=0.0, seed=1),
+            lam=LAM, tau=TAU, window=window, engine=engine, cache=cache,
+        )
+        if policies is not None:
+            policies.append(pol)
+        return pol
+
+    return Cluster(
+        [NodeSpec(f"pod-{i}", H100, units=M, domains=K) for i in range(n_nodes)],
+        truth_for=lambda spec: apps,
+        policy_for=policy_for,
+        dispatcher=EnergyAwareDispatcher(),
+        label=f"eco+ecosched[{engine}]",
+    )
+
+
+def _stream(rate: float, n_jobs: int):
+    return poisson_stream([f"app{i}" for i in range(N_APPS)],
+                          rate=rate, n=n_jobs, seed=SEED)
+
+
+def _run_once(n_nodes, rate, window, n_jobs, *, engine, cache, fast_status):
+    stream = _stream(rate, n_jobs)
+    policies: List[EcoSched] = []
+    cl = pod_cluster(n_nodes, window, engine=engine, cache=cache,
+                     policies=policies)
+    t0 = time.perf_counter()
+    res = cl.simulate(stream, fast_status=fast_status)
+    elapsed = time.perf_counter() - t0
+    stats = [p.cache_stats() for p in policies if p.cache_stats()]
+    agg = {}
+    for layer in ("decision", "table", "oracle"):
+        h = sum(s[f"{layer}_hits"] for s in stats)
+        if layer == "decision":  # launch-memo hits serve events too
+            h += sum(s["launch_hits"] for s in stats)
+        m = sum(s[f"{layer}_misses"] for s in stats)
+        agg[f"{layer}_hit_rate"] = h / (h + m) if h + m else 0.0
+    return res, elapsed, agg
+
+
+def _schedule_of(res) -> List[Tuple]:
+    return [(r.job, r.node, r.g, r.start) for r in res.records]
+
+
+def measure_case(
+    n_nodes: int, rate: float, window: int, n_jobs: int,
+    *, repeats: int = 3, with_jax: bool = True,
+) -> Dict[str, float]:
+    modes = {
+        "pr2": dict(engine="vector", cache=False, fast_status=False),
+        "cached": dict(engine="vector", cache=True, fast_status=True),
+    }
+    if with_jax:
+        modes["jax"] = dict(engine="jax", cache=True, fast_status=True)
+    out: Dict[str, float] = {"nodes": n_nodes, "rate": rate,
+                             "window": window, "jobs": n_jobs}
+    schedules = {}
+    # interleave the repeats so a noisy-neighbor slowdown hits every mode
+    # equally instead of biasing whichever ran during the bad window
+    best: Dict[str, Tuple] = {name: (float("inf"), None, {}) for name in modes}
+    for _ in range(repeats):
+        for name, kw in modes.items():
+            r, elapsed, a = _run_once(n_nodes, rate, window, n_jobs, **kw)
+            if elapsed < best[name][0]:
+                best[name] = (elapsed, r, a)
+    for name in modes:
+        t_best, res, agg = best[name]
+        schedules[name] = _schedule_of(res)
+        out[f"{name}_s"] = t_best
+        out[f"{name}_events_per_s"] = res.decision_events / t_best
+        out[f"{name}_decision_ms"] = (
+            1e3 * res.decision_time_s / res.decision_events
+        )
+        if name != "pr2":
+            out[f"{name}_hit_rate"] = agg["decision_hit_rate"]
+            out[f"{name}_oracle_hit_rate"] = agg["oracle_hit_rate"]
+            out[f"{name}_energy_J"] = res.total_energy
+    # parity gate: under the same load formula, the decision cache must not
+    # change the schedule, bit for bit (deterministic — hard assert)
+    r_pure, _, _ = _run_once(
+        n_nodes, rate, window, n_jobs,
+        engine="vector", cache=False, fast_status=True,
+    )
+    assert schedules["cached"] == _schedule_of(r_pure), (
+        "decision cache changed the schedule"
+    )
+    # the PR 2 status scan aggregates outstanding work in a different float
+    # association; ClusterState snaps drained accumulators to exact zero so
+    # routing ties agree in practice, but a last-ulp flip on a genuinely
+    # tied pair is possible — report it rather than flake the gate
+    out["pr2_schedule_identical"] = schedules["cached"] == schedules["pr2"]
+    if not out["pr2_schedule_identical"]:
+        print(
+            f"  note: nodes={n_nodes} rate={rate} window={window}: PR 2 "
+            "status-scan run routed a float-ulp tie differently"
+        )
+    out["speedup"] = out["pr2_s"] / out["cached_s"]
+    if with_jax:
+        out["jax_speedup"] = out["pr2_s"] / out["jax_s"]
+    return out
+
+
+def run(csv: Csv, verbose: bool = True, smoke: bool = False,
+        with_jax: Optional[bool] = None) -> Dict[Tuple, Dict]:
+    sweep = SMOKE_SWEEP if smoke else FULL_SWEEP
+    if with_jax is None:
+        with_jax = not smoke  # jit warmup noise has no place in CI smoke
+    results: Dict[Tuple, Dict] = {}
+    for n_nodes, rate, window, n_jobs in sweep:
+        r = measure_case(n_nodes, rate, window, n_jobs,
+                         repeats=2 if smoke else 3, with_jax=with_jax)
+        results[(n_nodes, rate, window)] = r
+        if verbose:
+            jax_part = (
+                f"  jax {r['jax_events_per_s']:7.0f} ev/s" if with_jax else ""
+            )
+            print(
+                f"throughput nodes={n_nodes} rate={rate:.2f}/s window={window}: "
+                f"pr2 {r['pr2_events_per_s']:7.0f} ev/s  "
+                f"cached {r['cached_events_per_s']:7.0f} ev/s "
+                f"({r['speedup']:4.1f}x, hit {r['cached_hit_rate']*100:4.1f}%)"
+                f"{jax_part}"
+            )
+        csv.add(
+            f"cluster_throughput_n{n_nodes}_r{rate:.2f}_w{window}",
+            1e6 / r["cached_events_per_s"],
+            f"speedup={r['speedup']:.1f}x;hit={r['cached_hit_rate']*100:.0f}%",
+        )
+    pod_key = POD[:3]
+    if pod_key in results and verbose:
+        sp = results[pod_key]["speedup"]
+        verdict = "MET" if sp >= MIN_SPEEDUP else "MISSED"
+        print(f"pod-scale target (M={M} K={K} nodes={POD[0]}): "
+              f"{sp:.1f}x (>= {MIN_SPEEDUP:.0f}x {verdict})")
+    return results
+
+
+def write_json(path: str, decision: Dict, throughput: Dict) -> None:
+    """Baseline perf snapshot (BENCH_decision.json) — the tracked trajectory
+    starts here; future PRs diff against these numbers."""
+
+    def tidy(d):
+        return {
+            "_".join(str(p) for p in k) if isinstance(k, tuple) else k: v
+            for k, v in d.items()
+        }
+
+    payload = {
+        "schema": "bench_decision/v1",
+        "pod_config": {"M": M, "K": K, "nodes": POD[0], "rate": POD[1],
+                       "window": POD[2], "jobs": POD[3]},
+        "decision_overhead": tidy(decision),
+        "cluster_throughput": tidy(throughput),
+    }
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny sweep + cache parity gate only (CI tripwire)",
+    )
+    ap.add_argument(
+        "--json", metavar="PATH",
+        help="also write a BENCH_decision.json baseline snapshot "
+             "(runs the decision-overhead smoke sweep for the other half)",
+    )
+    args = ap.parse_args()
+    c = Csv()
+    res = run(c, smoke=args.smoke)
+    c.emit()
+    if args.json:
+        from benchmarks import bench_decision_overhead
+
+        dec = bench_decision_overhead.run(Csv(), verbose=False, smoke=args.smoke)
+        write_json(args.json, dec, res)
+        print(f"baseline JSON -> {args.json}")
+    if not args.smoke:
+        sp = res[POD[:3]]["speedup"]
+        if sp < MIN_SPEEDUP:
+            raise SystemExit(
+                f"pod-scale throughput target missed: {sp:.1f}x < "
+                f"{MIN_SPEEDUP:.0f}x vs the PR 2 baseline"
+            )

@@ -7,6 +7,7 @@ Individual benchmarks are importable and runnable standalone:
 from __future__ import annotations
 
 import argparse
+import os
 
 
 def main() -> None:
@@ -17,6 +18,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_cluster,
+        bench_cluster_throughput,
         bench_decision_overhead,
         bench_fig1_scaling,
         bench_fig2_tradeoff,
@@ -40,11 +42,23 @@ def main() -> None:
     bench_table2_choices.run(csv, verbose=verbose)
     bench_fig9_perf_loss.run(csv, verbose=verbose)
     bench_overhead.run(csv, verbose=verbose)
-    bench_decision_overhead.run(csv, verbose=verbose, smoke=args.quick)
+    decision = bench_decision_overhead.run(csv, verbose=verbose, smoke=args.quick)
     bench_roofline.run(csv, verbose=verbose)
     bench_tpu_pod.run(csv, verbose=verbose)
     bench_sensitivity.run(csv, verbose=verbose)
     bench_cluster.run(csv, verbose=verbose)
+    throughput = bench_cluster_throughput.run(csv, verbose=verbose, smoke=args.quick)
+
+    # perf-trajectory snapshot (ISSUE 3): decision overhead + throughput.
+    # Only full runs refresh the committed baseline (benchmarks/, not the
+    # gitignored results/) — smoke numbers are a tripwire, not a trajectory.
+    if not args.quick:
+        json_path = os.path.join(
+            os.path.dirname(__file__), "BENCH_decision.json"
+        )
+        bench_cluster_throughput.write_json(json_path, decision, throughput)
+        if verbose:
+            print(f"perf baseline -> {json_path}")
 
     print("\nname,us_per_call,derived")
     csv.emit()

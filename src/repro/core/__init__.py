@@ -16,13 +16,19 @@ from repro.core.arrivals import (
 from repro.core.baselines import Marble, SequentialMax, SequentialOptimal
 from repro.core.cluster import (
     Cluster,
+    ClusterState,
     EnergyAwareDispatcher,
     LeastLoadedDispatcher,
     NodeSpec,
     RoundRobinDispatcher,
 )
 from repro.core.ecosched import EcoSched
-from repro.core.engine import PlacementOracle, ScoredBatch, enumerate_scored
+from repro.core.engine import (
+    DecisionCache,
+    PlacementOracle,
+    ScoredBatch,
+    enumerate_scored,
+)
 from repro.core.metrics import (
     edp_saving,
     energy_saving,
@@ -48,6 +54,8 @@ __all__ = [
     "Arrival",
     "Cluster",
     "ClusterResult",
+    "ClusterState",
+    "DecisionCache",
     "EcoSched",
     "EnergyAwareDispatcher",
     "JobProfile",

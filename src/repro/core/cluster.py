@@ -14,6 +14,19 @@ two-level policy:
 Per-node accounting reuses ``NodeSim`` verbatim, so a 1-node cluster
 reproduces ``simulate()``'s energy and makespan exactly
 (regression-locked in tests/test_cluster.py).
+
+Routing is array-backed (ISSUE 3): ``ClusterState`` holds preallocated
+numpy columns — per-node outstanding-work sums updated in place on
+launch/complete, and per-(node, app) feasibility/best-mode tables built
+once per run — so the built-in dispatchers route through
+``route_indexed`` without materializing a ``NodeStatus`` list per arrival.
+Custom dispatchers that only implement ``route(arr, statuses)`` still
+work: the legacy list is built on demand, its ``outstanding_s`` read from
+the same ``ClusterState``, so both protocols see identical load values
+and make identical choices (locked in tests/test_decision_cache.py).
+``simulate(fast_status=False)`` switches to the PR-2 per-arrival Python
+scan — kept as the reference implementation and the benchmark baseline
+(benchmarks/bench_cluster_throughput.py).
 """
 from __future__ import annotations
 
@@ -21,8 +34,10 @@ import heapq
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.arrivals import Arrival
-from repro.core.simulator import _ARRIVAL, _DONE, Node, NodeSim
+from repro.core.simulator import _ARRIVAL, _DONE, Node, NodeSim, _auto_max_events
 from repro.core.types import ClusterResult, JobProfile, NodeView, RunningJob
 from repro.roofline.hw import ChipSpec
 
@@ -56,8 +71,90 @@ class NodeStatus:
         return prof is not None and min(prof.feasible_counts) <= self.spec.units
 
 
+class ClusterState:
+    """Preallocated array view of the cluster for vectorized dispatch.
+
+    Replaces the per-arrival ``statuses()`` list-of-dataclass scan: the
+    drain proxy becomes three per-node accumulators updated in place —
+
+        outstanding·units = max(Σ end·g − now·Σ g, 0) + Σ waiting min-work
+
+    (every running job's ``end`` is in the future, so the running term
+    equals Σ (end − now)·g) — and per-(node, app) feasibility and
+    best-mode tables are built **once per run** instead of being rebuilt
+    from ``JobProfile`` dicts in the routing hot path.
+    """
+
+    def __init__(
+        self,
+        specs: Sequence[NodeSpec],
+        app_truth: Dict[str, Dict[str, JobProfile]],
+        apps: Sequence[str],
+    ):
+        self.names = [s.name for s in specs]
+        self.index = {n: i for i, n in enumerate(self.names)}
+        self.app_index = {a: i for i, a in enumerate(apps)}
+        N, A = len(specs), len(apps)
+        self.units = np.array([float(s.units) for s in specs])
+        self.fits = np.zeros((N, A), dtype=bool)
+        self.min_unit_s = np.zeros((N, A))  # cheapest busy unit-seconds
+        self.e_best = np.ones((N, A))  # min-energy mode: energy (J)
+        self.t_best = np.ones((N, A))  # min-energy mode: runtime (s)
+        for i, s in enumerate(specs):
+            truth = app_truth[s.name]
+            for a, j in self.app_index.items():
+                prof = truth.get(a)
+                if prof is None:
+                    continue
+                counts = [g for g in prof.feasible_counts if g <= s.units]
+                if not counts:
+                    continue
+                self.fits[i, j] = True
+                self.min_unit_s[i, j] = min(prof.runtime[g] * g for g in counts)
+                e, t = min((prof.energy(g), prof.runtime[g]) for g in counts)
+                self.e_best[i, j], self.t_best[i, j] = e, t
+        # in-place accumulators (launch/complete update these, not scans);
+        # the counts let drained accumulators snap back to exactly 0.0 —
+        # equal empty nodes must compare *equal*, not within float drift,
+        # or dispatcher index tie-breaks would depend on churn history
+        self.sum_end_g = np.zeros(N)  # Σ end·g over running jobs
+        self.sum_g = np.zeros(N)  # Σ g over running jobs
+        self.wait_units_s = np.zeros(N)  # Σ min-work over waiting jobs
+        self.n_running = np.zeros(N, dtype=np.int64)
+        self.n_waiting = np.zeros(N, dtype=np.int64)
+
+    def on_arrive(self, ni: int, ai: int) -> None:
+        self.wait_units_s[ni] += self.min_unit_s[ni, ai]
+        self.n_waiting[ni] += 1
+
+    def on_launch(self, ni: int, ai: int, end: float, g: int) -> None:
+        self.wait_units_s[ni] -= self.min_unit_s[ni, ai]
+        self.n_waiting[ni] -= 1
+        if self.n_waiting[ni] == 0:
+            self.wait_units_s[ni] = 0.0
+        self.sum_end_g[ni] += end * g
+        self.sum_g[ni] += g
+        self.n_running[ni] += 1
+
+    def on_complete(self, ni: int, end: float, g: int) -> None:
+        self.sum_end_g[ni] -= end * g
+        self.sum_g[ni] -= g
+        self.n_running[ni] -= 1
+        if self.n_running[ni] == 0:
+            self.sum_end_g[ni] = 0.0
+            self.sum_g[ni] = 0.0
+
+    def outstanding(self, now: float) -> np.ndarray:
+        """Per-node committed busy unit-seconds / units (drain proxy)."""
+        running = np.maximum(self.sum_end_g - now * self.sum_g, 0.0)
+        return (running + self.wait_units_s) / self.units
+
+
 # ---------------------------------------------------------------------------
-# Dispatchers (cluster level — defer launch decisions to the node policy)
+# Dispatchers (cluster level — defer launch decisions to the node policy).
+# ``route_indexed(ai, state, now) -> node index`` is the array fast path
+# (returns -1 when no node fits); ``route(arr, statuses)`` is the legacy
+# list protocol, kept for custom dispatchers and the PR-2 baseline mode.
 # ---------------------------------------------------------------------------
 
 
@@ -72,6 +169,16 @@ class RoundRobinDispatcher:
 
     def reset(self) -> None:
         self._i = 0
+
+    def route_indexed(self, ai: int, state: ClusterState, now: float) -> int:
+        n = len(state.names)
+        order = (self._i + np.arange(n)) % n
+        hits = np.flatnonzero(state.fits[order, ai])
+        if hits.size == 0:
+            return -1
+        k = int(hits[0])
+        self._i = (self._i + k + 1) % n
+        return int(order[k])
 
     def route(self, arr: Arrival, statuses: Sequence[NodeStatus]) -> str:
         n = len(statuses)
@@ -88,6 +195,11 @@ class LeastLoadedDispatcher:
 
     def name(self) -> str:
         return "least-loaded"
+
+    def route_indexed(self, ai: int, state: ClusterState, now: float) -> int:
+        load = np.where(state.fits[:, ai], state.outstanding(now), np.inf)
+        i = int(np.argmin(load))  # ties -> lowest index, like the list scan
+        return i if state.fits[i, ai] else -1
 
     def route(self, arr: Arrival, statuses: Sequence[NodeStatus]) -> str:
         best = None
@@ -114,6 +226,15 @@ class EnergyAwareDispatcher:
 
     def name(self) -> str:
         return "eco"
+
+    def route_indexed(self, ai: int, state: ClusterState, now: float) -> int:
+        out = state.outstanding(now)
+        t = state.t_best[:, ai]
+        score = np.where(
+            state.fits[:, ai], state.e_best[:, ai] * (out + t) / t, np.inf
+        )
+        i = int(np.argmin(score))  # ties -> lowest index, like the list scan
+        return i if state.fits[i, ai] else -1
 
     def route(self, arr: Arrival, statuses: Sequence[NodeStatus]) -> str:
         best = None
@@ -174,10 +295,14 @@ class Cluster:
         stream: Sequence[Arrival],
         *,
         charge_profiling: bool = False,
-        max_events: int = 1_000_000,
+        max_events: Optional[int] = None,
+        fast_status: bool = True,
     ) -> ClusterResult:
         # stable on t only: same-instant arrivals keep submission order
         stream = sorted(stream, key=lambda a: a.t)
+        if max_events is None:
+            # same 50x-per-job bound as simulate(), cluster-sized floor
+            max_events = _auto_max_events(len(stream), floor=1_000_000)
         if hasattr(self.dispatcher, "reset"):
             self.dispatcher.reset()  # stateful dispatchers restart per run
         if len({a.name for a in stream}) != len(stream):
@@ -187,18 +312,19 @@ class Cluster:
             s.name: self.truth_for(s) for s in self.specs
         }
         app_of = {a.name: a.app for a in stream}
-        # per-node per-app minimum busy unit-seconds (drain proxy for the
-        # dispatcher's outstanding-work estimate) — hoisted out of the
-        # per-arrival statuses() hot path, which previously recomputed the
-        # min over every waiting job's whole runtime table on every event
-        min_unit_s: Dict[str, Dict[str, float]] = {}
-        for s in self.specs:
-            table: Dict[str, float] = {}
-            for app, prof in app_truth[s.name].items():
-                fits = [prof.runtime[g] * g for g in prof.runtime if g <= s.units]
-                if fits:  # apps that don't fit are never routed here
-                    table[app] = min(fits)
-            min_unit_s[s.name] = table
+        spec_of = {s.name: s for s in self.specs}
+        apps = sorted({a.app for a in stream})
+        state = ClusterState(self.specs, app_truth, apps)
+        # per-node per-app minimum busy unit-seconds (legacy-scan form of
+        # ClusterState.min_unit_s, for the PR-2 baseline status path)
+        min_unit_s: Dict[str, Dict[str, float]] = {
+            s.name: {
+                app: state.min_unit_s[state.index[s.name], state.app_index[app]]
+                for app in apps
+                if state.fits[state.index[s.name], state.app_index[app]]
+            }
+            for s in self.specs
+        }
         sims: Dict[str, NodeSim] = {}
         for s in self.specs:
             # instance-keyed view of the hardware truth for this stream;
@@ -218,36 +344,54 @@ class Cluster:
             )
 
         def statuses(now: float) -> List[NodeStatus]:
+            outs = state.outstanding(now) if fast_status else None
             out = []
-            for s in self.specs:
+            for i, s in enumerate(self.specs):
                 sim = sims[s.name]
-                # remaining work vs the *global* clock — a node's local sim.t
-                # lags until its next event, which would inflate its load
-                mins = min_unit_s[s.name]
-                outstanding = sum(
-                    max(r.end - now, 0.0) * r.g for r in sim.running
-                ) + sum(mins[app_of[j]] for j in sim.waiting)
+                if fast_status:
+                    outstanding = float(outs[i])
+                else:
+                    # PR-2 reference scan: remaining work vs the *global*
+                    # clock — a node's local sim.t lags until its next
+                    # event, which would inflate its load
+                    mins = min_unit_s[s.name]
+                    outstanding = (
+                        sum(max(r.end - now, 0.0) * r.g for r in sim.running)
+                        + sum(mins[app_of[j]] for j in sim.waiting)
+                    ) / s.units
                 out.append(
                     NodeStatus(
                         spec=s,
                         view=sim.node_view(),
                         backlog=list(sim.waiting),
                         truth=app_truth[s.name],
-                        outstanding_s=outstanding / s.units,
+                        outstanding_s=outstanding,
                     )
                 )
             return out
 
+        vector_route = fast_status and hasattr(self.dispatcher, "route_indexed")
+
         def route(arr: Arrival, t: float) -> str:
-            nm = self.dispatcher.route(arr, statuses(t))
-            spec = next(s for s in self.specs if s.name == nm)
-            prof = app_truth[nm].get(arr.app)
-            if prof is None or min(prof.feasible_counts) > spec.units:
+            ai = state.app_index[arr.app]
+            if vector_route:
+                ni = self.dispatcher.route_indexed(ai, state, t)
+                if ni < 0:
+                    raise ValueError(
+                        f"no node can fit any feasible mode of {arr.app}"
+                    )
+                nm = state.names[ni]
+            else:
+                nm = self.dispatcher.route(arr, statuses(t))
+                ni = state.index[nm]
+            # fits == profile present with a mode that fits the node
+            if not state.fits[ni, ai]:
                 raise ValueError(
                     f"{self.dispatcher.name()} routed {arr.app} to {nm} "
-                    f"(units={spec.units}) with no feasible mode"
+                    f"(units={spec_of[nm].units}) with no feasible mode"
                 )
             sims[nm].arrive(arr.name, t)
+            state.on_arrive(ni, ai)
             return nm
 
         heap: List[Tuple[float, int, int, object]] = []
@@ -261,7 +405,9 @@ class Cluster:
 
         def push_launched(launched: List[RunningJob], node_name: str) -> None:
             nonlocal seq
+            ni = state.index[node_name]
             for rj in launched:
+                state.on_launch(ni, state.app_index[app_of[rj.job]], rj.end, rj.g)
                 heapq.heappush(heap, (rj.end, _DONE, seq, (node_name, rj)))
                 seq += 1
 
@@ -288,6 +434,7 @@ class Cluster:
             else:
                 nm, rj = payload
                 sims[nm].complete(rj)
+                state.on_complete(state.index[nm], rj.end, rj.g)
                 if sims[nm].waiting:
                     push_launched(sims[nm].invoke_policy(), nm)
 

@@ -15,8 +15,20 @@ Scoring backends (``engine=``):
     (``repro.core.engine``): one vector expression scores the whole
     candidate space, bitmask replay checks placement; the decision stays
     lightweight at pod scale (M=16, K=4, 17-job windows).
+  * ``"jax"`` — same cached enumeration, but the Eq. (1) score reduction
+    and masked argmin run through the jitted JAX/Pallas kernel
+    (``repro.kernels.score_reduce``); parity-locked to 1e-6 against the
+    numpy path in tests/test_score_reduce.py.
   * ``"python"`` — the pure-Python reference (``repro.core.actions``),
     parity-locked against the engine in tests/test_engine.py.
+
+Repeated decisions are incremental (``cache=True``, the default for the
+array backends): τ-filtered specs are computed once per job, and a
+``DecisionCache`` reuses spec tables, placement-oracle memos and whole
+scored batches across events keyed on name-free window structure + the
+placement bitmask — consecutive events that share a window, and instances
+of the same application, skip enumeration entirely.  Caching is pure: the
+schedule is bit-identical with the cache off (tests/test_decision_cache.py).
 
 Launches are returned largest-count first — the same order the
 feasibility replay allocated them — so the simulator's placement is
@@ -31,10 +43,11 @@ Beyond-paper options (all default-off; §Perf ablations):
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.actions import enumerate_actions
-from repro.core.engine import enumerate_scored
+from repro.core.engine import DecisionCache, _mask_of, enumerate_scored
 from repro.core.score import tau_filter
 from repro.core.types import JobSpec, Launch, NodeView
 
@@ -51,8 +64,9 @@ class EcoSched:
         beam: int = 64,
         lookahead: float = 0.0,
         engine: str = "vector",
+        cache: bool = True,
     ):
-        if engine not in ("vector", "python"):
+        if engine not in ("vector", "python", "jax"):
             raise ValueError(f"unknown scoring engine {engine!r}")
         self.perf_model = perf_model
         self.lam = lam
@@ -62,46 +76,135 @@ class EcoSched:
         self.beam = beam
         self.lookahead = lookahead
         self.engine = engine
+        self._cache = DecisionCache() if (cache and engine != "python") else None
+        self._filtered: Dict[str, JobSpec] = {}  # job -> τ-filtered spec
+        # launch-level memo: decision state -> [(window position, g)].  The
+        # chosen action is a pure function of the (name-free) decision
+        # state, so a repeated state skips scoring outright and only
+        # rebinds window positions to the current job names.
+        self._launch_memo: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+        self._launch_epoch = 0
+        self.launch_hits = 0
 
     def name(self) -> str:
         return "ecosched" if not self.lookahead else "ecosched+lookahead"
+
+    def cache_stats(self) -> Dict[str, float]:
+        """Decision-cache hit/miss counters (empty when caching is off).
+        ``event_hit_rate`` counts a scheduling event as a hit when either
+        the launch memo or the scored-batch layer served it."""
+        if self._cache is None:
+            return {}
+        s = self._cache.stats()
+        s["launch_hits"] = self.launch_hits
+        h = self.launch_hits + s["decision_hits"]
+        m = s["decision_misses"]
+        s["event_hit_rate"] = h / (h + m) if h + m else 0.0
+        return s
+
+    def _spec(self, job: str) -> JobSpec:
+        """τ-filtered Phase-I spec, computed once per job and reused across
+        events (the estimates themselves are per-job constants, §III-B)."""
+        s = self._filtered.get(job)
+        if s is None:
+            if len(self._filtered) >= 100_000:
+                self._filtered.clear()  # bound endless-stream growth
+            s = tau_filter(self.perf_model.spec(job), self.tau)
+            self._filtered[job] = s
+        return s
 
     def on_event(self, view: NodeView, waiting: Sequence[str]) -> List[Launch]:
         window_jobs = list(waiting[: self.window] if self.window else waiting)
         if not window_jobs or view.free_domains <= 0 or view.free_units <= 0:
             return []
-        specs = [tau_filter(self.perf_model.spec(j), self.tau) for j in window_jobs]
+        specs = [self._spec(j) for j in window_jobs]
         # a job whose mode list is empty (nothing feasible survives the
         # filter) can never launch; drop it rather than crash the scorer
         specs = [s for s in specs if s.modes]
         if not specs:
             return []
+        key = None
+        if self._cache is not None and view.domain_jobs:
+            if self._launch_epoch != self._cache.epoch:
+                # token tables were reset; stale token keys could alias
+                self._launch_memo.clear()
+                self._launch_epoch = self._cache.epoch
+            key = (
+                tuple(self._cache.spec_token(s) for s in specs),
+                _mask_of(view.free_map),
+                tuple(view.domain_jobs),
+                bool(view.running),  # the deadlock guard reads this
+                view.total_units,
+                view.domains,
+            )
+            hit = self._launch_memo.get(key)
+            if hit is not None:
+                self._launch_memo.move_to_end(key)
+                self.launch_hits += 1
+                return [Launch(job=specs[p].name, g=g) for p, g in hit]
         if self.engine == "python":
             action = self._best_python(specs, view)
+        elif self.engine == "jax":
+            action = self._best_jax(specs, view)
         else:
             action = self._best_vector(specs, view)
-        launches = [Launch(job=sp.name, g=m.g) for sp, m in action]
         # descending count — the order the feasibility replay allocated
-        launches.sort(key=lambda ln: -ln.g)
-        return launches
+        pos_of = {id(sp): i for i, sp in enumerate(specs)}
+        pairs = sorted(
+            ((pos_of[id(sp)], m.g) for sp, m in action),
+            key=lambda pg: -pg[1],
+        )
+        if key is not None:
+            self._launch_memo[key] = tuple(pairs)
+            if len(self._launch_memo) > 8192:
+                self._launch_memo.popitem(last=False)
+        return [Launch(job=specs[p].name, g=g) for p, g in pairs]
+
+    def _enumerate(self, specs, view: NodeView):
+        # free_map is only read (mask/bitmask replay) — no defensive copy
+        return enumerate_scored(
+            specs, view, view.free_map,
+            lam=self.lam, exact_limit=self.exact_limit, beam=self.beam,
+            cache=self._cache,
+        )
 
     def _best_vector(self, specs, view: NodeView):
         try:
-            batch = enumerate_scored(
-                specs, view, list(view.free_map),
-                lam=self.lam, exact_limit=self.exact_limit, beam=self.beam,
-            )
+            batch = self._enumerate(specs, view)
         except OverflowError:
             # windows too wide for the engine's int64 action-set keys
             # (never the pod-scale target); the reference path has no limit
             return self._best_python(specs, view)
-        scores = batch.scores
-        if self.lookahead:
-            scores = scores + self.lookahead * batch.spread
-        i = batch.best_index(scores)
-        if batch.n_jobs[i] == 0 and not view.running:
-            j = batch.best_index(scores, nonempty=True)
+        i = batch.best_cached(self.lookahead)
+        # row 0 is always the empty action; any other row is non-empty
+        if i == 0 and not view.running:
+            j = batch.best_cached(self.lookahead, nonempty=True)
             if j is not None:
+                i = j
+        return batch.action(i)
+
+    def _best_jax(self, specs, view: NodeView):
+        try:
+            batch = self._enumerate(specs, view)
+        except OverflowError:
+            return self._best_python(specs, view)
+        from repro.kernels.score_reduce import score_reduce
+
+        dev, g, n = batch.padded_cols()
+        bias = (self.lookahead * batch.spread) if self.lookahead else None
+        _, i = score_reduce(
+            dev, g, n,
+            lam=self.lam, g_free=view.free_units, M=view.total_units, bias=bias,
+        )
+        if i < 0:  # unreachable: the empty action is always feasible
+            return ()
+        if i == 0 and not view.running:  # row 0 is the empty action
+            _, j = score_reduce(
+                dev, g, n,
+                lam=self.lam, g_free=view.free_units, M=view.total_units,
+                bias=bias, mask=batch.n_jobs > 0,
+            )
+            if j >= 0:
                 i = j
         return batch.action(i)
 

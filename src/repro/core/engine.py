@@ -22,10 +22,18 @@ order, identical argmin action, scores within 1e-9 (tests/test_engine.py
 property-checks this over seeded random node states).  ``EcoSched``
 consumes it through ``enumerate_scored`` + ``ScoredBatch.best_index`` so
 the argmin never materializes Python tuples for the full action space.
+
+At cluster scale the same decision recurs across events; ``DecisionCache``
+memoizes spec tables, placement oracles and whole scored batches on
+name-free structural keys so repeated decisions cost a dict lookup
+(ISSUE 3).  ``ScoredBatch.padded_cols`` exposes the candidate matrices the
+``kernels/score_reduce`` JAX/Pallas backend reduces on device.
 """
 from __future__ import annotations
 
+import copy
 import itertools
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -37,6 +45,43 @@ from repro.core.types import JobSpec, ModeEstimate, NodeView
 # Cap on elements per vectorized exact-path chunk; bounds peak memory when
 # padded mode grids are much larger than the true action space.
 _CHUNK_ELEMS = 2_000_000
+
+
+def _mask_of(free_map: Sequence[bool]) -> int:
+    """Free map as one integer (bit u set = unit u free)."""
+    mask = 0
+    for u, f in enumerate(free_map):
+        if f:
+            mask |= 1 << u
+    return mask
+
+
+# Window-shape-independent enumeration skeletons, shared across all spec
+# tables: job combinations per (J, s) and padded mode grids per (mm, s).
+_COMBO_MEMO: Dict[Tuple[int, int], np.ndarray] = {}
+_GRID_MEMO: Dict[Tuple[int, int], np.ndarray] = {}
+
+
+def _combos_of(J: int, s: int) -> np.ndarray:
+    key = (J, s)
+    hit = _COMBO_MEMO.get(key)
+    if hit is None:
+        if len(_COMBO_MEMO) > 256:
+            _COMBO_MEMO.clear()
+        hit = _COMBO_MEMO[key] = np.array(
+            list(itertools.combinations(range(J), s)), dtype=np.int64
+        )
+    return hit
+
+
+def _grid_of(mm: int, s: int) -> np.ndarray:
+    key = (mm, s)
+    hit = _GRID_MEMO.get(key)
+    if hit is None:
+        if len(_GRID_MEMO) > 256:
+            _GRID_MEMO.clear()
+        hit = _GRID_MEMO[key] = np.indices((mm,) * s).reshape(s, -1).T
+    return hit
 
 
 class PlacementOracle:
@@ -58,14 +103,28 @@ class PlacementOracle:
         domains: int,
         domain_jobs: Optional[Sequence[int]] = None,
     ):
-        self.units = len(free_map)
+        self._setup(_mask_of(free_map), len(free_map), domains, domain_jobs)
+
+    @classmethod
+    def from_mask(
+        cls,
+        mask: int,
+        units: int,
+        domains: int,
+        domain_jobs: Optional[Sequence[int]] = None,
+    ) -> "PlacementOracle":
+        """Construct from an already-computed free-map bitmask (the
+        ``DecisionCache`` key form, so cached oracles skip the bit loop)."""
+        o = cls.__new__(cls)
+        o._setup(mask, units, domains, domain_jobs)
+        return o
+
+    def _setup(self, mask, units, domains, domain_jobs):
+        self.units = units
         self.domains = domains
-        self.mask0 = 0
-        for u, f in enumerate(free_map):
-            if f:
-                self.mask0 |= 1 << u
+        self.mask0 = mask
         self.occ0 = tuple(domain_jobs) if domain_jobs else (0,) * domains
-        self._dom = [u * domains // self.units for u in range(self.units)]
+        self._dom = [u * domains // units for u in range(units)]
         self._memo: Dict[Tuple[int, ...], bool] = {}
 
     def placeable(self, counts_desc: Tuple[int, ...]) -> bool:
@@ -107,7 +166,14 @@ class PlacementOracle:
 
 
 class _SpecTable:
-    """Column-oriented view of one scheduling window's τ-filtered specs."""
+    """Column-oriented view of one scheduling window's τ-filtered specs.
+
+    Everything that depends only on the window *structure* — not on the
+    node's placement state — lives here, including the exact path's full
+    mode-valid candidate enumeration (``candidates``).  The table is what
+    ``DecisionCache`` shares across events, so all of it is computed once
+    per distinct window structure, not once per event.
+    """
 
     def __init__(self, specs: Sequence[JobSpec]):
         self.specs = list(specs)
@@ -135,6 +201,263 @@ class _SpecTable:
         self.pair_g = self.mode_g[self.pair_job, self.pair_mode]
         self.pair_dev = self.mode_dev[self.pair_job, self.pair_mode]
         self.pair_load = self.mode_load[self.pair_job, self.pair_mode]
+        self._cand: Dict[int, Tuple[np.ndarray, ...]] = {}
+        self._cap: "OrderedDict[Tuple[int, int], Optional[Tuple]]" = OrderedDict()
+        self._est: Dict[Tuple[int, int], int] = {}
+
+    def space_estimate(self, k_avail: int, exact_limit: int) -> int:
+        """``actions._space_estimate`` memoized — it walks every job-count
+        combination, which is itself non-trivial per event at pod scale."""
+        key = (k_avail, exact_limit)
+        hit = self._est.get(key)
+        if hit is None:
+            hit = self._est[key] = _space_estimate(
+                [len(s.modes) for s in self.specs], k_avail, exact_limit
+            )
+        return hit
+
+    def candidates(self, s: int) -> Tuple[np.ndarray, ...]:
+        """All mode-valid size-``s`` candidates in reference order, with
+        their per-candidate reductions precomputed (memoized per size):
+
+            (job_mat (C, s), mode_mat (C, s), counts (C, s), tot (C,),
+             dev_sum (C,), load_max (C,), load_min (C,))
+
+        Only the exact path calls this, so C is bounded by ``exact_limit``
+        (``_space_estimate`` counts exactly these rows).  The caller applies
+        the state-dependent filters (``tot <= g_free``, placement) — both
+        preserve this row order, which is the reference iteration order.
+        """
+        hit = self._cand.get(s)
+        if hit is not None:
+            return hit
+        J = len(self.specs)
+        mm = self.max_modes
+        combos = _combos_of(J, s)  # (C, s) in reference order
+        # (P, s) padded mode-index grid, last index fastest = product order
+        grid = _grid_of(mm, s)
+        P = len(grid)
+        chunk = max(1, _CHUNK_ELEMS // max(P * s, 1))
+        parts: List[Tuple[np.ndarray, np.ndarray]] = []
+        for c0 in range(0, len(combos), chunk):
+            cs = combos[c0 : c0 + chunk]
+            jm = cs[:, None, :]  # (c, 1, s)
+            gb = grid[None, :, :]  # (1, P, s)
+            valid = (gb < self.mode_count[jm]).all(axis=2)  # (c, P)
+            ci, pi = np.nonzero(valid)  # combo-major, product-minor
+            if ci.size:
+                parts.append((cs[ci], grid[pi]))
+        if parts:
+            job_mat = np.concatenate([p[0] for p in parts])
+            mode_mat = np.concatenate([p[1] for p in parts])
+        else:
+            job_mat = np.zeros((0, s), dtype=np.int64)
+            mode_mat = np.zeros((0, s), dtype=np.int64)
+        counts = self.mode_g[job_mat, mode_mat]
+        loads = self.mode_load[job_mat, mode_mat]
+        out = (
+            job_mat,
+            mode_mat,
+            counts,
+            counts.sum(axis=1),
+            self.mode_dev[job_mat, mode_mat].sum(axis=1),
+            loads.max(axis=1, initial=-np.inf),
+            loads.min(axis=1, initial=np.inf),
+        )
+        self._cand[s] = out
+        return out
+
+    def capacity(self, s: int, g_free: int) -> Optional[Tuple]:
+        """``candidates(s)`` filtered to ``tot <= g_free``, with the count
+        multisets pre-extracted for the placement oracle (memoized per
+        (s, g_free) — g_free only takes node-fill values, so the layer is
+        small).  Returns None when nothing fits, else
+
+            (job_mat, mode_mat, counts, tot, dev_sum, load_max, load_min,
+             multisets, inverse)
+
+        where ``multisets[k]`` is the k-th distinct descending count tuple
+        and ``inverse`` maps rows to multisets — a decision needs only one
+        (memoized) oracle verdict per multiset, not per row.
+        """
+        key = (s, g_free)
+        if key in self._cap:
+            self._cap.move_to_end(key)
+            return self._cap[key]
+        job_mat, mode_mat, counts, tot, dev_sum, lmax, lmin = self.candidates(s)
+        fit = tot <= g_free
+        if not fit.any():
+            entry = None
+        else:
+            job_mat, mode_mat, counts = job_mat[fit], mode_mat[fit], counts[fit]
+            counts_desc = -np.sort(-counts, axis=1)
+            # injective multiset code: base just above the largest count
+            base = int(self.pair_g.max()) + 1 if len(self.pair_g) else 1
+            weights = base ** np.arange(counts_desc.shape[1], dtype=np.int64)
+            codes = counts_desc @ weights
+            _, first, inv = np.unique(codes, return_index=True, return_inverse=True)
+            multisets = [
+                tuple(int(x) for x in counts_desc[i]) for i in first
+            ]
+            entry = (
+                job_mat, mode_mat, counts, tot[fit], dev_sum[fit],
+                lmax[fit], lmin[fit], multisets, inv,
+            )
+        self._cap[key] = entry
+        if len(self._cap) > 64:
+            self._cap.popitem(last=False)
+        return entry
+
+
+class DecisionCache:
+    """Cross-event reuse for the repeated-decision hot path.
+
+    Cluster-scale sweeps make the *same* decision over and over: consecutive
+    scheduling events share windows, free maps recur as jobs cycle, and
+    instances of one application carry identical Phase-I mode structures.
+    Three LRU layers exploit that, all keyed on **structural** identity (job
+    names stripped — the scored action space depends on names only through
+    window position):
+
+      * ``table``    — window structure -> ``_SpecTable``,
+      * ``oracle``   — (units, domains, free-mask, occupancy) ->
+                       ``PlacementOracle``; its count-multiset memo persists
+                       across events instead of being rebuilt per invocation,
+      * ``decision`` — (window structure, free-mask, occupancy, scoring
+                       params) -> complete ``ScoredBatch``; a hit skips
+                       enumeration, placement replay and scoring outright
+                       and just rebinds the batch to the current specs.
+
+    Caching is *pure*: a hit returns arrays bit-identical to a rebuild
+    (locked in tests/test_decision_cache.py), so schedules and energies are
+    unchanged.  One instance per policy (per node) — keys never mix node
+    geometries.
+    """
+
+    def __init__(
+        self,
+        max_tables: int = 512,
+        max_oracles: int = 4096,
+        max_decisions: int = 8192,
+        max_structs: int = 100_000,
+    ):
+        self.max_tables = max_tables
+        self.max_oracles = max_oracles
+        self.max_decisions = max_decisions
+        self.max_structs = max_structs
+        # bumped whenever the token tables reset; anything keyed on tokens
+        # (here and in EcoSched's launch memo) must be dropped with them
+        self.epoch = 0
+        self._tables: "OrderedDict[Tuple, _SpecTable]" = OrderedDict()
+        self._oracles: "OrderedDict[Tuple, PlacementOracle]" = OrderedDict()
+        self._decisions: "OrderedDict[Tuple, ScoredBatch]" = OrderedDict()
+        # structure interning: each distinct per-job mode structure gets a
+        # small int token, so window keys are tuples of ints (fast to hash
+        # in the per-event hot path) instead of nested float tuples.  The
+        # token table pins its specs so id() stays unique while cached.
+        self._spec_tokens: Dict[int, Tuple[JobSpec, int]] = {}
+        self._struct_ids: Dict[Tuple, int] = {}
+        self.table_hits = self.table_misses = 0
+        self.oracle_hits = self.oracle_misses = 0
+        self.decision_hits = self.decision_misses = 0
+
+    @staticmethod
+    def structure_of(spec: JobSpec) -> Tuple:
+        """Name-free mode structure: the (g, t_norm, e_norm) tuples —
+        everything Eq. (1) scoring and placement can observe of a job."""
+        return tuple((m.g, m.t_norm, m.e_norm) for m in spec.modes)
+
+    def spec_token(self, spec: JobSpec) -> int:
+        entry = self._spec_tokens.get(id(spec))
+        if entry is not None and entry[0] is spec:
+            return entry[1]
+        if len(self._spec_tokens) >= self.max_structs:
+            self._reset_structures()  # bounds noisy-model per-instance growth
+        struct = self.structure_of(spec)
+        tok = self._struct_ids.setdefault(struct, len(self._struct_ids))
+        self._spec_tokens[id(spec)] = (spec, tok)
+        return tok
+
+    def _reset_structures(self) -> None:
+        """Drop the token tables and every token-keyed store.  Tokens are
+        only unique within one epoch, so reusing a stale token-keyed entry
+        after a reset could alias two different windows."""
+        self._spec_tokens.clear()
+        self._struct_ids.clear()
+        self._tables.clear()
+        self._decisions.clear()
+        self.epoch += 1
+
+    def window_key(self, specs: Sequence[JobSpec]) -> Tuple:
+        """Name-free window structure as a tuple of interned tokens."""
+        return tuple(self.spec_token(s) for s in specs)
+
+    def _get(self, store: OrderedDict, key):
+        hit = store.get(key)
+        if hit is not None:
+            store.move_to_end(key)
+        return hit
+
+    def _put(self, store: OrderedDict, key, value, cap: int) -> None:
+        store[key] = value
+        if len(store) > cap:
+            store.popitem(last=False)
+
+    def table(self, key: Tuple, specs: Sequence[JobSpec]) -> Tuple["_SpecTable", bool]:
+        """Returns (table, warm): ``warm`` is False on first sight of this
+        window structure — callers then prefer the streaming enumeration,
+        so one-shot structures never pay for reusable materialization."""
+        t = self._get(self._tables, key)
+        if t is None:
+            self.table_misses += 1
+            t = _SpecTable(specs)
+            self._put(self._tables, key, t, self.max_tables)
+            return t, False
+        self.table_hits += 1
+        return t, True
+
+    def oracle(
+        self, mask: int, units: int, domains: int, occ: Tuple[int, ...]
+    ) -> PlacementOracle:
+        key = (units, domains, mask, occ)
+        o = self._get(self._oracles, key)
+        if o is None:
+            self.oracle_misses += 1
+            o = PlacementOracle.from_mask(mask, units, domains, occ)
+            self._put(self._oracles, key, o, self.max_oracles)
+        else:
+            self.oracle_hits += 1
+        return o
+
+    def decision(self, key: Tuple) -> Optional["ScoredBatch"]:
+        b = self._get(self._decisions, key)
+        if b is None:
+            self.decision_misses += 1
+        else:
+            self.decision_hits += 1
+        return b
+
+    def store_decision(self, key: Tuple, batch: "ScoredBatch") -> None:
+        self._put(self._decisions, key, batch, self.max_decisions)
+
+    def stats(self) -> Dict[str, float]:
+        def rate(h, m):
+            return h / (h + m) if h + m else 0.0
+
+        return {
+            "table_hits": self.table_hits,
+            "table_misses": self.table_misses,
+            "table_hit_rate": rate(self.table_hits, self.table_misses),
+            "oracle_hits": self.oracle_hits,
+            "oracle_misses": self.oracle_misses,
+            "oracle_hit_rate": rate(self.oracle_hits, self.oracle_misses),
+            "decision_hits": self.decision_hits,
+            "decision_misses": self.decision_misses,
+            "decision_hit_rate": rate(self.decision_hits, self.decision_misses),
+            "tables": len(self._tables),
+            "oracles": len(self._oracles),
+            "decisions": len(self._decisions),
+        }
 
 
 # One enumeration block: actions of a single size s as column arrays.
@@ -145,19 +468,76 @@ _Block = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]
 class ScoredBatch:
     """Array-backed scored action set; rows follow the reference order."""
 
-    def __init__(self, specs: Sequence[JobSpec], blocks: List[_Block]):
+    def __init__(
+        self,
+        specs: Sequence[JobSpec],
+        blocks: List[_Block],
+        table: Optional[_SpecTable] = None,
+    ):
         self.specs = list(specs)
         self._blocks = blocks
+        self._table = table
+        self._padded: Optional[Tuple[np.ndarray, ...]] = None
+        self._best_memo: Dict[Tuple[float, bool], Optional[int]] = {}
+        self._spread: Optional[np.ndarray] = None
+        self._n_jobs: Optional[np.ndarray] = None
         self.scores = np.concatenate([b[0] for b in blocks])
         self.total_g = np.concatenate([b[1] for b in blocks])
-        self.spread = np.concatenate([b[2] for b in blocks])
-        self.n_jobs = np.concatenate(
-            [np.full(len(b[0]), b[3].shape[1], dtype=np.int64) for b in blocks]
-        )
         self._starts = np.cumsum([0] + [len(b[0]) for b in blocks])
 
     def __len__(self) -> int:
         return len(self.scores)
+
+    @property
+    def spread(self) -> np.ndarray:
+        """Per-candidate load spread (lookahead penalty term); lazy — only
+        lookahead-enabled policies ever touch it."""
+        if self._spread is None:
+            self._spread = np.concatenate([b[2] for b in self._blocks])
+        return self._spread
+
+    @property
+    def n_jobs(self) -> np.ndarray:
+        """Per-candidate action size; lazy — the common path only checks
+        row 0 (the empty action is always the first row)."""
+        if self._n_jobs is None:
+            self._n_jobs = np.concatenate(
+                [
+                    np.full(len(b[0]), b[3].shape[1], dtype=np.int64)
+                    for b in self._blocks
+                ]
+            )
+        return self._n_jobs
+
+    def rebind(self, specs: Sequence[JobSpec]) -> "ScoredBatch":
+        """Shallow copy bound to a new window with the identical per-job mode
+        structure (names may differ) — a ``DecisionCache`` hit reuses every
+        array, only ``action()`` reconstruction sees the new names."""
+        clone = copy.copy(self)
+        clone.specs = list(specs)
+        return clone
+
+    def padded_cols(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-candidate slot columns ``(dev, g, n)`` for the jax/Pallas
+        score-reduce backend: ``dev``/``g`` are (B, S) float32 padded with
+        zeros past each action's size, ``n`` is the action size.  Memoized —
+        decision-cache hits reuse the padded arrays too (``rebind`` shares
+        them)."""
+        if self._padded is None:
+            B = len(self.scores)
+            S = max((b[3].shape[1] for b in self._blocks), default=0) or 1
+            dev = np.zeros((B, S), dtype=np.float32)
+            g = np.zeros((B, S), dtype=np.float32)
+            for start, blk in zip(self._starts, self._blocks):
+                _, _, _, job_mat, mode_mat = blk
+                s = job_mat.shape[1]
+                if s == 0:
+                    continue
+                rows = slice(start, start + len(blk[0]))
+                dev[rows, :s] = self._table.mode_dev[job_mat, mode_mat]
+                g[rows, :s] = self._table.mode_g[job_mat, mode_mat]
+            self._padded = (dev, g, self.n_jobs.astype(np.float32))
+        return self._padded
 
     def action(self, i: int) -> Tuple[Tuple[JobSpec, ModeEstimate], ...]:
         b = int(np.searchsorted(self._starts, i, side="right")) - 1
@@ -186,6 +566,22 @@ class ScoredBatch:
         tie = idxs[sub == sub.min()]
         return int(tie[np.argmax(self.total_g[tie])])
 
+    def best_cached(
+        self, lookahead: float = 0.0, *, nonempty: bool = False
+    ) -> Optional[int]:
+        """``best_index`` memoized per (lookahead, nonempty): the winner is a
+        pure function of the batch arrays, so decision-cache hits (which
+        share the memo through ``rebind``) skip the argmin too."""
+        key = (lookahead, nonempty)
+        if key not in self._best_memo:
+            sc = (
+                self.scores + lookahead * self.spread
+                if lookahead
+                else None
+            )
+            self._best_memo[key] = self.best_index(sc, nonempty=nonempty)
+        return self._best_memo[key]
+
 
 def enumerate_scored(
     specs: Sequence[JobSpec],
@@ -195,24 +591,45 @@ def enumerate_scored(
     lam: float,
     exact_limit: int = 50_000,
     beam: int = 64,
+    cache: Optional[DecisionCache] = None,
 ) -> ScoredBatch:
     """Vectorized twin of ``actions.enumerate_actions`` (same feasible set,
-    same scores, same row order)."""
+    same scores, same row order).  With ``cache``, repeated decisions —
+    same window structure on the same placement state — return the cached
+    ``ScoredBatch`` without enumerating anything."""
     specs = list(specs)
     k_avail = view.domains - view.occupied_domains
     g_free = view.free_units
     M = view.total_units
-    empty = _empty_block(score((), g_free=g_free, M=M, lam=lam))
     if k_avail <= 0 or not specs:
-        return ScoredBatch(specs, [empty])
-    table = _SpecTable(specs)
-    oracle = PlacementOracle(free_map, view.domains, view.domain_jobs)
-    est = _space_estimate([len(s.modes) for s in specs], k_avail, exact_limit)
+        return ScoredBatch(
+            specs, [_empty_block(score((), g_free=g_free, M=M, lam=lam))]
+        )
+    dkey = None
+    warm = False
+    if cache is not None:
+        wkey = cache.window_key(specs)
+        mask = _mask_of(free_map)
+        occ = tuple(view.domain_jobs) if view.domain_jobs else (0,) * view.domains
+        dkey = (wkey, mask, occ, g_free, M, lam, exact_limit, beam)
+        hit = cache.decision(dkey)
+        if hit is not None:
+            return hit.rebind(specs)
+        table, warm = cache.table(wkey, specs)
+        oracle = cache.oracle(mask, len(free_map), view.domains, occ)
+    else:
+        table = _SpecTable(specs)
+        oracle = PlacementOracle(free_map, view.domains, view.domain_jobs)
+    empty = _empty_block(score((), g_free=g_free, M=M, lam=lam))
+    est = table.space_estimate(k_avail, exact_limit)
     if est <= exact_limit:
-        blocks = _exact_blocks(table, oracle, k_avail, g_free, M, lam)
+        blocks = _exact_blocks(table, oracle, k_avail, g_free, M, lam, reuse=warm)
     else:
         blocks = _beam_blocks(table, oracle, k_avail, g_free, M, lam, beam)
-    return ScoredBatch(specs, [empty] + blocks)
+    batch = ScoredBatch(specs, [empty] + blocks, table=table)
+    if dkey is not None:
+        cache.store_decision(dkey, batch)
+    return batch
 
 
 def _empty_block(empty_score: float) -> _Block:
@@ -262,7 +679,18 @@ def _exact_blocks(
     g_free: int,
     M: int,
     lam: float,
+    *,
+    reuse: bool = False,
 ) -> List[_Block]:
+    """Exact path.  ``reuse=False`` (one-shot tables) streams the candidate
+    grid chunk-by-chunk with the capacity filter applied inline — nothing
+    larger than a chunk materializes.  ``reuse=True`` (cached tables)
+    slices the table's memoized full enumeration instead: on a table-cache
+    hit the combinatorial construction is gone and per event only the
+    capacity mask, the (memoized) placement verdicts and two vector
+    expressions remain.  Both produce the identical block row order."""
+    if reuse:
+        return _exact_blocks_cached(table, oracle, k_avail, g_free, M, lam)
     J = len(table.specs)
     mm = table.max_modes
     out: List[_Block] = []
@@ -302,6 +730,37 @@ def _exact_blocks(
         scores = dev.sum(axis=1) / s + lam * ((g_free - tot) / M)
         spread = _spread(loads.max(axis=1), loads.min(axis=1), s)
         out.append((scores, tot, spread, job_mat, mode_mat))
+    return out
+
+
+def _exact_blocks_cached(
+    table: _SpecTable,
+    oracle: PlacementOracle,
+    k_avail: int,
+    g_free: int,
+    M: int,
+    lam: float,
+) -> List[_Block]:
+    J = len(table.specs)
+    out: List[_Block] = []
+    for s in range(1, min(k_avail, J) + 1):
+        cap = table.capacity(s, g_free)
+        if cap is None:
+            continue
+        job_mat, mode_mat, counts, tot, dev_sum, lmax, lmin, multisets, inv = cap
+        uok = np.fromiter(
+            (oracle.placeable(ms) for ms in multisets),
+            dtype=bool,
+            count=len(multisets),
+        )
+        keep = uok[inv]
+        if not keep.any():
+            continue
+        job_mat, mode_mat = job_mat[keep], mode_mat[keep]
+        tot_k = tot[keep]
+        scores = dev_sum[keep] / s + lam * ((g_free - tot_k) / M)
+        spread = _spread(lmax[keep], lmin[keep], s)
+        out.append((scores, tot_k, spread, job_mat, mode_mat))
     return out
 
 

@@ -175,6 +175,13 @@ _ARRIVAL = 0  # event kinds; arrivals sort before same-time completions so a
 _DONE = 1  # completion-triggered decision always sees the newcomers
 
 
+def _auto_max_events(n_stream: int, floor: int = 100_000) -> int:
+    """Deadlock-guard cap that scales with workload size: every job costs a
+    bounded number of events, so 50·|stream| with a generous floor never
+    false-trips on large sweeps while still catching true deadlocks."""
+    return max(floor, 50 * n_stream)
+
+
 def simulate(
     policy,
     node: Node,
@@ -184,7 +191,7 @@ def simulate(
     arrivals: Optional[Sequence[Tuple[float, str]]] = None,
     charge_profiling: bool = False,
     slowdown_model=None,
-    max_events: int = 100_000,
+    max_events: Optional[int] = None,
 ) -> ScheduleResult:
     """Run ``policy`` over the workload; returns exact energy/makespan.
 
@@ -196,6 +203,9 @@ def simulate(
     ``slowdown_model(job, g, co_running) -> factor ≥ 1`` optionally models
     residual interference (NUMA-aware placement keeps it ≈ 1; §V-C's
     cross-domain GPU case can be modeled by the caller).
+
+    ``max_events`` defaults to ``max(100_000, 50·|stream|)`` so large
+    sweeps never false-trip the deadlock guard.
     """
     if arrivals is None:
         stream = [(0.0, j) for j in (queue if queue is not None else sorted(truth))]
@@ -206,6 +216,8 @@ def simulate(
     names = [j for _, j in stream]
     if len(set(names)) != len(names):
         raise ValueError("job names must be unique across the workload")
+    if max_events is None:
+        max_events = _auto_max_events(len(stream))
 
     sim = NodeSim(node, truth, policy, slowdown_model=slowdown_model)
     heap: List[Tuple[float, int, int, object]] = []

@@ -20,6 +20,7 @@ def main() -> None:
         bench_cluster,
         bench_cluster_throughput,
         bench_decision_overhead,
+        bench_elastic,
         bench_fig1_scaling,
         bench_fig2_tradeoff,
         bench_fig6_end2end,
@@ -47,6 +48,7 @@ def main() -> None:
     bench_tpu_pod.run(csv, verbose=verbose)
     bench_sensitivity.run(csv, verbose=verbose)
     bench_cluster.run(csv, verbose=verbose)
+    bench_elastic.run(csv, verbose=verbose, smoke=args.quick)
     throughput = bench_cluster_throughput.run(csv, verbose=verbose, smoke=args.quick)
 
     # perf-trajectory snapshot (ISSUE 3): decision overhead + throughput.

@@ -9,11 +9,17 @@ accounting), baselines, oracle (exact B&B), metrics.
 from repro.core.arrivals import (
     Arrival,
     bursty_stream,
+    from_datacenter_csv,
     load_trace,
     poisson_stream,
     save_trace,
 )
-from repro.core.baselines import Marble, SequentialMax, SequentialOptimal
+from repro.core.baselines import (
+    Marble,
+    NonElasticPolicy,
+    SequentialMax,
+    SequentialOptimal,
+)
 from repro.core.cluster import (
     Cluster,
     ClusterState,
@@ -29,16 +35,23 @@ from repro.core.engine import (
     ScoredBatch,
     enumerate_scored,
 )
+from repro.core.events import ElasticConfig, EventLoop, EventQueue
 from repro.core.metrics import (
     edp_saving,
+    elastic_summary,
     energy_saving,
     makespan_improvement,
     perf_loss,
     summarize,
 )
-from repro.core.oracle import OracleSolver
-from repro.core.perfmodel import OraclePerfModel, ProfiledPerfModel, RooflinePerfModel
-from repro.core.placement import PlacementState
+from repro.core.oracle import OracleSolver, cluster_oracle_bound
+from repro.core.perfmodel import (
+    DomainInterferenceModel,
+    OraclePerfModel,
+    ProfiledPerfModel,
+    RooflinePerfModel,
+)
+from repro.core.placement import PlacementState, domains_of_units
 from repro.core.simulator import Node, NodeSim, simulate
 from repro.core.types import (
     ClusterResult,
@@ -56,8 +69,12 @@ __all__ = [
     "ClusterResult",
     "ClusterState",
     "DecisionCache",
+    "DomainInterferenceModel",
     "EcoSched",
+    "ElasticConfig",
     "EnergyAwareDispatcher",
+    "EventLoop",
+    "EventQueue",
     "JobProfile",
     "JobSpec",
     "Launch",
@@ -68,6 +85,7 @@ __all__ = [
     "NodeSim",
     "NodeSpec",
     "NodeView",
+    "NonElasticPolicy",
     "OraclePerfModel",
     "OracleSolver",
     "PlacementOracle",
@@ -80,9 +98,13 @@ __all__ = [
     "SequentialMax",
     "SequentialOptimal",
     "bursty_stream",
+    "cluster_oracle_bound",
+    "domains_of_units",
     "edp_saving",
+    "elastic_summary",
     "energy_saving",
     "enumerate_scored",
+    "from_datacenter_csv",
     "load_trace",
     "makespan_improvement",
     "perf_loss",

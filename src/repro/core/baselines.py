@@ -12,6 +12,12 @@
 All baselines clamp mode choices to the node's unit count, so they run
 unchanged on heterogeneous cluster nodes (``repro.core.cluster``) whose
 sizes may not cover every profiled mode.
+
+Baselines run on the same event-queue substrate as EcoSched
+(``repro.core.events``) but are deliberately **non-elastic**: they never
+propose GPU resizing (``propose_resizes`` returns nothing), exactly as the
+papers they reproduce commit a count at launch.  Cluster-level migration
+still applies to them — it is a dispatcher capability, not a policy one.
 """
 from __future__ import annotations
 
@@ -20,7 +26,15 @@ from typing import Dict, List, Sequence
 from repro.core.types import JobProfile, Launch, NodeView
 
 
-class SequentialMax:
+class NonElasticPolicy:
+    """Explicit opt-out of the substrate's resize hook: fixed-count
+    policies keep their launch-time GPU counts for the job's lifetime."""
+
+    def propose_resizes(self, view: NodeView, *, frac_of, cfg) -> List[Launch]:
+        return []
+
+
+class SequentialMax(NonElasticPolicy):
     def __init__(self, truth: Dict[str, JobProfile]):
         self.truth = truth
 
@@ -37,7 +51,7 @@ class SequentialMax:
         return [Launch(job=job, g=max(fits))]
 
 
-class SequentialOptimal:
+class SequentialOptimal(NonElasticPolicy):
     def __init__(self, truth: Dict[str, JobProfile]):
         self.truth = truth
 
@@ -51,7 +65,7 @@ class SequentialOptimal:
         return [Launch(job=job, g=self.truth[job].optimal_count(view.total_units))]
 
 
-class Marble:
+class Marble(NonElasticPolicy):
     def __init__(self, truth: Dict[str, JobProfile]):
         self.truth = truth
 

@@ -11,9 +11,20 @@ two-level policy:
      when/at what GPU count to launch it — unchanged from the single-node
      reproduction.
 
-Per-node accounting reuses ``NodeSim`` verbatim, so a 1-node cluster
+Per-node accounting reuses ``NodeSim`` verbatim and the event loop itself
+is the shared substrate (``repro.core.events``, ISSUE 4) — the same
+``EventLoop`` that drives single-node ``simulate()`` — so a 1-node cluster
 reproduces ``simulate()``'s energy and makespan exactly
-(regression-locked in tests/test_cluster.py).
+(regression-locked in tests/test_cluster.py, and the substrate itself is
+locked against pre-refactor golden schedules in tests/test_events.py).
+
+Passing ``elastic=ElasticConfig(...)`` turns on the beyond-static
+capabilities: per-node preemption/checkpoint-restart with EcoSched's
+elastic GPU resizing, and cluster-level migration — after a completion
+the drained node pulls a waiting (possibly checkpointed) job from the
+most backlogged node whenever the predicted-wait gap beats the move cost.
+A dispatcher can override the default greedy pull by implementing
+``select_migration(nm, state, sims, now, cfg) -> (donor, job) | None``.
 
 Routing is array-backed (ISSUE 3): ``ClusterState`` holds preallocated
 numpy columns — per-node outstanding-work sums updated in place on
@@ -30,14 +41,15 @@ scan — kept as the reference implementation and the benchmark baseline
 """
 from __future__ import annotations
 
-import heapq
+import warnings
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.arrivals import Arrival
-from repro.core.simulator import _ARRIVAL, _DONE, Node, NodeSim, _auto_max_events
+from repro.core.events import EVT_ARRIVAL, ElasticConfig, EventLoop
+from repro.core.simulator import Node, NodeSim, _auto_max_events
 from repro.core.types import ClusterResult, JobProfile, NodeView, RunningJob
 from repro.roofline.hw import ChipSpec
 
@@ -143,6 +155,19 @@ class ClusterState:
         if self.n_running[ni] == 0:
             self.sum_end_g[ni] = 0.0
             self.sum_g[ni] = 0.0
+
+    def on_retime(self, ni: int, old_end: float, new_end: float, g: int) -> None:
+        """A preemption moved a running job's end (checkpoint supersedes the
+        original completion); keep Σ end·g consistent with the new end."""
+        self.sum_end_g[ni] += (new_end - old_end) * g
+
+    def on_migrate_out(self, ni: int, ai: int) -> None:
+        """A waiting job left this node's queue (migration); inverse of
+        ``on_arrive``."""
+        self.wait_units_s[ni] -= self.min_unit_s[ni, ai]
+        self.n_waiting[ni] -= 1
+        if self.n_waiting[ni] == 0:
+            self.wait_units_s[ni] = 0.0
 
     def outstanding(self, now: float) -> np.ndarray:
         """Per-node committed busy unit-seconds / units (drain proxy)."""
@@ -256,8 +281,8 @@ class EnergyAwareDispatcher:
 
 
 # ---------------------------------------------------------------------------
-# Cluster event loop — same heap protocol as simulator.simulate() (shared
-# _ARRIVAL/_DONE ordering), with dispatch layered on top of NodeSim
+# Cluster event loop — the shared substrate (repro.core.events) with
+# dispatch, array-state bookkeeping and migration layered on top of NodeSim
 # ---------------------------------------------------------------------------
 
 
@@ -297,6 +322,7 @@ class Cluster:
         charge_profiling: bool = False,
         max_events: Optional[int] = None,
         fast_status: bool = True,
+        elastic: Optional[ElasticConfig] = None,
     ) -> ClusterResult:
         # stable on t only: same-instant arrivals keep submission order
         stream = sorted(stream, key=lambda a: a.t)
@@ -307,6 +333,15 @@ class Cluster:
             self.dispatcher.reset()  # stateful dispatchers restart per run
         if len({a.name for a in stream}) != len(stream):
             raise ValueError("arrival instance names must be unique")
+        if not hasattr(self.dispatcher, "route_indexed"):
+            warnings.warn(
+                f"dispatcher {self.dispatcher.name()!r} only implements the "
+                "legacy route(arr, statuses) protocol; implement "
+                "route_indexed(ai, state, now) for vectorized dispatch "
+                "(the legacy list protocol will eventually be removed)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
 
         app_truth: Dict[str, Dict[str, JobProfile]] = {
             s.name: self.truth_for(s) for s in self.specs
@@ -341,6 +376,7 @@ class Cluster:
                 self.policy_for(s, truth_n),
                 slowdown_model=self.slowdown_for(s) if self.slowdown_for else None,
                 name=s.name,
+                elastic=elastic,
             )
 
         def statuses(now: float) -> List[NodeStatus]:
@@ -394,49 +430,72 @@ class Cluster:
             state.on_arrive(ni, ai)
             return nm
 
-        heap: List[Tuple[float, int, int, object]] = []
-        seq = 0
+        # array-state bookkeeping hooks the substrate fires on transitions
+        def on_launch(nm: str, rj: RunningJob) -> None:
+            state.on_launch(
+                state.index[nm], state.app_index[app_of[rj.job]], rj.end, rj.g
+            )
+
+        def on_complete(nm: str, rj: RunningJob) -> None:
+            state.on_complete(state.index[nm], rj.end, rj.g)
+
+        def on_requeue(nm: str, job: str) -> None:
+            state.on_arrive(state.index[nm], state.app_index[app_of[job]])
+
+        def on_dequeue(nm: str, job: str) -> None:
+            state.on_migrate_out(state.index[nm], state.app_index[app_of[job]])
+
+        def on_retime(nm: str, rj: RunningJob, old_end: float) -> None:
+            state.on_retime(state.index[nm], old_end, rj.end, rj.g)
+
+        def migrate_candidate(nm: str, t: float):
+            """Pull one waiting job from the most backlogged node onto the
+            node that just completed, when the predicted-wait gap beats the
+            move cost.  A dispatcher may override via
+            ``select_migration(nm, state, sims, now, cfg)``."""
+            hook = getattr(self.dispatcher, "select_migration", None)
+            if hook is not None:
+                return hook(nm, state, sims, t, elastic)
+            ni = state.index[nm]
+            if sims[nm].placement.free_count() <= 0:
+                return None
+            out = state.outstanding(t)
+            # a checkpointed job pays its restart wherever it relaunches,
+            # so only the transit delay counts against the move; the gap
+            # test is job-independent, and donors are visited in
+            # descending-backlog order, so the first failure ends the scan
+            threshold = out[ni] + elastic.migration_delay + elastic.min_gain_s
+            for di in np.argsort(-out, kind="stable"):
+                di = int(di)
+                if di == ni or state.n_waiting[di] == 0:
+                    continue
+                if out[di] <= threshold:
+                    break
+                dsim = sims[state.names[di]]
+                for job in dsim.waiting:
+                    if state.fits[ni, state.app_index[app_of[job]]]:
+                        return state.names[di], job
+            return None
+
+        loop = EventLoop(
+            sims,
+            arrive=route,
+            max_events=max_events,
+            cap_msg="cluster event cap exceeded (policy deadlock?)",
+            elastic=elastic,
+            on_launch=on_launch,
+            on_complete=on_complete,
+            on_requeue=on_requeue,
+            on_dequeue=on_dequeue,
+            on_retime=on_retime,
+            migrate_candidate=migrate_candidate,
+        )
         for arr in stream:
             if arr.t <= 0.0:
                 route(arr, 0.0)
             else:
-                heapq.heappush(heap, (arr.t, _ARRIVAL, seq, arr))
-                seq += 1
-
-        def push_launched(launched: List[RunningJob], node_name: str) -> None:
-            nonlocal seq
-            ni = state.index[node_name]
-            for rj in launched:
-                state.on_launch(ni, state.app_index[app_of[rj.job]], rj.end, rj.g)
-                heapq.heappush(heap, (rj.end, _DONE, seq, (node_name, rj)))
-                seq += 1
-
-        for s in self.specs:  # t=0 scheduling event on every node
-            push_launched(sims[s.name].invoke_policy(), s.name)
-
-        events = 0
-        while heap:
-            events += 1
-            if events > max_events:
-                raise RuntimeError("cluster event cap exceeded (policy deadlock?)")
-            et, kind, _, payload = heapq.heappop(heap)
-            if kind == _ARRIVAL:
-                touched: List[str] = []
-                nm = route(payload, et)
-                touched.append(nm)
-                while heap and heap[0][0] == et and heap[0][1] == _ARRIVAL:
-                    _, _, _, arr = heapq.heappop(heap)
-                    nm = route(arr, et)
-                    if nm not in touched:
-                        touched.append(nm)
-                for nm in touched:
-                    push_launched(sims[nm].invoke_policy(), nm)
-            else:
-                nm, rj = payload
-                sims[nm].complete(rj)
-                state.on_complete(state.index[nm], rj.end, rj.g)
-                if sims[nm].waiting:
-                    push_launched(sims[nm].invoke_policy(), nm)
+                loop.queue.push(arr.t, EVT_ARRIVAL, arr)
+        loop.run()
 
         stuck = {nm: sim.waiting for nm, sim in sims.items() if sim.waiting}
         if stuck:

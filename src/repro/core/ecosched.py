@@ -38,18 +38,23 @@ Beyond-paper options (all default-off; §Perf ablations):
   * ``lookahead``  — penalize actions whose predicted completion times
     diverge (tail fragmentation), a lightweight fix for the greedy
     policy's myopia.
-  * ``elastic``    — see launch/coschedule.py: running jobs may be
-    rescaled at checkpoint boundaries when the node drains.
+  * elastic resizing — when the simulator runs with an ``ElasticConfig``
+    (repro.core.events), the substrate calls ``propose_resizes`` on
+    COMPLETE events: running jobs may be checkpointed and relaunched at a
+    now-better count, with the candidates scored through the same batched
+    Eq. (1) path plus a switch-cost bias.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.actions import enumerate_actions
 from repro.core.engine import DecisionCache, _mask_of, enumerate_scored
 from repro.core.score import tau_filter
-from repro.core.types import JobSpec, Launch, NodeView
+from repro.core.types import JobSpec, Launch, NodeView, RunningJob
 
 
 class EcoSched:
@@ -124,13 +129,20 @@ class EcoSched:
         if not specs:
             return []
         key = None
+        order = None
         if self._cache is not None and view.domain_jobs:
             if self._launch_epoch != self._cache.epoch:
                 # token tables were reset; stale token keys could alias
                 self._launch_memo.clear()
                 self._launch_epoch = self._cache.epoch
+            toks = tuple(self._cache.spec_token(s) for s in specs)
+            # order-canonical memo key (stable sort): permuted windows with
+            # the same structure multiset share one entry; stored pairs are
+            # (canonical slot, g), mapped back through the current order
+            order = DecisionCache.canonical_order(toks)
+            ctoks = toks if order is None else tuple(toks[i] for i in order)
             key = (
-                tuple(self._cache.spec_token(s) for s in specs),
+                ctoks,
                 _mask_of(view.free_map),
                 tuple(view.domain_jobs),
                 bool(view.running),  # the deadlock guard reads this
@@ -141,21 +153,40 @@ class EcoSched:
             if hit is not None:
                 self._launch_memo.move_to_end(key)
                 self.launch_hits += 1
-                return [Launch(job=specs[p].name, g=g) for p, g in hit]
+                if order is None:
+                    pairs = [(c, g) for c, g in hit]
+                else:
+                    pairs = [(order[c], g) for c, g in hit]
+                # normalize equal-g ties to current-window position so a
+                # permuted hit replays the order a cold evaluation of THIS
+                # window would produce (cache purity)
+                pairs.sort(key=lambda pg: (-pg[1], pg[0]))
+                return [Launch(job=specs[p].name, g=g) for p, g in pairs]
         if self.engine == "python":
             action = self._best_python(specs, view)
         elif self.engine == "jax":
             action = self._best_jax(specs, view)
         else:
             action = self._best_vector(specs, view)
-        # descending count — the order the feasibility replay allocated
+        # descending count — the order the feasibility replay allocated;
+        # equal counts break toward the earlier window position, which is
+        # exactly what the stable sort over ascending-position action
+        # tuples produced, but stays well-defined when a cached action is
+        # rebound to a permuted window
         pos_of = {id(sp): i for i, sp in enumerate(specs)}
         pairs = sorted(
             ((pos_of[id(sp)], m.g) for sp, m in action),
-            key=lambda pg: -pg[1],
+            key=lambda pg: (-pg[1], pg[0]),
         )
         if key is not None:
-            self._launch_memo[key] = tuple(pairs)
+            if order is None:
+                stored = tuple(pairs)
+            else:  # window position -> canonical slot
+                inv = [0] * len(specs)
+                for c, p in enumerate(order):
+                    inv[p] = c
+                stored = tuple((inv[p], g) for p, g in pairs)
+            self._launch_memo[key] = stored
             if len(self._launch_memo) > 8192:
                 self._launch_memo.popitem(last=False)
         return [Launch(job=specs[p].name, g=g) for p, g in pairs]
@@ -222,6 +253,122 @@ class EcoSched:
             if nonempty:
                 best_s, best_a = nonempty[0]
         return best_a
+
+    # -- elastic GPU resizing (ISSUE 4) ------------------------------------
+    def propose_resizes(self, view: NodeView, *, frac_of, cfg) -> List[Launch]:
+        """Substrate hook (``repro.core.events``): on a COMPLETE event,
+        propose preempt-and-relaunch of one running job at a now-better
+        unit count.
+
+        Each running job's alternative counts are scored through the same
+        batched Eq. (1) path as launch decisions — a single-job window on
+        the hypothetical node state with the job's units freed — with
+        ``cfg.switch_cost`` added to every candidate that changes the
+        count, so a resize must beat staying put by the switch margin on
+        the same scale the scheduler already optimizes.  On top of the
+        score win, the predicted remaining-time saving (via the Phase-I
+        t_norm ratio) must exceed the checkpoint + restart overhead by
+        ``cfg.min_gain_s`` — energy-better-but-slower moves never degrade
+        makespan.  Returns at most one proposal (the largest predicted
+        gain); the substrate enforces its own guards on top.
+        """
+        if view.free_units <= 0 or not view.running:
+            return []
+        best: Optional[Tuple[float, Launch]] = None
+        overhead = cfg.ckpt_time + cfg.restart_time
+        for rj in view.running:
+            if rj.preempted or frac_of(rj) >= 1.0:
+                continue
+            rem_t = rj.end - view.t  # wall time to completion as-is
+            # only the useful-work tail scales with the count: a freshly
+            # resumed job's restart head must not inflate the prediction
+            useful_rem = rj.end - max(view.t, rj.start + rj.restart)
+            if useful_rem <= overhead + cfg.min_gain_s:
+                continue
+            spec = self._spec(rj.job)
+            if len(spec.modes) < 2:
+                continue
+            cur = next((m for m in spec.modes if m.g == rj.g), None)
+            if cur is None:
+                continue  # current count fell to the τ-filter; leave it be
+            hypo = self._freed_view(view, rj)
+            g_new = self._best_resize_count(spec, hypo, cfg, rj.g)
+            if g_new is None or g_new == rj.g:
+                continue
+            pred_rem = overhead + useful_rem * (
+                spec.mode(g_new).t_norm / cur.t_norm
+            )
+            gain = rem_t - pred_rem
+            if gain <= cfg.min_gain_s:
+                continue
+            if best is None or gain > best[0]:
+                best = (gain, Launch(job=rj.job, g=g_new))
+        return [best[1]] if best is not None else []
+
+    @staticmethod
+    def _freed_view(view: NodeView, rj: RunningJob) -> NodeView:
+        """Hypothetical node state with ``rj``'s units and home domain
+        freed — what the node looks like the instant the resize relaunches."""
+        free_map = list(view.free_map)
+        for u in rj.units:
+            free_map[u] = True
+        occ = list(view.domain_jobs) if view.domain_jobs else [0] * view.domains
+        if occ and 0 <= rj.domain < len(occ) and occ[rj.domain] > 0:
+            occ[rj.domain] -= 1
+        return NodeView(
+            t=view.t,
+            total_units=view.total_units,
+            domains=view.domains,
+            free_units=view.free_units + rj.g,
+            running=[r for r in view.running if r is not rj],
+            free_map=free_map,
+            domain_jobs=occ,
+        )
+
+    def _best_resize_count(
+        self, spec: JobSpec, hypo: NodeView, cfg, g_cur: int
+    ) -> Optional[int]:
+        """Best count for one job on the freed node state, switch-cost
+        biased, scored through whichever backend the policy runs on."""
+        if self.engine == "python":
+            scored = enumerate_actions(
+                [spec], hypo, list(hypo.free_map),
+                lam=self.lam, exact_limit=self.exact_limit, beam=self.beam,
+            )
+            best = None
+            for s, a in scored:
+                if not a:
+                    continue
+                g = a[0][1].g
+                key = (s + (cfg.switch_cost if g != g_cur else 0.0), -g)
+                if best is None or key < best[0]:
+                    best = (key, g)
+            return best[1] if best else None
+        try:
+            batch = self._enumerate([spec], hypo)
+        except OverflowError:  # pragma: no cover - single-job windows are tiny
+            return None
+        # single-job window: each non-empty row's total_g IS its count
+        bias = np.where(
+            (batch.total_g != g_cur) & (batch.n_jobs > 0), cfg.switch_cost, 0.0
+        )
+        if self.engine == "jax":
+            from repro.kernels.score_reduce import score_reduce
+
+            dev, g, n = batch.padded_cols()
+            _, i = score_reduce(
+                dev, g, n,
+                lam=self.lam, g_free=hypo.free_units, M=hypo.total_units,
+                bias=bias, mask=batch.n_jobs > 0,
+            )
+            if i < 0:
+                return None
+        else:
+            i = batch.best_index(batch.scores + bias, nonempty=True)
+            if i is None:
+                return None
+        action = batch.action(int(i))
+        return action[0][1].g if action else None
 
     # -- beyond-paper: completion-alignment lookahead ----------------------
     def _lookahead_penalty(self, action, view: NodeView) -> float:

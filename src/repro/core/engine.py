@@ -323,10 +323,13 @@ class DecisionCache:
       * ``oracle``   — (units, domains, free-mask, occupancy) ->
                        ``PlacementOracle``; its count-multiset memo persists
                        across events instead of being rebuilt per invocation,
-      * ``decision`` — (window structure, free-mask, occupancy, scoring
-                       params) -> complete ``ScoredBatch``; a hit skips
-                       enumeration, placement replay and scoring outright
-                       and just rebinds the batch to the current specs.
+      * ``decision`` — (order-canonical window structure, free-mask,
+                       occupancy, scoring params) -> (``ScoredBatch``,
+                       producer permutation); a hit skips enumeration,
+                       placement replay and scoring outright and rebinds
+                       the batch to the current specs — the keys sort the
+                       window's tokens (stably), so permuted waiting
+                       windows share one entry (ISSUE 4 satellite).
 
     Caching is *pure*: a hit returns arrays bit-identical to a rebuild
     (locked in tests/test_decision_cache.py), so schedules and energies are
@@ -392,6 +395,22 @@ class DecisionCache:
         """Name-free window structure as a tuple of interned tokens."""
         return tuple(self.spec_token(s) for s in specs)
 
+    @staticmethod
+    def canonical_order(wkey: Tuple) -> Optional[Tuple[int, ...]]:
+        """Stable permutation sorting the window's tokens, or ``None`` when
+        the window is already canonical (the overwhelmingly common case —
+        repeats of the same window).  Keying decisions on the *sorted*
+        tokens lets permuted waiting windows (same jobs, different queue
+        order) hit the same cache entry; the stored batch keeps the row
+        order of the window that produced it, and ``rebind`` maps its
+        positions onto the current window through the two permutations.
+        Stability matters: equal tokens keep their relative window order on
+        both sides, so tie-breaks between structurally identical jobs stay
+        aligned with a fresh enumeration."""
+        if all(wkey[i] <= wkey[i + 1] for i in range(len(wkey) - 1)):
+            return None
+        return tuple(sorted(range(len(wkey)), key=wkey.__getitem__))
+
     def _get(self, store: OrderedDict, key):
         hit = store.get(key)
         if hit is not None:
@@ -429,7 +448,13 @@ class DecisionCache:
             self.oracle_hits += 1
         return o
 
-    def decision(self, key: Tuple) -> Optional["ScoredBatch"]:
+    def decision(
+        self, key: Tuple
+    ) -> Optional[Tuple["ScoredBatch", Optional[Tuple[int, ...]]]]:
+        """Stored entries are ``(batch, producer_order)`` pairs — the
+        canonical-key permutation the batch was built under (``None`` for
+        an already-canonical window); ``enumerate_scored`` needs it to map
+        stored row positions onto a permuted hit's window."""
         b = self._get(self._decisions, key)
         if b is None:
             self.decision_misses += 1
@@ -437,8 +462,12 @@ class DecisionCache:
             self.decision_hits += 1
         return b
 
-    def store_decision(self, key: Tuple, batch: "ScoredBatch") -> None:
-        self._put(self._decisions, key, batch, self.max_decisions)
+    def store_decision(
+        self,
+        key: Tuple,
+        entry: Tuple["ScoredBatch", Optional[Tuple[int, ...]]],
+    ) -> None:
+        self._put(self._decisions, key, entry, self.max_decisions)
 
     def stats(self) -> Dict[str, float]:
         def rate(h, m):
@@ -606,15 +635,22 @@ def enumerate_scored(
             specs, [_empty_block(score((), g_free=g_free, M=M, lam=lam))]
         )
     dkey = None
+    order = None
     warm = False
     if cache is not None:
         wkey = cache.window_key(specs)
         mask = _mask_of(free_map)
         occ = tuple(view.domain_jobs) if view.domain_jobs else (0,) * view.domains
-        dkey = (wkey, mask, occ, g_free, M, lam, exact_limit, beam)
+        # order-canonical decision key: permuted windows share one entry
+        order = cache.canonical_order(wkey)
+        ckey = wkey if order is None else tuple(wkey[i] for i in order)
+        dkey = (ckey, mask, occ, g_free, M, lam, exact_limit, beam)
         hit = cache.decision(dkey)
         if hit is not None:
-            return hit.rebind(specs)
+            batch, st_order = hit
+            if st_order == order:
+                return batch.rebind(specs)
+            return batch.rebind(_permute_specs(specs, order, st_order))
         table, warm = cache.table(wkey, specs)
         oracle = cache.oracle(mask, len(free_map), view.domains, occ)
     else:
@@ -628,8 +664,26 @@ def enumerate_scored(
         blocks = _beam_blocks(table, oracle, k_avail, g_free, M, lam, beam)
     batch = ScoredBatch(specs, [empty] + blocks, table=table)
     if dkey is not None:
-        cache.store_decision(dkey, batch)
+        cache.store_decision(dkey, (batch, order))
     return batch
+
+
+def _permute_specs(
+    specs: Sequence[JobSpec],
+    order: Optional[Tuple[int, ...]],
+    st_order: Optional[Tuple[int, ...]],
+) -> List[JobSpec]:
+    """Bind a cached batch (built from a *permutation* of this window) to
+    the current specs: canonical slot ``c`` holds the stored window's
+    position ``st_order[c]`` and the current window's position
+    ``order[c]`` — both carry the same token, so the swap is pure."""
+    J = len(specs)
+    cur = order if order is not None else range(J)
+    st = st_order if st_order is not None else range(J)
+    out: List[JobSpec] = [None] * J  # type: ignore[list-item]
+    for c, p in zip(range(J), st):
+        out[p] = specs[cur[c]]
+    return out
 
 
 def _empty_block(empty_score: float) -> _Block:

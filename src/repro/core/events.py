@@ -1,0 +1,284 @@
+"""Unified event-queue substrate (ISSUE 4).
+
+One typed event heap + one driver loop shared by the single-node
+``simulate()`` (repro.core.simulator) and the cluster-scale
+``Cluster.simulate()`` (repro.core.cluster).  Before this module the two
+entry points carried divergent copies of the same loop; now both build an
+``EventLoop`` over the same ``NodeSim`` accounting and differ only in the
+hooks they plug in (arrival routing, array-state bookkeeping, migration
+candidate selection).
+
+Event kinds, in tie-break order at one instant:
+
+  ARRIVAL  — a job enters the system (batched: all same-instant arrivals
+             are absorbed before the policies run, so a completion-driven
+             decision always sees the newcomers),
+  COMPLETE — a running job finishes and frees its units,
+  PREEMPT  — a checkpoint write finishes: the preempted job's units free
+             and the job re-enters a queue with its remaining work,
+  RESUME   — a preempted job re-enters its node's waiting queue,
+  MIGRATE  — a waiting (possibly preempted) job lands on another node
+             after the migration delay.
+
+The ARRIVAL < COMPLETE ordering is exactly the pre-refactor contract, so
+with the elastic machinery disabled (``elastic=None``) the substrate pops
+the identical event sequence and produces bit-identical schedules — the
+regression lock in tests/test_events.py pins golden fingerprints captured
+from the pre-refactor loops.
+
+Elastic capabilities (all default-off, ``ElasticConfig``):
+
+  * **preemption / checkpoint-restart** — a running job can be
+    checkpointed: its units stay held for ``ckpt_time`` (energy charged at
+    ``ckpt_power_scale``·job power), then the job re-enters the waiting
+    queue carrying its completed-work fraction; the next launch pays
+    ``restart_time`` on top of the remaining work at the new count.
+  * **elastic GPU resizing** — on COMPLETE events the node policy may
+    propose preempt-and-relaunch of a running job at a now-better unit
+    count (``propose_resizes`` hook; EcoSched scores the candidates
+    through the batched Eq. (1) engine with a switch-cost bias).  The
+    relaunch itself goes through the normal scheduling path, so the
+    resized job re-enters the scored window like any other candidate.
+  * **job migration** — after a COMPLETE event the cluster may requeue a
+    waiting or preempted job from a backlogged node onto the completing
+    node when the predicted wait beats the move cost (migration delay,
+    plus the restart charge a preempted job will pay anyway).
+
+Every elastic action is bounded: at most one resize and one migration per
+COMPLETE event, ``max_preempts`` checkpoints per job, and a job within
+``ckpt_time + restart_time`` of finishing is never preempted.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+# Event kinds.  ARRIVAL/COMPLETE keep the pre-refactor numeric order
+# (arrivals sort before same-time completions); the elastic kinds follow.
+EVT_ARRIVAL = 0
+EVT_COMPLETE = 1
+EVT_PREEMPT = 2
+EVT_RESUME = 3
+EVT_MIGRATE = 4
+
+EVENT_NAMES = {
+    EVT_ARRIVAL: "ARRIVAL",
+    EVT_COMPLETE: "COMPLETE",
+    EVT_PREEMPT: "PREEMPT",
+    EVT_RESUME: "RESUME",
+    EVT_MIGRATE: "MIGRATE",
+}
+
+
+@dataclass(frozen=True)
+class ElasticConfig:
+    """Knobs for the beyond-static capabilities.  ``ElasticConfig()`` with
+    every switch off is equivalent to ``elastic=None``.
+
+    The checkpoint-cost model: a preemption holds the job's units for
+    ``ckpt_time`` seconds at ``ckpt_power_scale`` × the job's busy power
+    (charged to busy energy and tracked in ``ckpt_energy``); the next
+    launch of that job pays ``restart_time`` seconds of re-execution
+    overhead before its remaining work starts.
+    """
+
+    resize: bool = False  # EcoSched elastic resizing on COMPLETE events
+    migrate: bool = False  # cluster-level waiting/preempted-job migration
+    ckpt_time: float = 30.0  # checkpoint write (s); units held throughout
+    restart_time: float = 15.0  # relaunch overhead (s) after a preemption
+    ckpt_power_scale: float = 1.0  # power during the write, × busy power
+    migration_delay: float = 10.0  # s a migrating job spends in transit
+    min_gain_s: float = 60.0  # predicted saving must exceed this
+    max_preempts: int = 2  # checkpoints per job (bounds churn)
+    switch_cost: float = 0.05  # Eq. (1) bias on resize candidates != current g
+
+    @property
+    def any_enabled(self) -> bool:
+        return self.resize or self.migrate
+
+
+class EventQueue:
+    """The single heap.  Entries are ``(t, kind, seq, payload)`` — the
+    exact tuple shape of the pre-refactor loops, so pop order (time, then
+    kind, then push order) is unchanged."""
+
+    __slots__ = ("_heap", "_seq")
+
+    def __init__(self):
+        self._heap: List[Tuple[float, int, int, object]] = []
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, t: float, kind: int, payload: object) -> None:
+        heapq.heappush(self._heap, (t, kind, self._seq, payload))
+        self._seq += 1
+
+    def pop(self) -> Tuple[float, int, object]:
+        t, kind, _, payload = heapq.heappop(self._heap)
+        return t, kind, payload
+
+    def next_is(self, t: float, kind: int) -> bool:
+        """True when the head event is exactly (t, kind) — the arrival
+        batching test."""
+        return bool(self._heap) and self._heap[0][0] == t and self._heap[0][1] == kind
+
+
+class EventLoop:
+    """Shared driver: pops events, invokes per-node policies, applies the
+    elastic hooks.  Owners provide:
+
+      sims       — name -> NodeSim, in scheduling order (t=0 policy pass
+                   runs over this order, like the pre-refactor loops),
+      arrive     — (payload, t) -> node name: absorb one ARRIVAL payload
+                   (single-node: enqueue locally; cluster: route + enqueue),
+      max_events — deadlock-guard cap, counted per popped head event,
+      cap_msg    — the RuntimeError message when the cap trips,
+      elastic    — ``ElasticConfig`` or None (None = pre-refactor behavior),
+      on_launch / on_complete / on_requeue / on_dequeue / on_retime —
+                   optional array-state bookkeeping hooks (ClusterState),
+      migrate_candidate — optional (node, t) -> (donor, job) | None: pick a
+                   waiting job to pull onto ``node`` (the cluster
+                   dispatcher's migration hook).
+    """
+
+    def __init__(
+        self,
+        sims: Dict[str, "NodeSim"],  # noqa: F821 (repro.core.simulator)
+        *,
+        arrive: Callable[[object, float], str],
+        max_events: int,
+        cap_msg: str,
+        elastic: Optional[ElasticConfig] = None,
+        on_launch: Optional[Callable] = None,
+        on_complete: Optional[Callable] = None,
+        on_requeue: Optional[Callable] = None,
+        on_dequeue: Optional[Callable] = None,
+        on_retime: Optional[Callable] = None,
+        migrate_candidate: Optional[Callable] = None,
+    ):
+        self.sims = sims
+        self.queue = EventQueue()
+        self.arrive = arrive
+        self.max_events = max_events
+        self.cap_msg = cap_msg
+        self.elastic = elastic if (elastic and elastic.any_enabled) else None
+        self.on_launch = on_launch
+        self.on_complete = on_complete
+        self.on_requeue = on_requeue
+        self.on_dequeue = on_dequeue
+        self.on_retime = on_retime
+        self.migrate_candidate = migrate_candidate
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _schedule(self, nm: str) -> None:
+        """One policy invocation on node ``nm``; launched jobs get their
+        COMPLETE events pushed."""
+        sim = self.sims[nm]
+        for rj in sim.invoke_policy():
+            if self.on_launch is not None:
+                self.on_launch(nm, rj)
+            self.queue.push(rj.end, EVT_COMPLETE, (nm, rj))
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self) -> None:
+        q = self.queue
+        for nm in self.sims:  # t=0 scheduling pass, node order = spec order
+            self._schedule(nm)
+        events = 0
+        while len(q):
+            events += 1
+            if events > self.max_events:
+                raise RuntimeError(self.cap_msg)
+            t, kind, payload = q.pop()
+            if kind == EVT_ARRIVAL:
+                touched = [self.arrive(payload, t)]
+                while q.next_is(t, EVT_ARRIVAL):
+                    nm = self.arrive(q.pop()[2], t)
+                    if nm not in touched:
+                        touched.append(nm)
+                for nm in touched:
+                    self._schedule(nm)
+            elif kind == EVT_COMPLETE:
+                nm, rj = payload
+                if rj.preempted:
+                    continue  # superseded by a PREEMPT event at ckpt end
+                sim = self.sims[nm]
+                sim.complete(rj)
+                if self.on_complete is not None:
+                    self.on_complete(nm, rj)
+                if sim.waiting:
+                    self._schedule(nm)
+                if self.elastic is not None:
+                    self._post_complete(nm, t)
+            elif kind == EVT_PREEMPT:
+                nm, rj = payload
+                self.sims[nm].finish_preempt(rj, t)
+                if self.on_complete is not None:
+                    self.on_complete(nm, rj)  # rj.end == t after retiming
+                q.push(t, EVT_RESUME, (nm, rj.job))
+            elif kind == EVT_RESUME:
+                nm, job = payload
+                self.sims[nm].requeue(job, t)
+                if self.on_requeue is not None:
+                    self.on_requeue(nm, job)
+                self._schedule(nm)
+            elif kind == EVT_MIGRATE:
+                to, job, state = payload
+                self.sims[to].absorb(job, t, state)
+                if self.on_requeue is not None:
+                    self.on_requeue(to, job)
+                self._schedule(to)
+            else:  # pragma: no cover - defensive
+                raise RuntimeError(f"unknown event kind {kind}")
+
+    # -- elastic hooks (resize + migration), bounded per COMPLETE event -----
+
+    def _post_complete(self, nm: str, t: float) -> None:
+        cfg = self.elastic
+        if cfg.resize:
+            self._try_resize(nm, t)
+        if cfg.migrate and self.migrate_candidate is not None:
+            self._try_migrate(nm, t)
+
+    def _try_resize(self, nm: str, t: float) -> None:
+        sim = self.sims[nm]
+        propose = getattr(sim.policy, "propose_resizes", None)
+        if propose is None:
+            return
+        cfg = self.elastic
+        for ln in propose(sim.node_view(), frac_of=sim.frac_of, cfg=cfg)[:1]:
+            rj = next(
+                (r for r in sim.running if r.job == ln.job and not r.preempted),
+                None,
+            )
+            if rj is None:
+                continue
+            if sim.preempt_count.get(ln.job, 0) >= cfg.max_preempts:
+                continue
+            if rj.end - t <= cfg.ckpt_time + cfg.restart_time:
+                continue  # finishing soon: a checkpoint can never pay off
+            old_end = rj.end
+            ck_end = sim.begin_preempt(rj, t, cfg)
+            if self.on_retime is not None:
+                self.on_retime(nm, rj, old_end)
+            self.queue.push(ck_end, EVT_PREEMPT, (nm, rj))
+
+    def _try_migrate(self, nm: str, t: float) -> None:
+        cand = self.migrate_candidate(nm, t)
+        if not cand:
+            return
+        donor, job = cand
+        dsim = self.sims[donor]
+        if job not in dsim.waiting:
+            return
+        state = dsim.evict(job)  # MigrantState: arrival/progress/counters
+        if self.on_dequeue is not None:
+            self.on_dequeue(donor, job)
+        self.queue.push(
+            t + self.elastic.migration_delay, EVT_MIGRATE, (nm, job, state)
+        )

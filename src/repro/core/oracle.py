@@ -26,11 +26,75 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 import time as _time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.placement import PlacementState
 from repro.core.types import JobProfile, JobRecord, Launch, NodeView, ScheduleResult
+
+
+def cluster_oracle_bound(specs, truth_for, stream) -> Dict[str, float]:
+    """Greedy perfect-knowledge lower bounds for one cluster run (ISSUE 4).
+
+    The single-node branch-and-bound above cannot scale to trace-driven
+    clusters, so the cluster bound relaxes instead of searching: every job
+    greedily takes its best ⟨node type, count⟩ with zero waiting and the
+    cluster is treated as one pooled capacity.
+
+      * ``energy_lb``   — Σ_j min over feasible (node, g) of busy energy;
+        idle energy ≥ 0, so this bounds total energy below.
+      * ``makespan_lb`` — max over arrivals i of
+        t_i + (Σ_{j: t_j ≥ t_i} min-work_j) / Σ_n units_n   (work submitted
+        at or after t_i cannot start earlier and must fit the pooled
+        capacity), and t_i + fastest-runtime_i (a job cannot beat its own
+        best solo time on the best hardware).
+      * ``edp_lb``      — their product (both factors are lower bounds).
+
+    Valid for any dispatcher/per-node policy, elastic or not: preemption
+    and migration only ever *add* work (checkpoint + restart overheads).
+    Reported alongside the elastic sweep in ``benchmarks/bench_elastic.py``.
+
+    ``specs``: ``NodeSpec``-like objects (``name``/``units``);
+    ``truth_for(spec)``: app-keyed ``JobProfile`` table on that hardware;
+    ``stream``: ``Arrival``s.
+    """
+    specs = list(specs)
+    app_truth = {s.name: truth_for(s) for s in specs}
+    total_units = float(sum(s.units for s in specs))
+    best: Dict[str, Tuple[float, float, float]] = {}  # app -> (e, work, t)
+    rows: List[Tuple[float, float, float, float]] = []
+    for a in sorted(stream, key=lambda a: a.t):
+        hit = best.get(a.app)
+        if hit is None:
+            e_b = w_b = t_b = math.inf
+            for s in specs:
+                prof = app_truth[s.name].get(a.app)
+                if prof is None:
+                    continue
+                for g in prof.feasible_counts:
+                    if g > s.units:
+                        continue
+                    e_b = min(e_b, prof.energy(g))
+                    w_b = min(w_b, prof.runtime[g] * g)
+                    t_b = min(t_b, prof.runtime[g])
+            if not math.isfinite(e_b):
+                raise ValueError(f"no node can fit any feasible mode of {a.app}")
+            hit = best[a.app] = (e_b, w_b, t_b)
+        rows.append((a.t, *hit))
+    energy_lb = sum(e for _, e, _, _ in rows)
+    makespan_lb = 0.0
+    suffix_work = 0.0
+    for t, _, work, t_solo in reversed(rows):
+        suffix_work += work
+        makespan_lb = max(
+            makespan_lb, t + suffix_work / total_units, t + t_solo
+        )
+    return {
+        "energy_lb": energy_lb,
+        "makespan_lb": makespan_lb,
+        "edp_lb": energy_lb * makespan_lb,
+    }
 
 
 class OracleSolver:

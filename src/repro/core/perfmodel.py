@@ -54,6 +54,68 @@ def _mk_spec(name: str, t_hat: Dict[int, float], p_hat: Dict[int, float]) -> Job
     return JobSpec(name=name, modes=modes)
 
 
+class DomainInterferenceModel:
+    """Residual-interference slowdown keyed on *actual* domain co-residency
+    (ISSUE 4 satellite; PR 2 recorded ``JobRecord.domain`` for this).
+
+    The count-only proxy (``calibration.cross_numa_slowdown``) charges a
+    flat penalty whenever *anything* co-runs and a fixed cross-domain
+    penalty for g=3 — it cannot distinguish a clean one-job-per-domain
+    placement from two jobs squeezed into one domain.  This model reads
+    the real placement the simulator just made (``domain_aware = True``
+    makes ``NodeSim`` pass it) and composes three effects:
+
+      * ``shared``   — the launched job's home domain already hosts
+        another job's home (CPU-side resources genuinely contended),
+      * ``span``     — the job's contiguous unit range crosses a domain
+        boundary while anything co-runs (remote-domain traffic; the
+        paper's 3-GPU case),
+      * ``residual`` — co-running in fully disjoint domains (shared
+        fabric/power residuals; near 1 with NUMA-aware placement).
+
+    Factors compose multiplicatively; a solo job is always 1.0.
+    """
+
+    domain_aware = True
+
+    def __init__(
+        self,
+        *,
+        shared: float = 1.08,
+        span: float = 1.05,
+        residual: float = 1.02,
+    ):
+        assert min(shared, span, residual) >= 1.0
+        self.shared = shared
+        self.span = span
+        self.residual = residual
+
+    def __call__(
+        self,
+        job: str,
+        g: int,
+        co_running,
+        *,
+        units=None,
+        domain=None,
+        running=None,
+        total_units=None,
+        domains=None,
+    ) -> float:
+        if not co_running:
+            return 1.0
+        if units is None or running is None:  # legacy call: count-only info
+            return self.residual
+        from repro.core.placement import domains_of_units
+
+        factor = self.residual
+        if any(r.domain == domain for r in running):
+            factor *= self.shared
+        if len(domains_of_units(units, total_units, domains)) > 1:
+            factor *= self.span
+        return factor
+
+
 class ProfiledPerfModel:
     """Paper-faithful Phase I (simulated brief profiling)."""
 

@@ -23,7 +23,19 @@ domains, not running jobs, via ``occupied_domains()``.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
+
+
+def domains_of_units(
+    units: Sequence[int], total_units: int, domains: int
+) -> Tuple[int, ...]:
+    """Distinct isolation domains touched by a set of unit ids (ascending).
+
+    A job homed in one domain can still *span* others when its contiguous
+    range crosses a boundary (the paper's 3-GPU-on-a-2-domain-node case) —
+    interference models key remote-traffic penalties on this.
+    """
+    return tuple(sorted({u * domains // total_units for u in units}))
 
 
 class PlacementState:

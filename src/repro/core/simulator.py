@@ -11,17 +11,26 @@ Energy integration is exact piecewise-constant:
   idle  = Σ_segments  (idle units) · P_idle_unit · dt   until makespan.
 Invariant (tested): Σ busy GPU-seconds + Σ idle GPU-seconds = M · makespan.
 
-The per-node state machine lives in ``NodeSim`` so that the single-node
-``simulate()`` entry point and the cluster-scale event loop
-(``repro.core.cluster``) share one accounting implementation — a 1-node
-cluster reproduces ``simulate()`` exactly (regression-locked).
+The per-node state machine lives in ``NodeSim``; the event loop itself is
+the shared substrate in ``repro.core.events`` (ISSUE 4), so the
+single-node ``simulate()`` entry point and the cluster-scale
+``Cluster.simulate()`` drive the identical loop — a 1-node cluster
+reproduces ``simulate()`` exactly (regression-locked).
+
+With an ``ElasticConfig`` the same ``NodeSim`` supports
+preemption/checkpoint-restart: a running job can be checkpointed (units
+held for the write, energy charged), re-queued with its completed-work
+fraction, and relaunched at any feasible count — the relaunch pays the
+restart overhead and only the remaining work.  All of it is default-off
+and adds nothing to the static path.
 """
 from __future__ import annotations
 
-import heapq
 import time as _time
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.core.events import EVT_ARRIVAL, ElasticConfig, EventLoop
 from repro.core.placement import PlacementState
 from repro.core.types import (
     JobProfile,
@@ -32,6 +41,11 @@ from repro.core.types import (
     ScheduleResult,
 )
 
+# Pre-refactor aliases (the heap tuple kind slots); kept for callers that
+# imported the private constants.
+_ARRIVAL = EVT_ARRIVAL
+_DONE = 1  # EVT_COMPLETE
+
 
 class Node:
     def __init__(self, units: int, domains: int, idle_power_per_unit: float):
@@ -40,13 +54,31 @@ class Node:
         self.idle_power_per_unit = idle_power_per_unit
 
 
+@dataclass(frozen=True)
+class MigrantState:
+    """Everything a migrating job carries between nodes (MIGRATE payload):
+    the original submission time, its completed-work fraction, whether the
+    next launch owes a restart, and the per-job counters that must stay
+    global across nodes."""
+
+    arrival: float
+    progress: float = 0.0
+    restart: bool = False
+    segment: int = 0
+    preempts: int = 0  # checkpoint budget already spent (max_preempts)
+    last_g: Optional[int] = None  # last launched count (resize history)
+    queued_at: float = 0.0  # when it last entered a waiting queue (donor)
+
+
 class NodeSim:
     """Single-node simulation state: placement, running set, waiting queue,
     and exact piecewise-constant energy integration.
 
-    The owner (``simulate`` or ``Cluster.simulate``) runs the event loop and
-    calls ``advance``/``arrive``/``complete``/``invoke_policy``; this object
-    never sees the heap, so the same accounting serves both.
+    The owner (the ``EventLoop`` built by ``simulate`` or
+    ``Cluster.simulate``) runs the event heap and calls
+    ``advance``/``arrive``/``complete``/``invoke_policy`` (plus the
+    preemption/migration hooks when elastic); this object never sees the
+    heap, so the same accounting serves every entry point.
     """
 
     def __init__(
@@ -57,12 +89,14 @@ class NodeSim:
         *,
         slowdown_model=None,
         name: str = "",
+        elastic: Optional[ElasticConfig] = None,
     ):
         self.node = node
         self.truth = truth
         self.policy = policy
         self.slowdown_model = slowdown_model
         self.name = name
+        self.elastic = elastic
         self.placement = PlacementState(node.units, node.domains)
         self.waiting: List[str] = []
         self.running: List[RunningJob] = []
@@ -73,6 +107,18 @@ class NodeSim:
         self.idle_unit_seconds = 0.0
         self.decision_time = 0.0
         self.decision_events = 0
+        # elastic bookkeeping (inert unless the substrate drives it)
+        self.progress: Dict[str, float] = {}  # job -> completed-work fraction
+        self.needs_restart: Set[str] = set()  # next launch pays restart_time
+        self.preempt_count: Dict[str, int] = {}
+        self.preemptions = 0
+        self.ckpt_energy = 0.0
+        self.migrations_in = 0
+        self.migrations_out = 0
+        self.resize_history: Dict[str, List[Tuple[float, int, int]]] = {}
+        self._last_g: Dict[str, int] = {}
+        self._segments: Dict[str, int] = {}
+        self._queued_at: Dict[str, float] = {}  # last (re-)enqueue time
 
     def node_view(self) -> NodeView:
         return NodeView(
@@ -94,6 +140,7 @@ class NodeSim:
     def arrive(self, job: str, t: float) -> None:
         self.advance(t)
         self.arrival_of[job] = t
+        self._queued_at[job] = t
         self.waiting.append(job)
 
     def complete(self, rj: RunningJob) -> None:
@@ -101,6 +148,10 @@ class NodeSim:
         self.advance(rj.end)
         self.running.remove(rj)
         self.placement.release(rj.units, rj.domain)
+
+    def frac_of(self, rj: RunningJob) -> float:
+        """Completed-work fraction of a running job at the node clock."""
+        return rj.frac_at(self.t)
 
     def invoke_policy(self) -> List[RunningJob]:
         """One scheduling event; returns the newly launched jobs (the owner
@@ -127,38 +178,161 @@ class NodeSim:
             units, domain = self.placement.allocate(ln.g)  # raises if impossible
             factor = 1.0
             if self.slowdown_model is not None:
+                # domain-aware models additionally see the real placement
+                kw = (
+                    dict(units=units, domain=domain, running=self.running,
+                         total_units=self.node.units, domains=self.node.domains)
+                    if getattr(self.slowdown_model, "domain_aware", False)
+                    else {}
+                )
                 factor = float(
-                    self.slowdown_model(ln.job, ln.g, [r.job for r in self.running])
+                    self.slowdown_model(
+                        ln.job, ln.g, [r.job for r in self.running], **kw
+                    )
                 )
                 assert factor >= 1.0
-            dur = prof.runtime[ln.g] * factor
+            frac0 = 0.0
+            restart = 0.0
+            segment = 0
+            if self.elastic is not None:
+                frac0 = self.progress.pop(ln.job, 0.0)
+                if ln.job in self.needs_restart:
+                    self.needs_restart.discard(ln.job)
+                    restart = self.elastic.restart_time
+                segment = self._segments.get(ln.job, 0)
+                self._segments[ln.job] = segment + 1
+                last = self._last_g.get(ln.job)
+                if last is not None and last != ln.g:
+                    self.resize_history.setdefault(ln.job, []).append(
+                        (self.t, last, ln.g)
+                    )
+                self._last_g[ln.job] = ln.g
+            if frac0 == 0.0 and restart == 0.0:
+                dur = prof.runtime[ln.g] * factor
+            else:
+                dur = restart + (1.0 - frac0) * prof.runtime[ln.g] * factor
             power = prof.busy_power[ln.g]
             rj = RunningJob(
                 job=ln.job, g=ln.g, units=units, domain=domain,
                 start=self.t, end=self.t + dur, power=power,
+                frac0=frac0, restart=restart,
             )
             self.waiting.remove(ln.job)
             self.running.append(rj)
             self.busy_energy += power * dur
-            self.records.append(
-                JobRecord(
-                    job=ln.job, g=ln.g, start=self.t, end=rj.end,
-                    busy_energy=power * dur,
-                    arrival=self.arrival_of.get(ln.job, 0.0),
-                    node=self.name,
-                    domain=domain,
-                )
+            rec = JobRecord(
+                job=ln.job, g=ln.g, start=self.t, end=rj.end,
+                busy_energy=power * dur,
+                arrival=self.arrival_of.get(ln.job, 0.0),
+                node=self.name,
+                domain=domain,
+                segment=segment,
+                queued=self._queued_at.get(ln.job, self.arrival_of.get(ln.job, 0.0)),
             )
+            rj.record = rec
+            self.records.append(rec)
             out.append(rj)
         return out
+
+    # -- elastic substrate hooks (repro.core.events) ------------------------
+
+    def begin_preempt(self, rj: RunningJob, t: float, cfg: ElasticConfig) -> float:
+        """Checkpoint a running job at decision time ``t``.  Its units stay
+        held until the write finishes at ``t + ckpt_time``; the unrun tail
+        of its pre-charged busy energy is returned and the write charged at
+        ``ckpt_power_scale`` × busy power.  Returns the checkpoint end time
+        (the owner pushes the PREEMPT event there)."""
+        assert rj in self.running and not rj.preempted
+        assert rj.end > t + cfg.ckpt_time, (rj.job, rj.end, t)
+        frac = rj.frac_at(t)
+        ck_end = t + cfg.ckpt_time
+        ck_e = rj.power * cfg.ckpt_power_scale * cfg.ckpt_time
+        self.busy_energy -= rj.power * (rj.end - t)  # un-charge the unrun tail
+        self.busy_energy += ck_e
+        self.ckpt_energy += ck_e
+        rec = rj.record
+        rec.end = ck_end
+        rec.busy_energy = rj.power * (t - rj.start) + ck_e
+        rec.kind = "ckpt"
+        rec.ckpt_energy = ck_e
+        rj.preempted = True
+        rj.frac_ckpt = frac
+        rj.end = ck_end
+        self.preemptions += 1
+        self.preempt_count[rj.job] = self.preempt_count.get(rj.job, 0) + 1
+        return ck_end
+
+    def finish_preempt(self, rj: RunningJob, t: float) -> None:
+        """The checkpoint write finished: free the units and remember the
+        completed-work fraction for the relaunch."""
+        assert rj.preempted and abs(rj.end - t) < 1e-9
+        self.advance(t)
+        self.running.remove(rj)
+        self.placement.release(rj.units, rj.domain)
+        self.progress[rj.job] = rj.frac_ckpt
+        self.needs_restart.add(rj.job)
+
+    def requeue(self, job: str, t: float) -> None:
+        """A preempted job re-enters this node's waiting queue (RESUME)."""
+        self.advance(t)
+        self._queued_at[job] = t
+        self.waiting.append(job)
+
+    def evict(self, job: str) -> "MigrantState":
+        """Detach a waiting job for migration; returns everything that must
+        travel with it — original arrival, completed-work fraction, the
+        restart obligation, and the per-job counters (segment index,
+        checkpoint budget spent, last launched count) so the
+        ``max_preempts`` bound and the resize history stay global, not
+        per-node."""
+        self.waiting.remove(job)
+        restart = job in self.needs_restart
+        self.needs_restart.discard(job)
+        arrival = self.arrival_of.pop(job, 0.0)
+        state = MigrantState(
+            arrival=arrival,
+            progress=self.progress.pop(job, 0.0),
+            restart=restart,
+            segment=self._segments.pop(job, 0),
+            preempts=self.preempt_count.pop(job, 0),
+            last_g=self._last_g.pop(job, None),
+            queued_at=self._queued_at.pop(job, arrival),
+        )
+        self.migrations_out += 1
+        return state
+
+    def absorb(self, job: str, t: float, state: "MigrantState") -> None:
+        """A migrated job lands here (MIGRATE): waiting time keeps counting
+        from its original submission; segment numbering, the checkpoint
+        budget and the resize history continue where they left off."""
+        self.advance(t)
+        self.arrival_of[job] = state.arrival
+        # waiting keeps counting from the DONOR's enqueue: queueing time
+        # spent there plus the transit is genuine waiting, unlike the
+        # running time a preempted job's requeue excludes
+        self._queued_at[job] = state.queued_at
+        if state.progress:
+            self.progress[job] = state.progress
+        if state.restart:
+            self.needs_restart.add(job)
+        if state.segment:
+            self._segments[job] = state.segment
+        if state.preempts:
+            self.preempt_count[job] = state.preempts
+        if state.last_g is not None:
+            self._last_g[job] = state.last_g
+        self.waiting.append(job)
+        self.migrations_in += 1
 
     def result(self, *, charge_profiling: bool = False) -> ScheduleResult:
         """Finalize. ``self.t`` is the node's last completion (its makespan)."""
         prof_energy = 0.0
         if charge_profiling:
-            prof_energy = sum(
-                self.truth[r.job].profiling_energy for r in self.records
-            )
+            charged = set()
+            for r in self.records:
+                if r.job not in charged:  # once per job, not per segment
+                    charged.add(r.job)
+                    prof_energy += self.truth[r.job].profiling_energy
         return ScheduleResult(
             policy=self.policy.name(),
             makespan=self.t,
@@ -168,17 +342,19 @@ class NodeSim:
             records=self.records,
             decision_time_s=self.decision_time,
             decision_events=self.decision_events,
+            preemptions=self.preemptions,
+            migrations_in=self.migrations_in,
+            migrations_out=self.migrations_out,
+            ckpt_energy=self.ckpt_energy,
+            resize_history=self.resize_history,
         )
-
-
-_ARRIVAL = 0  # event kinds; arrivals sort before same-time completions so a
-_DONE = 1  # completion-triggered decision always sees the newcomers
 
 
 def _auto_max_events(n_stream: int, floor: int = 100_000) -> int:
     """Deadlock-guard cap that scales with workload size: every job costs a
-    bounded number of events, so 50·|stream| with a generous floor never
-    false-trips on large sweeps while still catching true deadlocks."""
+    bounded number of events (preemption adds at most 3·max_preempts), so
+    50·|stream| with a generous floor never false-trips on large sweeps
+    while still catching true deadlocks."""
     return max(floor, 50 * n_stream)
 
 
@@ -192,6 +368,7 @@ def simulate(
     charge_profiling: bool = False,
     slowdown_model=None,
     max_events: Optional[int] = None,
+    elastic: Optional[ElasticConfig] = None,
 ) -> ScheduleResult:
     """Run ``policy`` over the workload; returns exact energy/makespan.
 
@@ -201,8 +378,14 @@ def simulate(
     paper's static single-window setup.
 
     ``slowdown_model(job, g, co_running) -> factor ≥ 1`` optionally models
-    residual interference (NUMA-aware placement keeps it ≈ 1; §V-C's
-    cross-domain GPU case can be modeled by the caller).
+    residual interference.  A model with ``domain_aware = True`` (e.g.
+    ``repro.core.perfmodel.DomainInterferenceModel``) additionally receives
+    the actual placement (units, home domain, running set) so the penalty
+    keys on real domain co-residency instead of the co-runner count.
+
+    ``elastic`` — optional ``ElasticConfig`` enabling preemption/
+    checkpoint-restart and (with an elastic-aware policy) GPU resizing on
+    completion events; ``None`` reproduces the static loop bit-exactly.
 
     ``max_events`` defaults to ``max(100_000, 50·|stream|)`` so large
     sweeps never false-trip the deadlock guard.
@@ -219,42 +402,27 @@ def simulate(
     if max_events is None:
         max_events = _auto_max_events(len(stream))
 
-    sim = NodeSim(node, truth, policy, slowdown_model=slowdown_model)
-    heap: List[Tuple[float, int, int, object]] = []
-    seq = 0
+    sim = NodeSim(node, truth, policy, slowdown_model=slowdown_model,
+                  elastic=elastic)
+
+    def arrive(job: str, t: float) -> str:
+        sim.arrive(job, t)
+        return ""
+
+    loop = EventLoop(
+        {"": sim},
+        arrive=arrive,
+        max_events=max_events,
+        cap_msg="simulator event cap exceeded (policy deadlock?)",
+        elastic=elastic,
+    )
     for at, job in stream:
         if at <= 0.0:
             sim.arrival_of[job] = 0.0
             sim.waiting.append(job)
         else:
-            heapq.heappush(heap, (at, _ARRIVAL, seq, job))
-            seq += 1
-
-    def push_launched(launched: List[RunningJob]) -> None:
-        nonlocal seq
-        for rj in launched:
-            heapq.heappush(heap, (rj.end, _DONE, seq, rj))
-            seq += 1
-
-    push_launched(sim.invoke_policy())
-
-    events = 0
-    while heap:
-        events += 1
-        if events > max_events:
-            raise RuntimeError("simulator event cap exceeded (policy deadlock?)")
-        et, kind, _, payload = heapq.heappop(heap)
-        if kind == _ARRIVAL:
-            # batch all arrivals at this instant into one scheduling event
-            sim.arrive(payload, et)
-            while heap and heap[0][0] == et and heap[0][1] == _ARRIVAL:
-                _, _, _, job = heapq.heappop(heap)
-                sim.arrive(job, et)
-            push_launched(sim.invoke_policy())
-        else:
-            sim.complete(payload)
-            if sim.waiting:
-                push_launched(sim.invoke_policy())
+            loop.queue.push(at, EVT_ARRIVAL, job)
+    loop.run()
 
     if sim.waiting:
         raise RuntimeError(

@@ -82,6 +82,21 @@ class RunningJob:
     start: float
     end: float
     power: float
+    # elastic substrate state (repro.core.events); inert for static runs
+    frac0: float = 0.0  # work fraction completed before this segment
+    restart: float = 0.0  # restart overhead charged at this segment's start
+    preempted: bool = False  # a PREEMPT event supersedes this job's COMPLETE
+    frac_ckpt: float = 0.0  # work fraction frozen at the checkpoint decision
+    record: Optional["JobRecord"] = field(default=None, compare=False, repr=False)
+
+    def frac_at(self, t: float) -> float:
+        """Completed-work fraction at time ``t`` (useful work excludes the
+        restart overhead at the segment head)."""
+        useful = self.end - self.start - self.restart
+        if useful <= 0.0:
+            return 1.0
+        elapsed = min(max(t - self.start - self.restart, 0.0), useful)
+        return self.frac0 + (1.0 - self.frac0) * elapsed / useful
 
 
 @dataclass
@@ -120,10 +135,18 @@ class JobRecord:
     arrival: float = 0.0  # when the job entered the system (0 = static queue)
     node: str = ""  # cluster node id; "" for single-node simulate()
     domain: int = -1  # isolation domain the job was homed in (-1 = unknown)
+    segment: int = 0  # run segment index (a preempted job has several)
+    kind: str = "run"  # "run" = ran to completion, "ckpt" = checkpointed
+    ckpt_energy: float = 0.0  # checkpoint-write energy inside busy_energy
+    queued: float = 0.0  # when this segment entered a waiting queue
 
     @property
     def wait(self) -> float:
-        return self.start - self.arrival
+        """Genuine queueing time before this segment started.  For the
+        first segment ``queued`` equals ``arrival``; a resumed/migrated
+        segment measures from its re-enqueue instant, so preempted jobs do
+        not count their own running time as waiting."""
+        return self.start - max(self.queued, self.arrival)
 
 
 @dataclass
@@ -136,10 +159,22 @@ class ScheduleResult:
     records: List[JobRecord]
     decision_time_s: float = 0.0  # total wall-clock spent inside the policy
     decision_events: int = 0
+    # elastic substrate accounting (all zero/empty for static runs)
+    preemptions: int = 0  # checkpoints taken on this node
+    migrations_in: int = 0  # jobs that arrived via MIGRATE events
+    migrations_out: int = 0  # jobs this node handed to another node
+    ckpt_energy: float = 0.0  # checkpoint-write energy (inside busy_energy)
+    resize_history: Dict[str, List[Tuple[float, int, int]]] = field(
+        default_factory=dict
+    )  # job -> [(relaunch t, g_old, g_new)]
 
     @property
     def total_energy(self) -> float:
         return self.busy_energy + self.idle_energy + self.profiling_energy
+
+    @property
+    def resizes(self) -> int:
+        return sum(len(v) for v in self.resize_history.values())
 
     @property
     def edp(self) -> float:
@@ -191,6 +226,23 @@ class ClusterResult:
     @property
     def decision_events(self) -> int:
         return sum(r.decision_events for r in self.per_node.values())
+
+    @property
+    def preemptions(self) -> int:
+        return sum(r.preemptions for r in self.per_node.values())
+
+    @property
+    def migrations(self) -> int:
+        """Completed migrations (arrivals on the receiving node)."""
+        return sum(r.migrations_in for r in self.per_node.values())
+
+    @property
+    def resizes(self) -> int:
+        return sum(r.resizes for r in self.per_node.values())
+
+    @property
+    def ckpt_energy(self) -> float:
+        return sum(r.ckpt_energy for r in self.per_node.values())
 
     @property
     def records(self) -> List[JobRecord]:

@@ -179,6 +179,114 @@ def test_trace_replay_gives_identical_schedule():
 
 
 # ---------------------------------------------------------------------------
+# Datacenter trace loader (ISSUE 4 satellite)
+# ---------------------------------------------------------------------------
+
+SAMPLE_TRACE = __file__.rsplit("/", 2)[0] + "/benchmarks/data/datacenter_sample.csv"
+
+
+def test_datacenter_sample_loads_and_replays():
+    from repro.core import from_datacenter_csv
+
+    stream = from_datacenter_csv(
+        SAMPLE_TRACE, app_map=lambda a: a if a in C.APP_ORDER else None
+    )
+    assert len(stream) == 22  # 24 rows, 2 unmodeled vc-etl jobs dropped
+    assert stream[0].t == 0.0  # rebased to the first submission
+    assert all(stream[i].t <= stream[i + 1].t for i in range(len(stream) - 1))
+    assert len({a.name for a in stream}) == len(stream)  # dup ids uniquified
+    assert all(a.app in C.APP_ORDER for a in stream)
+    # ISO timestamps: 08:01:12 -> 08:14:55 is 823 s
+    lbm = next(a for a in stream if a.app == "lbm")
+    assert lbm.t == pytest.approx(823.0)
+    # the stream replays through the cluster like any generated one
+    res = hetero_cluster(EnergyAwareDispatcher()).simulate(stream)
+    assert sorted(r.job for r in res.records) == sorted(a.name for a in stream)
+
+
+def test_datacenter_loader_roundtrip_and_options():
+    from repro.core import from_datacenter_csv
+
+    text = (
+        "job_id,submit_time,app\n"
+        "j1,100.0,alpha\n"
+        "j2,40.0,beta\n"
+        "j1,160.0,alpha\n"
+        "j3,70.0,dropme\n"
+        "j1#1,220.0,alpha\n"
+    )
+    stream = from_datacenter_csv(
+        text, app_map={"alpha": "gpt2", "beta": "bert"}
+    )
+    # second j1 uniquifies to j1#1; the LITERAL j1#1 row then probes past it
+    assert [(a.t, a.name, a.app) for a in stream] == [
+        (0.0, "j2", "bert"), (60.0, "j1", "gpt2"), (120.0, "j1#1", "gpt2"),
+        (180.0, "j1#1#1", "gpt2"),
+    ]
+    # byte-stable round-trip through the canonical trace format
+    assert loads_trace(dumps_trace(stream)) == stream
+    # time_scale compresses; rebase=False keeps raw timestamps
+    fast = from_datacenter_csv(
+        text, app_map={"alpha": "gpt2", "beta": "bert"}, time_scale=0.5
+    )
+    assert [a.t for a in fast] == [0.0, 30.0, 60.0, 90.0]
+    raw = from_datacenter_csv(
+        text, app_map={"alpha": "gpt2", "beta": "bert"}, rebase=False
+    )
+    assert [a.t for a in raw] == [40.0, 100.0, 160.0, 220.0]
+
+
+def test_datacenter_loader_rejects_missing_columns():
+    from repro.core import from_datacenter_csv
+
+    with pytest.raises(ValueError, match="submit_time"):
+        from_datacenter_csv("job_id,when,app\nj1,1.0,x\n")
+    with pytest.raises(ValueError, match="unparseable"):
+        from_datacenter_csv("job_id,submit_time,app\nj1,not-a-time,x\n")
+
+
+# ---------------------------------------------------------------------------
+# Cluster-level greedy oracle bound (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_oracle_bound_lower_bounds_real_runs():
+    from repro.core import cluster_oracle_bound
+
+    stream = bursty_stream(C.APP_ORDER, rate=1 / 600, n=20, burst=4, seed=9)
+    specs = [NodeSpec("h100-0", H100), NodeSpec("a100-0", A100),
+             NodeSpec("v100-0", V100)]
+    bound = cluster_oracle_bound(
+        specs, lambda s: C.build_system(s.chip.name), stream
+    )
+    assert 0 < bound["energy_lb"] and 0 < bound["makespan_lb"]
+    assert bound["edp_lb"] == bound["energy_lb"] * bound["makespan_lb"]
+    for disp in (RoundRobinDispatcher(), EnergyAwareDispatcher()):
+        res = hetero_cluster(disp).simulate(stream)
+        assert bound["energy_lb"] <= res.total_energy
+        assert bound["makespan_lb"] <= res.makespan
+        assert bound["edp_lb"] <= res.edp
+
+
+def test_cluster_oracle_bound_exact_on_trivial_case():
+    from repro.core import cluster_oracle_bound
+
+    truth = {"solo": JobProfile(name="solo", runtime={4: 100.0},
+                                busy_power={4: 400.0})}
+    specs = [NodeSpec("n0", H100)]
+    bound = cluster_oracle_bound(
+        specs, lambda s: truth, [Arrival(t=50.0, name="solo#0", app="solo")]
+    )
+    # one job, one node: both bounds are tight
+    assert bound["energy_lb"] == 100.0 * 400.0
+    assert bound["makespan_lb"] == 150.0
+    with pytest.raises(ValueError, match="no node"):
+        cluster_oracle_bound(
+            specs, lambda s: truth, [Arrival(t=0.0, name="g", app="ghost")]
+        )
+
+
+# ---------------------------------------------------------------------------
 # Dispatcher feasibility
 # ---------------------------------------------------------------------------
 

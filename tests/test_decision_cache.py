@@ -162,6 +162,147 @@ def test_epoch_reset_is_pure():
 
 
 # ---------------------------------------------------------------------------
+# Order-canonical window keys (ISSUE 4 satellite): permuted waiting windows
+# hit the same decision entry, with row order preserved on rebind
+# ---------------------------------------------------------------------------
+
+
+def _two_specs():
+    a = _mk_spec("a#0", {1: 100.0, 2: 60.0}, {1: 100.0, 2: 190.0})
+    b = _mk_spec("b#0", {1: 80.0, 4: 30.0}, {1: 120.0, 4: 400.0})
+    return a, b
+
+
+def _free_view():
+    return NodeView(t=0.0, total_units=4, domains=2, free_units=4,
+                    running=[], free_map=[True] * 4, domain_jobs=[0, 0])
+
+
+def test_permuted_window_hits_decision_cache():
+    """[A, B] and [B, A] share one decision entry; before canonical keys the
+    permuted window was a guaranteed miss."""
+    a, b = _two_specs()
+    view = _free_view()
+    cache = DecisionCache()
+    b1 = enumerate_scored([a, b], view, list(view.free_map), lam=0.35, cache=cache)
+    b2 = enumerate_scored([b, a], view, list(view.free_map), lam=0.35, cache=cache)
+    assert cache.decision_hits == 1 and cache.decision_misses == 1
+    assert b2.scores is b1.scores  # arrays shared through the rebind
+    # the permuted batch must equal a fresh enumeration of the permuted
+    # window as a scored-action *set* (purity)
+    fresh = enumerate_scored([b, a], view, list(view.free_map), lam=0.35)
+    def as_set(batch):
+        return {
+            (round(s, 12), frozenset((sp.name, m.g) for sp, m in act))
+            for s, act in batch.to_list()
+        }
+    assert as_set(b2) == as_set(fresh)
+    # and the chosen action picks the same (job, g) set
+    ib, jf = b2.best_cached(), fresh.best_cached()
+    assert {(sp.name, m.g) for sp, m in b2.action(ib)} == {
+        (sp.name, m.g) for sp, m in fresh.action(jf)
+    }
+
+
+def test_permuted_window_rebind_binds_tokens_not_positions():
+    """On a permuted hit every stored row must point at the spec with the
+    *same structure*, not the same window position."""
+    a, b = _two_specs()
+    view = _free_view()
+    cache = DecisionCache()
+    enumerate_scored([a, b], view, list(view.free_map), lam=0.35, cache=cache)
+    b2 = enumerate_scored([b, a], view, list(view.free_map), lam=0.35, cache=cache)
+    mode_gs = {tuple(m.g for m in s.modes): s.name for s in (a, b)}
+    for i in range(len(b2)):
+        for sp, m in b2.action(i):
+            assert m.g in {mm.g for mm in sp.modes}
+            assert mode_gs[tuple(mm.g for mm in sp.modes)] == sp.name
+
+
+def test_canonical_keys_raise_hit_rate_on_shuffled_stream():
+    """Windows holding the same jobs in different orders (arrival churn)
+    now hit; the window-order key scheme missed every permutation."""
+    rng = np.random.default_rng(0)
+    specs = [
+        _mk_spec(f"j{i}", {1: 100.0 + 7 * i, 2: 60.0 + 3 * i},
+                 {1: 100.0, 2: 190.0})
+        for i in range(4)
+    ]
+    view = _free_view()
+    cache = DecisionCache()
+    for _ in range(12):
+        order = rng.permutation(4)
+        win = [specs[i] for i in order]
+        enumerate_scored(win, view, list(view.free_map), lam=0.35, cache=cache)
+    s = cache.stats()
+    assert s["decision_misses"] == 1  # one cold build, 11 permuted hits
+    assert s["decision_hit_rate"] > 0.9
+
+
+def test_launch_memo_hits_across_permuted_windows():
+    truth = {
+        "x#0": JobProfile(name="x#0", runtime={1: 100.0, 2: 60.0},
+                          busy_power={1: 100.0, 2: 190.0}),
+        "y#0": JobProfile(name="y#0", runtime={1: 80.0, 4: 30.0},
+                          busy_power={1: 120.0, 4: 400.0}),
+    }
+    pol = EcoSched(ProfiledPerfModel(truth, noise=0.0, seed=0),
+                   lam=0.35, tau=1.0)
+    view = _free_view()
+    l1 = pol.on_event(view, ["x#0", "y#0"])
+    l2 = pol.on_event(_free_view(), ["y#0", "x#0"])
+    assert pol.launch_hits == 1
+    assert {(l.job, l.g) for l in l1} == {(l.job, l.g) for l in l2}
+
+
+def test_permuted_hit_launch_order_matches_cold_evaluation():
+    """Equal-g co-launches must come out in the CURRENT window's order on a
+    permuted memo/decision hit — the cached action originated from the
+    producer window, whose tie order differs (regression: cache-on runs
+    diverged from cache-off in record order and NUMA domains)."""
+    truth = {
+        "x#0": JobProfile(name="x#0", runtime={1: 100.0, 2: 55.0},
+                          busy_power={1: 100.0, 2: 185.0}),
+        "y#0": JobProfile(name="y#0", runtime={1: 90.0, 2: 50.0},
+                          busy_power={1: 110.0, 2: 200.0}),
+    }
+
+    def policy(cache):
+        return EcoSched(ProfiledPerfModel(truth, noise=0.0, seed=0),
+                        lam=0.35, tau=1.0, cache=cache)
+
+    view = NodeView(t=0.0, total_units=4, domains=2, free_units=4,
+                    running=[], free_map=[True] * 4, domain_jobs=[0, 0])
+    cached, cold = policy(True), policy(False)
+    for window in (["x#0", "y#0"], ["y#0", "x#0"]):
+        lc = cached.on_event(view, window)
+        lu = cold.on_event(view, window)
+        assert [(l.job, l.g) for l in lc] == [(l.job, l.g) for l in lu], window
+    assert cached.launch_hits == 1  # the permuted window really hit
+
+
+def test_exact_window_repeat_still_bit_identical():
+    """Canonical keys must not disturb the exact-repeat fast path: the
+    cache-on/off purity lock re-asserted on a stream whose windows repeat."""
+    truth = {
+        f"app#{i}": JobProfile(
+            name=f"app#{i}",
+            runtime={1: 100.0, 2: 60.0, 4: 40.0},
+            busy_power={1: 100.0, 2: 190.0, 4: 360.0},
+        )
+        for i in range(8)
+    }
+    node = Node(units=4, domains=2, idle_power_per_unit=10.0)
+    arrivals = [(35.0 * i, j) for i, j in enumerate(sorted(truth))]
+    r_on = simulate(eco(truth, cache=True), node, truth, arrivals=arrivals)
+    r_off = simulate(eco(truth, cache=False), node, truth, arrivals=arrivals)
+    assert [(r.job, r.g, r.start, r.domain) for r in r_on.records] == [
+        (r.job, r.g, r.start, r.domain) for r in r_off.records
+    ]
+    assert r_on.total_energy == r_off.total_energy
+
+
+# ---------------------------------------------------------------------------
 # ClusterState: array accounting == the PR-2 per-job reference scan
 # ---------------------------------------------------------------------------
 

@@ -187,6 +187,100 @@ def test_oracle_lower_bounds_all_policies():
     assert best.total_energy <= eco.total_energy + 1e-6
 
 
+# ---------------------------------------------------------------------------
+# Domain-co-residency interference (ISSUE 4 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_domains_of_units_spans_boundaries():
+    from repro.core import domains_of_units
+
+    assert domains_of_units((0, 1), 4, 2) == (0,)
+    assert domains_of_units((2, 3), 4, 2) == (1,)
+    assert domains_of_units((1, 2, 3), 4, 2) == (0, 1)  # the g=3 case
+    assert domains_of_units((0, 1, 2, 3), 4, 2) == (0, 1)
+    assert domains_of_units((5,), 16, 4) == (1,)
+
+
+def test_domain_interference_keys_on_actual_coresidency():
+    """The model distinguishes placements the count-only proxy cannot:
+    disjoint domains get the residual only; a shared home domain or a
+    boundary-spanning range get their own penalties."""
+    from repro.core import DomainInterferenceModel
+    from repro.core.types import RunningJob
+
+    m = DomainInterferenceModel(shared=1.08, span=1.05, residual=1.02)
+    assert m.domain_aware is True
+    assert m("j", 2, []) == 1.0  # solo is always clean
+
+    def rj(units, domain):
+        return RunningJob(job="co", g=len(units), units=tuple(units),
+                          domain=domain, start=0, end=1, power=1)
+
+    # co-runner homed in the OTHER domain, no boundary crossing: residual
+    assert m("j", 2, ["co"], units=(0, 1), domain=0,
+             running=[rj((2, 3), 1)], total_units=4, domains=2) == 1.02
+    # same home domain: shared-domain contention on top of the residual
+    assert m("j", 1, ["co"], units=(1,), domain=0,
+             running=[rj((0,), 0)], total_units=4, domains=2) == pytest.approx(
+        1.02 * 1.08
+    )
+    # 3-unit range spans both domains while a co-runner exists
+    assert m("j", 3, ["co"], units=(1, 2, 3), domain=1,
+             running=[rj((0,), 0)], total_units=4, domains=2) == pytest.approx(
+        1.02 * 1.05
+    )
+    # legacy count-only call (no placement kwargs) degrades to the residual
+    assert m("j", 2, ["co"]) == 1.02
+
+
+def test_simulator_passes_placement_to_domain_aware_model():
+    """NodeSim feeds the real allocation into a domain_aware model: 1-unit
+    co-runners in disjoint domains stay clean, while a 3-unit range that
+    crosses the domain boundary picks up exactly the span penalty — the
+    count-only proxy charged every co-running pair the same flat factor."""
+    from repro.core import DomainInterferenceModel
+    from repro.core.types import Launch
+
+    truth = {
+        "a": JobProfile(name="a", runtime={1: 100.0}, busy_power={1: 100.0}),
+        "b": JobProfile(name="b", runtime={1: 300.0, 3: 120.0},
+                        busy_power={1: 100.0, 3: 260.0}),
+    }
+    seen = {}
+    model = DomainInterferenceModel(shared=1.5, span=1.2, residual=1.0)
+
+    class Spy:
+        domain_aware = True
+
+        def __call__(self, job, g, co, **kw):
+            f = model(job, g, co, **kw)
+            seen[job] = f
+            return f
+
+    class Fixed:
+        def __init__(self, plan):
+            self.plan = dict(plan)
+
+        def name(self):
+            return "fixed"
+
+        def on_event(self, view, waiting):
+            return [Launch(job=j, g=self.plan[j]) for j in waiting]
+
+    node = Node(units=4, domains=2, idle_power_per_unit=1.0)
+    # a@1 homes in domain 0; b@3 takes units 1..3, crossing the boundary
+    simulate(Fixed({"a": 1, "b": 3}), node, truth, queue=["a", "b"],
+             slowdown_model=Spy())
+    assert seen["a"] == 1.0  # launched solo
+    assert seen["b"] == pytest.approx(1.2)  # spans both domains
+    # same pair at 1 unit each: domain-spreading keeps them disjoint
+    seen.clear()
+    simulate(Fixed({"a": 1, "b": 1}), node, truth, queue=["a", "b"],
+             slowdown_model=Spy())
+    assert seen["a"] == 1.0 and seen["b"] == 1.0
+
+
 def test_perfmodel_exact_when_noiseless():
     pm = ProfiledPerfModel(TRUTH, noise=0.0, seed=0)
     spec = pm.spec("a")

@@ -25,6 +25,14 @@ through ``from_datacenter_csv`` — real arrival shapes, same comparison.
 to ``elastic=None`` (substrate parity) and that enabling elasticity does
 not regress EDP on one small bursty row (no-regression gate).
 
+``--ablate-resize-order`` (ISSUE 5 satellite): the PR 4 caveat was that
+resizes fire mostly at drain tails because the backfill scheduling pass
+soaks freed units before ``propose_resizes`` sees them.
+``ElasticConfig(resize_before_backfill=True)`` flips that order on
+COMPLETE events; the ablation reruns the three bursty rows under both
+orders and prints one summary line per config (mean EDP / makespan /
+resize count across the rows).
+
 Writes ``benchmarks/results/elastic.csv``.  Runs in seconds on CPU.
 """
 from __future__ import annotations
@@ -174,6 +182,44 @@ def run(csv: Csv, verbose: bool = True, smoke: bool = False):
     return wins
 
 
+def run_ablate_resize_order(csv: Csv, verbose: bool = True):
+    """Resize-before-backfill vs the default resize-after order, one
+    summary line per config over the three bursty rows."""
+    import dataclasses
+
+    configs = {
+        "resize-after-backfill (default)": ELASTIC,
+        "resize-before-backfill": dataclasses.replace(
+            ELASTIC, resize_before_backfill=True
+        ),
+    }
+    streams = [
+        bursty_stream(C.APP_ORDER, rate=rate, n=n, burst=burst, seed=seed)
+        for rate, burst, n, seed in ROWS
+    ]
+    for name, cfg in configs.items():
+        t0 = time.perf_counter()
+        results = [
+            make_cluster("eco+ecosched-elastic").simulate(s, elastic=cfg)
+            for s in streams
+        ]
+        us = (time.perf_counter() - t0) * 1e6
+        edp = sum(r.edp for r in results) / len(results)
+        mk = sum(r.makespan for r in results) / len(results)
+        rsz = sum(r.resizes for r in results)
+        pre = sum(r.preemptions for r in results)
+        if verbose:
+            print(
+                f"ablate-resize-order {name}: mean EDP={edp:.3e} "
+                f"mean T={mk:.0f}s resizes={rsz} preemptions={pre}"
+            )
+        csv.add(
+            f"ablate_{'before' if cfg.resize_before_backfill else 'after'}",
+            us,
+            f"mean_edp={edp:.3e};resizes={rsz}",
+        )
+
+
 def _smoke(csv: Csv, verbose: bool) -> int:
     """CI tripwire: substrate parity + elastic no-regression, one tiny row."""
     stream = bursty_stream(C.APP_ORDER, rate=1 / 900, n=12, burst=4, seed=13)
@@ -211,7 +257,11 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ablate-resize-order", action="store_true")
     args = ap.parse_args()
     c = Csv()
-    run(c, smoke=args.smoke)
+    if args.ablate_resize_order:
+        run_ablate_resize_order(c)
+    else:
+        run(c, smoke=args.smoke)
     c.emit()

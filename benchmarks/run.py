@@ -21,6 +21,7 @@ def main() -> None:
         bench_cluster_throughput,
         bench_decision_overhead,
         bench_elastic,
+        bench_forecast,
         bench_fig1_scaling,
         bench_fig2_tradeoff,
         bench_fig6_end2end,
@@ -49,18 +50,24 @@ def main() -> None:
     bench_sensitivity.run(csv, verbose=verbose)
     bench_cluster.run(csv, verbose=verbose)
     bench_elastic.run(csv, verbose=verbose, smoke=args.quick)
+    forecast = bench_forecast.run(csv, verbose=verbose, smoke=args.quick)
     throughput = bench_cluster_throughput.run(csv, verbose=verbose, smoke=args.quick)
 
-    # perf-trajectory snapshot (ISSUE 3): decision overhead + throughput.
-    # Only full runs refresh the committed baseline (benchmarks/, not the
-    # gitignored results/) — smoke numbers are a tripwire, not a trajectory.
+    # perf-trajectory snapshots (ISSUE 3/5): decision overhead + throughput,
+    # and the forecast-vs-eager EDP rows.  Only full runs refresh the
+    # committed baselines (benchmarks/, not the gitignored results/) —
+    # smoke numbers are a tripwire, not a trajectory.
     if not args.quick:
         json_path = os.path.join(
             os.path.dirname(__file__), "BENCH_decision.json"
         )
         bench_cluster_throughput.write_json(json_path, decision, throughput)
+        forecast_path = os.path.join(
+            os.path.dirname(__file__), "BENCH_forecast.json"
+        )
+        bench_forecast.write_json(forecast_path, forecast)
         if verbose:
-            print(f"perf baseline -> {json_path}")
+            print(f"perf baselines -> {json_path}, {forecast_path}")
 
     print("\nname,us_per_call,derived")
     csv.emit()

@@ -8,6 +8,7 @@ accounting), baselines, oracle (exact B&B), metrics.
 """
 from repro.core.arrivals import (
     Arrival,
+    ArrivalRateEWMA,
     bursty_stream,
     from_datacenter_csv,
     load_trace,
@@ -26,9 +27,11 @@ from repro.core.cluster import (
     EnergyAwareDispatcher,
     LeastLoadedDispatcher,
     NodeSpec,
+    PredictiveDispatcher,
     RoundRobinDispatcher,
 )
 from repro.core.ecosched import EcoSched
+from repro.core.forecast import ForecastConfig, ForecastPlane, RefinedPerfModel
 from repro.core.engine import (
     DecisionCache,
     PlacementOracle,
@@ -65,6 +68,7 @@ from repro.core.types import (
 
 __all__ = [
     "Arrival",
+    "ArrivalRateEWMA",
     "Cluster",
     "ClusterResult",
     "ClusterState",
@@ -75,6 +79,8 @@ __all__ = [
     "EnergyAwareDispatcher",
     "EventLoop",
     "EventQueue",
+    "ForecastConfig",
+    "ForecastPlane",
     "JobProfile",
     "JobSpec",
     "Launch",
@@ -90,7 +96,9 @@ __all__ = [
     "OracleSolver",
     "PlacementOracle",
     "PlacementState",
+    "PredictiveDispatcher",
     "ProfiledPerfModel",
+    "RefinedPerfModel",
     "ScoredBatch",
     "RooflinePerfModel",
     "RoundRobinDispatcher",

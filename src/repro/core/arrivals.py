@@ -15,6 +15,15 @@ streams over the calibrated application mix:
 All randomness flows through ``np.random.default_rng(seed)``; a fixed
 seed yields a byte-identical trace (regression-locked in
 tests/test_cluster.py).
+
+``ArrivalRateEWMA`` is the online inter-arrival-rate estimator feeding
+the forecast-driven control plane (``repro.core.forecast``, ISSUE 5): two
+exponentially weighted means over recent inter-arrival gaps — a short
+horizon that reacts to bursts and a long horizon that anchors the
+baseline — whose ratio is the burst signal the plane's hysteresis gates
+on.  The short estimate is *censored* at query time by the silence since
+the last arrival, so a stale burst reading decays as soon as the stream
+goes quiet.
 """
 from __future__ import annotations
 
@@ -89,6 +98,87 @@ def bursty_stream(
             out.append(Arrival(t=round(t, 6), name=_instance(app, i), app=app))
             i += 1
     return out
+
+
+# ---------------------------------------------------------------------------
+# Online arrival-rate estimation (forecast plane input, ISSUE 5)
+# ---------------------------------------------------------------------------
+
+
+class ArrivalRateEWMA:
+    """Two-horizon EWMA over inter-arrival gaps.
+
+    ``observe(t)`` feeds each arrival instant (monotone non-decreasing;
+    same-instant burst members contribute zero gaps, which is exactly the
+    burst signature).  ``rate(now)`` inverts the short-horizon mean gap,
+    censored by the silence since the last arrival — ``max(gap_ewma,
+    now - last)`` — so the estimate cannot stay hot forever after the
+    stream stops.  ``burst_factor(now)`` is short-rate / baseline-rate:
+    ~1 in steady state, ≫1 while a burst lands, decaying back toward 1
+    through the post-burst lull.
+
+    ``horizon`` counts effective samples: the EWMA weight is
+    ``2 / (horizon + 1)`` (the classic N-period convention), so
+    ``horizon=8`` reacts within a burst or two while
+    ``baseline_horizon=64`` smooths over the whole recent stream.  Below
+    ``min_samples`` gaps the estimator reports no signal (rate 0, factor
+    1) rather than extrapolating from nothing.
+    """
+
+    def __init__(
+        self,
+        horizon: int = 8,
+        baseline_horizon: int = 64,
+        *,
+        min_samples: int = 3,
+    ):
+        if horizon < 1 or baseline_horizon < 1:
+            raise ValueError("EWMA horizons must be >= 1")
+        self.alpha_short = 2.0 / (horizon + 1)
+        self.alpha_long = 2.0 / (baseline_horizon + 1)
+        self.min_samples = min_samples
+        self.gap_short: Optional[float] = None
+        self.gap_long: Optional[float] = None
+        self.last_t: Optional[float] = None
+        self.n_gaps = 0
+
+    def observe(self, t: float) -> None:
+        if self.last_t is not None:
+            gap = max(t - self.last_t, 0.0)
+            if self.gap_short is None:
+                self.gap_short = gap
+                self.gap_long = gap
+            else:
+                self.gap_short += self.alpha_short * (gap - self.gap_short)
+                self.gap_long += self.alpha_long * (gap - self.gap_long)
+            self.n_gaps += 1
+        self.last_t = max(t, self.last_t) if self.last_t is not None else t
+
+    def _short_gap(self, now: Optional[float]) -> Optional[float]:
+        if self.n_gaps < self.min_samples or self.gap_short is None:
+            return None
+        gap = self.gap_short
+        if now is not None and self.last_t is not None:
+            gap = max(gap, now - self.last_t)  # censor: silence decays the rate
+        return gap
+
+    def rate(self, now: Optional[float] = None) -> float:
+        """Short-horizon arrival rate (jobs/s); 0 before warm-up."""
+        gap = self._short_gap(now)
+        return 0.0 if gap is None else 1.0 / max(gap, 1e-9)
+
+    def baseline_rate(self) -> float:
+        """Long-horizon anchor rate (jobs/s); 0 before warm-up."""
+        if self.n_gaps < self.min_samples or not self.gap_long:
+            return 0.0
+        return 1.0 / max(self.gap_long, 1e-9)
+
+    def burst_factor(self, now: Optional[float] = None) -> float:
+        """short-rate / baseline-rate; 1.0 whenever either is unwarmed."""
+        gap = self._short_gap(now)
+        if gap is None or self.gap_long is None:
+            return 1.0
+        return max(self.gap_long, 1e-9) / max(gap, 1e-9)
 
 
 # ---------------------------------------------------------------------------
@@ -175,6 +265,8 @@ def from_datacenter_csv(
     app_map: Optional[Union[Dict[str, str], Callable[[str], Optional[str]]]] = None,
     rebase: bool = True,
     time_scale: float = 1.0,
+    duration_col: Optional[str] = None,
+    strict: bool = False,
 ) -> List[Arrival]:
     """Philly/Helios-style submission log -> replayable ``Arrival`` stream.
 
@@ -196,7 +288,16 @@ def from_datacenter_csv(
         ``None``/missing are dropped — real logs carry job types the
         calibration does not model),
       * duplicate job ids are uniquified with ``#k`` so the stream
-        satisfies the simulator's unique-name contract.
+        satisfies the simulator's unique-name contract,
+      * ``duration_col`` — optional logged-runtime column, validated only:
+        a malformed (unparseable, negative or zero) duration raises
+        ``ValueError`` naming the row — corrupt rows must never silently
+        shape a replay,
+      * ``strict`` — promote the two silent normalizations to explicit
+        errors: an app with no ``app_map`` entry raises instead of being
+        dropped, and out-of-order submit times raise instead of being
+        sorted.  Use it when the log is supposed to be clean and a
+        surprise would mean the wrong file was loaded.
 
     The result is sorted by time (stable, so same-instant rows keep log
     order) and round-trips byte-stably through ``save_trace``/``load_trace``
@@ -210,7 +311,9 @@ def from_datacenter_csv(
     rows = list(csv.DictReader(io.StringIO(text)))
     if not rows:
         return []
-    for col in (t_col, name_col, app_col):
+    for col in (t_col, name_col, app_col) + (
+        (duration_col,) if duration_col is not None else ()
+    ):
         if col not in rows[0]:
             raise ValueError(
                 f"column {col!r} not in trace header {sorted(rows[0])!r}"
@@ -218,7 +321,20 @@ def from_datacenter_csv(
     parsed: List[Arrival] = []
     emitted: set = set()
     next_suffix: Dict[str, int] = {}
+    prev_t: Optional[float] = None
     for row in rows:
+        if duration_col is not None:
+            raw_dur = (row[duration_col] or "").strip()
+            try:
+                dur = float(raw_dur)
+            except ValueError as e:
+                raise ValueError(
+                    f"unparseable {duration_col!r} {raw_dur!r} in row {row!r}"
+                ) from e
+            if not dur > 0.0:
+                raise ValueError(
+                    f"non-positive {duration_col!r} {dur!r} in row {row!r}"
+                )
         raw_app = (row[app_col] or "").strip()
         if app_map is None:
             app = raw_app
@@ -227,8 +343,19 @@ def from_datacenter_csv(
         else:
             app = app_map.get(raw_app)
         if not app:
+            if strict:
+                raise ValueError(
+                    f"app {raw_app!r} has no app_map entry (row {row!r}); "
+                    "pass strict=False to drop unmodeled job types"
+                )
             continue  # unmodeled job type
         t = _parse_submit(row[t_col])
+        if strict and prev_t is not None and t < prev_t:
+            raise ValueError(
+                f"out-of-order submit time {row[t_col]!r} in row {row!r} "
+                "(strict=True; pass strict=False to sort)"
+            )
+        prev_t = t
         name = (row[name_col] or "").strip()
         if not name:
             raise ValueError(f"row with empty {name_col!r}: {row!r}")

@@ -26,6 +26,15 @@ most backlogged node whenever the predicted-wait gap beats the move cost.
 A dispatcher can override the default greedy pull by implementing
 ``select_migration(nm, state, sims, now, cfg) -> (donor, job) | None``.
 
+Passing ``forecast=ForecastConfig(...)`` additionally builds the
+forecast-driven control plane (``repro.core.forecast``, ISSUE 5): per-node
+queueing-aware wait forecasts feed the ``PredictiveDispatcher`` and the
+migration gap test, a hysteretic burst-risk gate charges elastic actions
+an extra margin while arrivals are bursting, and each node policy's
+Phase-I estimates refine online toward observed segment runtimes.  With
+``forecast=None`` no plane exists and schedules are bit-identical to the
+forecast-free substrate.
+
 Routing is array-backed (ISSUE 3): ``ClusterState`` holds preallocated
 numpy columns — per-node outstanding-work sums updated in place on
 launch/complete, and per-(node, app) feasibility/best-mode tables built
@@ -49,6 +58,7 @@ import numpy as np
 
 from repro.core.arrivals import Arrival
 from repro.core.events import EVT_ARRIVAL, ElasticConfig, EventLoop
+from repro.core.forecast import ForecastConfig, ForecastPlane
 from repro.core.simulator import Node, NodeSim, _auto_max_events
 from repro.core.types import ClusterResult, JobProfile, NodeView, RunningJob
 from repro.roofline.hw import ChipSpec
@@ -280,6 +290,57 @@ class EnergyAwareDispatcher:
         return best[1]
 
 
+class PredictiveDispatcher(EnergyAwareDispatcher):
+    """Queueing-aware routing (ISSUE 5): the EnergyAware score with the
+    drain proxy replaced by the forecast plane's *predicted* wait —
+    E* · (W_forecast + t*) / t* — where W_forecast inflates committed work
+    by the M/G/c heavy-traffic factor from the arrival-rate EWMA.  A node
+    that looks shallow right now but sits in a busy routing share gets
+    charged the work that will land on it while it drains.
+
+    ``Cluster.simulate`` attaches the plane when ``forecast`` is enabled;
+    without one (or with ``queueing`` off, which makes the forecast
+    degenerate to the proxy) routing is identical to
+    ``EnergyAwareDispatcher`` — parity-locked in tests/test_forecast.py.
+    """
+
+    def __init__(self):
+        self._plane: Optional[ForecastPlane] = None
+
+    def name(self) -> str:
+        return "predictive"
+
+    def reset(self) -> None:
+        self._plane = None  # re-attached per run by Cluster.simulate
+
+    def attach_forecast(self, plane: ForecastPlane) -> None:
+        self._plane = plane
+
+    def route(self, arr: Arrival, statuses: Sequence[NodeStatus]) -> str:
+        if self._plane is not None:
+            # the legacy list protocol carries no ClusterState/clock, so
+            # it cannot see the plane; routing plane-blind while
+            # migration/resize stay forecasted would silently measure as
+            # a half-forecast run
+            raise RuntimeError(
+                "PredictiveDispatcher with an attached forecast plane "
+                "requires the vectorized dispatch path; run with "
+                "fast_status=True (the default)"
+            )
+        return super().route(arr, statuses)
+
+    def route_indexed(self, ai: int, state: ClusterState, now: float) -> int:
+        if self._plane is None:
+            return super().route_indexed(ai, state, now)
+        wait = self._plane.wait_forecast(now)
+        t = state.t_best[:, ai]
+        score = np.where(
+            state.fits[:, ai], state.e_best[:, ai] * (wait + t) / t, np.inf
+        )
+        i = int(np.argmin(score))  # ties -> lowest index
+        return i if state.fits[i, ai] else -1
+
+
 # ---------------------------------------------------------------------------
 # Cluster event loop — the shared substrate (repro.core.events) with
 # dispatch, array-state bookkeeping and migration layered on top of NodeSim
@@ -323,6 +384,7 @@ class Cluster:
         max_events: Optional[int] = None,
         fast_status: bool = True,
         elastic: Optional[ElasticConfig] = None,
+        forecast: Optional[ForecastConfig] = None,
     ) -> ClusterResult:
         # stable on t only: same-instant arrivals keep submission order
         stream = sorted(stream, key=lambda a: a.t)
@@ -360,6 +422,19 @@ class Cluster:
             }
             for s in self.specs
         }
+        # forecast-driven control plane (ISSUE 5): never built on the
+        # default path, so forecast=None is bit-identical to PR 4
+        plane: Optional[ForecastPlane] = None
+        if forecast is not None and forecast.enabled:
+            plane = ForecastPlane(
+                forecast,
+                {s.name: s.units for s in self.specs},
+                state=state,
+                elastic=elastic,
+            )
+            if hasattr(self.dispatcher, "attach_forecast"):
+                self.dispatcher.attach_forecast(plane)
+
         sims: Dict[str, NodeSim] = {}
         for s in self.specs:
             # instance-keyed view of the hardware truth for this stream;
@@ -370,10 +445,13 @@ class Cluster:
                 for a in stream
                 if a.app in app_truth[s.name]
             }
+            policy = self.policy_for(s, truth_n)
+            if plane is not None and hasattr(policy, "attach_forecast"):
+                policy.attach_forecast(plane, s.name)
             sims[s.name] = NodeSim(
                 Node(s.units, s.domains, s.idle_power_per_unit),
                 truth_n,
-                self.policy_for(s, truth_n),
+                policy,
                 slowdown_model=self.slowdown_for(s) if self.slowdown_for else None,
                 name=s.name,
                 elastic=elastic,
@@ -428,6 +506,8 @@ class Cluster:
                 )
             sims[nm].arrive(arr.name, t)
             state.on_arrive(ni, ai)
+            if plane is not None:
+                plane.on_arrival(t, nm)
             return nm
 
         # array-state bookkeeping hooks the substrate fires on transitions
@@ -435,9 +515,13 @@ class Cluster:
             state.on_launch(
                 state.index[nm], state.app_index[app_of[rj.job]], rj.end, rj.g
             )
+            if plane is not None:
+                plane.on_launch(nm, rj)
 
         def on_complete(nm: str, rj: RunningJob) -> None:
             state.on_complete(state.index[nm], rj.end, rj.g)
+            if plane is not None:
+                plane.on_complete(nm, rj)
 
         def on_requeue(nm: str, job: str) -> None:
             state.on_arrive(state.index[nm], state.app_index[app_of[job]])
@@ -451,7 +535,11 @@ class Cluster:
         def migrate_candidate(nm: str, t: float):
             """Pull one waiting job from the most backlogged node onto the
             node that just completed, when the predicted-wait gap beats the
-            move cost.  A dispatcher may override via
+            move cost.  With a forecast plane the gap test runs on
+            *forecasted* waits (queueing-inflated drain) and, while the
+            burst gate is armed, demands an extra risk margin — the
+            hysteresis that fixes the PR 4 eager-migration losing seeds.
+            A dispatcher may override via
             ``select_migration(nm, state, sims, now, cfg)``."""
             hook = getattr(self.dispatcher, "select_migration", None)
             if hook is not None:
@@ -459,22 +547,51 @@ class Cluster:
             ni = state.index[nm]
             if sims[nm].placement.free_count() <= 0:
                 return None
-            out = state.outstanding(t)
-            # a checkpointed job pays its restart wherever it relaunches,
-            # so only the transit delay counts against the move; the gap
-            # test is job-independent, and donors are visited in
-            # descending-backlog order, so the first failure ends the scan
+            # One greedy proposer, two accept tests.  PR 4 path
+            # (plane=None): raw drain-proxy gap, job-independent — a
+            # checkpointed job pays its restart wherever it relaunches,
+            # so only the transit delay counts against the move.
+            # Forecast path: the same scan on *forecasted* waits, but a
+            # fitting job is only pulled when its per-job completion
+            # forecast predicts it finishes earlier on the receiver —
+            #   (W_fc[donor] − own queued work + t_best[donor]) −
+            #   (W_fc[recv] + delay + t_best[recv]) > burst-risk penalty
+            # — which is what kills the PR 4 losing pulls: a job whose
+            # best mode on the drained (slower) node runs thousands of
+            # seconds longer never wins the gap test job-blindly won,
+            # and an armed burst gate demands extra margin on top.
+            if plane is None:
+                out = state.outstanding(t)
+                penalty = None
+            else:
+                out = plane.wait_forecast(t)
+                penalty = plane.migration_penalty_s(nm, t)
             threshold = out[ni] + elastic.migration_delay + elastic.min_gain_s
             for di in np.argsort(-out, kind="stable"):
                 di = int(di)
                 if di == ni or state.n_waiting[di] == 0:
                     continue
                 if out[di] <= threshold:
-                    break
+                    break  # donors come in descending order: scan is done
                 dsim = sims[state.names[di]]
                 for job in dsim.waiting:
-                    if state.fits[ni, state.app_index[app_of[job]]]:
+                    ai2 = state.app_index[app_of[job]]
+                    if not state.fits[ni, ai2]:
+                        continue
+                    if penalty is None:
                         return state.names[di], job
+                    # the donor backlog includes the candidate's own
+                    # queued min-work; staying means waiting behind the
+                    # *rest* of it.  The gap threshold above already
+                    # charged min_gain_s, so this veto only blocks moves
+                    # the forecast predicts to be harmful.
+                    own = state.min_unit_s[di, ai2] / state.units[di]
+                    gain = (out[di] - own + state.t_best[di, ai2]) - (
+                        out[ni] + elastic.migration_delay + state.t_best[ni, ai2]
+                    )
+                    if gain > penalty:
+                        return state.names[di], job
+                    plane.migrations_vetoed += 1
             return None
 
         loop = EventLoop(
@@ -521,4 +638,5 @@ class Cluster:
             per_node=per_node,
             makespan=makespan,
             tail_idle_energy=tail_idle,
+            forecast=plane.summary() if plane is not None else {},
         )

@@ -43,6 +43,11 @@ Beyond-paper options (all default-off; §Perf ablations):
     COMPLETE events: running jobs may be checkpointed and relaunched at a
     now-better count, with the candidates scored through the same batched
     Eq. (1) path plus a switch-cost bias.
+  * forecast plane — with a ``ForecastConfig`` (repro.core.forecast) the
+    entry points call ``attach_forecast``: the perf model becomes an
+    online-refined posterior (τ-filtered specs re-derive when it bumps
+    its ``version``) and the resize switch-cost bias scales with
+    forecasted queue pressure.  Never attached on the default path.
 """
 from __future__ import annotations
 
@@ -90,6 +95,11 @@ class EcoSched:
         self._launch_memo: "OrderedDict[Tuple, Tuple]" = OrderedDict()
         self._launch_epoch = 0
         self.launch_hits = 0
+        # forecast plane (repro.core.forecast): attached by the simulation
+        # entry points when a ForecastConfig is enabled; None otherwise
+        self._plane = None
+        self._node = ""
+        self._pm_version = 0
 
     def name(self) -> str:
         return "ecosched" if not self.lookahead else "ecosched+lookahead"
@@ -107,9 +117,25 @@ class EcoSched:
         s["event_hit_rate"] = h / (h + m) if h + m else 0.0
         return s
 
+    def attach_forecast(self, plane, node: str = "") -> None:
+        """Wire the forecast plane (repro.core.forecast.ForecastPlane):
+        wraps the perf model with the plane's refined posterior (online
+        refinement, tentpole (a)) and conditions the resize switch-cost
+        bias on forecasted queue pressure (tentpole (c)).  Called by the
+        simulation entry points before any event fires."""
+        self._plane = plane
+        self._node = node
+        self.perf_model = plane.refined_model(node, self.perf_model)
+
     def _spec(self, job: str) -> JobSpec:
         """τ-filtered Phase-I spec, computed once per job and reused across
-        events (the estimates themselves are per-job constants, §III-B)."""
+        events (the estimates themselves are per-job constants, §III-B —
+        unless an online-refined model bumps its ``version``, which drops
+        the filtered cache so decisions see the posterior)."""
+        v = getattr(self.perf_model, "version", 0)
+        if v != self._pm_version:
+            self._filtered.clear()
+            self._pm_version = v
         s = self._filtered.get(job)
         if s is None:
             if len(self._filtered) >= 100_000:
@@ -276,6 +302,15 @@ class EcoSched:
             return []
         best: Optional[Tuple[float, Launch]] = None
         overhead = cfg.ckpt_time + cfg.restart_time
+        # forecast-conditioned switch cost: under burst risk / queue
+        # pressure the freed units are about to be needed, so changing a
+        # count must clear a larger margin (identical to cfg.switch_cost
+        # when no plane is attached)
+        switch_cost = (
+            cfg.switch_cost
+            if self._plane is None
+            else self._plane.resize_switch_cost(self._node, cfg.switch_cost, view.t)
+        )
         for rj in view.running:
             if rj.preempted or frac_of(rj) >= 1.0:
                 continue
@@ -292,7 +327,7 @@ class EcoSched:
             if cur is None:
                 continue  # current count fell to the τ-filter; leave it be
             hypo = self._freed_view(view, rj)
-            g_new = self._best_resize_count(spec, hypo, cfg, rj.g)
+            g_new = self._best_resize_count(spec, hypo, switch_cost, rj.g)
             if g_new is None or g_new == rj.g:
                 continue
             pred_rem = overhead + useful_rem * (
@@ -326,7 +361,7 @@ class EcoSched:
         )
 
     def _best_resize_count(
-        self, spec: JobSpec, hypo: NodeView, cfg, g_cur: int
+        self, spec: JobSpec, hypo: NodeView, switch_cost: float, g_cur: int
     ) -> Optional[int]:
         """Best count for one job on the freed node state, switch-cost
         biased, scored through whichever backend the policy runs on."""
@@ -340,7 +375,7 @@ class EcoSched:
                 if not a:
                     continue
                 g = a[0][1].g
-                key = (s + (cfg.switch_cost if g != g_cur else 0.0), -g)
+                key = (s + (switch_cost if g != g_cur else 0.0), -g)
                 if best is None or key < best[0]:
                     best = (key, g)
             return best[1] if best else None
@@ -350,7 +385,7 @@ class EcoSched:
             return None
         # single-job window: each non-empty row's total_g IS its count
         bias = np.where(
-            (batch.total_g != g_cur) & (batch.n_jobs > 0), cfg.switch_cost, 0.0
+            (batch.total_g != g_cur) & (batch.n_jobs > 0), switch_cost, 0.0
         )
         if self.engine == "jax":
             from repro.kernels.score_reduce import score_reduce

@@ -92,6 +92,12 @@ class ElasticConfig:
     min_gain_s: float = 60.0  # predicted saving must exceed this
     max_preempts: int = 2  # checkpoints per job (bounds churn)
     switch_cost: float = 0.05  # Eq. (1) bias on resize candidates != current g
+    # resize-order ablation (ISSUE 5 satellite): evaluate resizes *before*
+    # the backfill scheduling pass on COMPLETE events, so a running job's
+    # upsize gets first claim on freed units instead of backfill soaking
+    # them (the PR 4 caveat: resizes fire mostly at drain tails).  Off by
+    # default — the default path is byte-identical to PR 4.
+    resize_before_backfill: bool = False
 
     @property
     def any_enabled(self) -> bool:
@@ -211,9 +217,10 @@ class EventLoop:
                 sim.complete(rj)
                 if self.on_complete is not None:
                     self.on_complete(nm, rj)
-                if sim.waiting:
-                    self._schedule(nm)
-                if self.elastic is not None:
+                if self.elastic is None:
+                    if sim.waiting:
+                        self._schedule(nm)
+                else:
                     self._post_complete(nm, t)
             elif kind == EVT_PREEMPT:
                 nm, rj = payload
@@ -239,8 +246,17 @@ class EventLoop:
     # -- elastic hooks (resize + migration), bounded per COMPLETE event -----
 
     def _post_complete(self, nm: str, t: float) -> None:
+        """Backfill + elastic actions after one COMPLETE.  The default
+        order backfills waiting jobs before evaluating resizes (the PR 4
+        contract); ``resize_before_backfill`` swaps the two so a resize
+        gets first claim on the freed units (ablation, ISSUE 5)."""
         cfg = self.elastic
-        if cfg.resize:
+        sim = self.sims[nm]
+        if cfg.resize and cfg.resize_before_backfill:
+            self._try_resize(nm, t)
+        if sim.waiting:
+            self._schedule(nm)
+        if cfg.resize and not cfg.resize_before_backfill:
             self._try_resize(nm, t)
         if cfg.migrate and self.migrate_candidate is not None:
             self._try_migrate(nm, t)

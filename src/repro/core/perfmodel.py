@@ -20,6 +20,13 @@ performed once").
 compiled dry-run gives the three roofline terms, and scaling a job from g
 to g′ sub-slices rescales the terms analytically — one profile instead of
 one per count.  Same JobSpec interface, so every policy runs on either.
+
+Any of these can additionally be wrapped by
+``repro.core.forecast.RefinedPerfModel`` (ISSUE 5): the Phase-I estimates
+become priors that shrink toward observed segment runtimes as jobs
+complete — the estimates stay static only on the default (forecast-off)
+path.  ``_mk_spec`` is the shared spec constructor all of them (and the
+refinement layer) normalize through.
 """
 from __future__ import annotations
 

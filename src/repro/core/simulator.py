@@ -214,7 +214,7 @@ class NodeSim:
             power = prof.busy_power[ln.g]
             rj = RunningJob(
                 job=ln.job, g=ln.g, units=units, domain=domain,
-                start=self.t, end=self.t + dur, power=power,
+                start=self.t, end=self.t + dur, power=power, factor=factor,
                 frac0=frac0, restart=restart,
             )
             self.waiting.remove(ln.job)
@@ -369,6 +369,7 @@ def simulate(
     slowdown_model=None,
     max_events: Optional[int] = None,
     elastic: Optional[ElasticConfig] = None,
+    forecast=None,
 ) -> ScheduleResult:
     """Run ``policy`` over the workload; returns exact energy/makespan.
 
@@ -386,6 +387,13 @@ def simulate(
     ``elastic`` — optional ``ElasticConfig`` enabling preemption/
     checkpoint-restart and (with an elastic-aware policy) GPU resizing on
     completion events; ``None`` reproduces the static loop bit-exactly.
+
+    ``forecast`` — optional ``ForecastConfig`` (repro.core.forecast): on a
+    single node this wires online perf-model refinement (COMPLETE events
+    feed the posterior, the policy's estimates shrink toward observed
+    runtimes) and burst-conditioned resize bias; queueing wait forecasts
+    and migration are cluster-level and stay inert here.  ``None`` (or an
+    all-off config) never builds a plane — bit-identical schedules.
 
     ``max_events`` defaults to ``max(100_000, 50·|stream|)`` so large
     sweeps never false-trip the deadlock guard.
@@ -405,8 +413,20 @@ def simulate(
     sim = NodeSim(node, truth, policy, slowdown_model=slowdown_model,
                   elastic=elastic)
 
+    # forecast plane (ISSUE 5): never built on the default path, so
+    # forecast=None rides the exact pre-forecast loop
+    plane = None
+    if forecast is not None and forecast.enabled:
+        from repro.core.forecast import ForecastPlane
+
+        plane = ForecastPlane(forecast, {"": node.units}, elastic=elastic)
+        if hasattr(policy, "attach_forecast"):
+            policy.attach_forecast(plane, "")
+
     def arrive(job: str, t: float) -> str:
         sim.arrive(job, t)
+        if plane is not None:
+            plane.on_arrival(t)
         return ""
 
     loop = EventLoop(
@@ -415,11 +435,15 @@ def simulate(
         max_events=max_events,
         cap_msg="simulator event cap exceeded (policy deadlock?)",
         elastic=elastic,
+        on_launch=(plane.on_launch if plane is not None else None),
+        on_complete=(plane.on_complete if plane is not None else None),
     )
     for at, job in stream:
         if at <= 0.0:
             sim.arrival_of[job] = 0.0
             sim.waiting.append(job)
+            if plane is not None:
+                plane.on_arrival(0.0)
         else:
             loop.queue.push(at, EVT_ARRIVAL, job)
     loop.run()
@@ -428,4 +452,7 @@ def simulate(
         raise RuntimeError(
             f"policy {policy.name()} finished with waiting jobs {sim.waiting}"
         )
-    return sim.result(charge_profiling=charge_profiling)
+    result = sim.result(charge_profiling=charge_profiling)
+    if plane is not None:
+        result.forecast = plane.summary()
+    return result

@@ -82,6 +82,7 @@ class RunningJob:
     start: float
     end: float
     power: float
+    factor: float = 1.0  # interference slowdown applied to this segment
     # elastic substrate state (repro.core.events); inert for static runs
     frac0: float = 0.0  # work fraction completed before this segment
     restart: float = 0.0  # restart overhead charged at this segment's start
@@ -167,6 +168,10 @@ class ScheduleResult:
     resize_history: Dict[str, List[Tuple[float, int, int]]] = field(
         default_factory=dict
     )  # job -> [(relaunch t, g_old, g_new)]
+    # forecast-plane observability (repro.core.forecast; empty when the
+    # run had no plane): final rate estimates, burst-gate state/flips,
+    # migrations vetoed by the risk penalty, posterior feed counts
+    forecast: Dict[str, float] = field(default_factory=dict)
 
     @property
     def total_energy(self) -> float:
@@ -195,6 +200,8 @@ class ClusterResult:
     per_node: Dict[str, ScheduleResult]
     makespan: float
     tail_idle_energy: float = 0.0
+    # forecast-plane observability (repro.core.forecast); empty without one
+    forecast: Dict[str, float] = field(default_factory=dict)
 
     @property
     def busy_energy(self) -> float:

@@ -245,6 +245,51 @@ def test_datacenter_loader_rejects_missing_columns():
         from_datacenter_csv("job_id,submit_time,app\nj1,not-a-time,x\n")
 
 
+def test_datacenter_loader_rejects_malformed_durations():
+    """ISSUE 5 satellite: corrupt duration columns are explicit errors,
+    never silent drops."""
+    from repro.core import from_datacenter_csv
+
+    head = "job_id,submit_time,app,duration\n"
+    ok = from_datacenter_csv(head + "j1,1.0,x,250.0\n", duration_col="duration")
+    assert [(a.name, a.app) for a in ok] == [("j1", "x")]
+    with pytest.raises(ValueError, match="non-positive 'duration'"):
+        from_datacenter_csv(head + "j1,1.0,x,-5.0\n", duration_col="duration")
+    with pytest.raises(ValueError, match="non-positive 'duration'"):
+        from_datacenter_csv(head + "j1,1.0,x,0\n", duration_col="duration")
+    with pytest.raises(ValueError, match="unparseable 'duration'"):
+        from_datacenter_csv(head + "j1,1.0,x,soon\n", duration_col="duration")
+    with pytest.raises(ValueError, match="'duration' not in trace header"):
+        from_datacenter_csv("job_id,submit_time,app\nj1,1.0,x\n",
+                            duration_col="duration")
+    # validation applies even to rows an app_map would drop — corrupt is
+    # corrupt regardless of modeling
+    with pytest.raises(ValueError, match="non-positive"):
+        from_datacenter_csv(head + "j1,1.0,unmodeled,-1\n",
+                            duration_col="duration", app_map={"x": "gpt2"})
+
+
+def test_datacenter_loader_strict_mode():
+    """ISSUE 5 satellite: strict=True promotes the silent normalizations
+    (unmodeled-app drop, out-of-order sort) to explicit errors."""
+    from repro.core import from_datacenter_csv
+
+    text = "job_id,submit_time,app\nj1,100.0,alpha\nj2,40.0,beta\n"
+    # default: sorted silently
+    assert [a.name for a in from_datacenter_csv(text)] == ["j2", "j1"]
+    with pytest.raises(ValueError, match="out-of-order submit time"):
+        from_datacenter_csv(text, strict=True)
+    # unknown app under an app_map: dropped by default, an error in strict
+    mapped = "job_id,submit_time,app\nj1,1.0,alpha\nj2,2.0,mystery\n"
+    assert len(from_datacenter_csv(mapped, app_map={"alpha": "gpt2"})) == 1
+    with pytest.raises(ValueError, match="no app_map entry"):
+        from_datacenter_csv(mapped, app_map={"alpha": "gpt2"}, strict=True)
+    # a clean trace passes strict untouched
+    clean = "job_id,submit_time,app\nj1,1.0,alpha\nj2,2.0,alpha\n"
+    assert len(from_datacenter_csv(clean, app_map={"alpha": "gpt2"},
+                                   strict=True)) == 2
+
+
 # ---------------------------------------------------------------------------
 # Cluster-level greedy oracle bound (ISSUE 4)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,482 @@
+"""Forecast-driven control plane (ISSUE 5): forecast-off bit-identity,
+arrival-rate EWMA + hysteretic burst gate, online perf-model refinement,
+queueing wait forecasts, the forecasted migration veto, resize-order
+ablation knob, and the committed adversarial-migration regression seed."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Arrival,
+    ArrivalRateEWMA,
+    Cluster,
+    EcoSched,
+    ElasticConfig,
+    EnergyAwareDispatcher,
+    ForecastConfig,
+    ForecastPlane,
+    JobProfile,
+    Node,
+    NodeSpec,
+    PredictiveDispatcher,
+    ProfiledPerfModel,
+    RefinedPerfModel,
+    SequentialMax,
+    bursty_stream,
+    simulate,
+)
+from repro.core import calibration as C
+from repro.core.types import RunningJob
+from repro.roofline.hw import H100
+
+LAM, TAU, NOISE, SEED = 0.35, 0.45, 0.02, 1
+
+ELASTIC = ElasticConfig(
+    resize=True, migrate=True, ckpt_time=30.0, restart_time=15.0,
+    migration_delay=10.0, min_gain_s=120.0, max_preempts=2, switch_cost=0.05,
+)
+
+# the committed PR 4 "eager migration loses" case (bench_forecast.ADVERSARIAL)
+ADVERSARIAL_RATE, ADVERSARIAL_SEED = 1 / 900, 7
+
+
+def hetero(dispatcher):
+    return Cluster(
+        _specs(),
+        truth_for=lambda s: C.build_system(s.chip.name),
+        policy_for=lambda s, t: EcoSched(
+            ProfiledPerfModel(t, noise=NOISE, seed=SEED), lam=LAM, tau=TAU
+        ),
+        dispatcher=dispatcher,
+        slowdown_for=lambda s: C.cross_numa_slowdown,
+    )
+
+
+def _specs():
+    from repro.roofline.hw import A100, V100
+
+    return [
+        NodeSpec("h100-0", H100),
+        NodeSpec("a100-0", A100),
+        NodeSpec("v100-0", V100),
+    ]
+
+
+def keyed(res):
+    return [(r.job, r.node, r.g, r.start, r.end) for r in res.records]
+
+
+# ---------------------------------------------------------------------------
+# Forecast-off parity: no plane is ever built, schedules stay PR 4-exact
+# ---------------------------------------------------------------------------
+
+
+def test_all_off_forecast_config_is_bit_identical_cluster():
+    stream = bursty_stream(C.APP_ORDER, rate=1 / 700, n=18, burst=4, seed=5)
+    off = ForecastConfig(refine=False, queueing=False, burst_gate=False)
+    assert not off.enabled
+    for elastic in (None, ELASTIC):
+        a = hetero(EnergyAwareDispatcher()).simulate(stream, elastic=elastic)
+        b = hetero(EnergyAwareDispatcher()).simulate(
+            stream, elastic=elastic, forecast=off
+        )
+        assert keyed(a) == keyed(b)
+        assert a.total_energy == b.total_energy and a.makespan == b.makespan
+        assert b.forecast == {}
+
+
+def test_all_off_forecast_config_is_bit_identical_single_node():
+    truth = C.build_system("h100")
+    node = Node(4, 2, C.idle_power("h100"))
+
+    def pol():
+        return EcoSched(ProfiledPerfModel(truth, noise=NOISE, seed=SEED),
+                        lam=LAM, tau=TAU)
+
+    a = simulate(pol(), node, truth, queue=list(C.APP_ORDER))
+    b = simulate(pol(), node, truth, queue=list(C.APP_ORDER),
+                 forecast=ForecastConfig(refine=False, queueing=False,
+                                         burst_gate=False))
+    assert [(r.job, r.g, r.start, r.end) for r in a.records] == [
+        (r.job, r.g, r.start, r.end) for r in b.records
+    ]
+    assert a.total_energy == b.total_energy
+
+
+def test_unattached_predictive_dispatcher_matches_energy_aware():
+    """Without a plane the predictive score degenerates to the eco score."""
+    stream = bursty_stream(C.APP_ORDER, rate=1 / 500, n=20, burst=4, seed=9)
+    for elastic in (None, ELASTIC):
+        eco = hetero(EnergyAwareDispatcher()).simulate(stream, elastic=elastic)
+        pred = hetero(PredictiveDispatcher()).simulate(stream, elastic=elastic)
+        assert keyed(eco) == keyed(pred)
+        assert eco.total_energy == pred.total_energy
+
+
+def test_enabled_plane_reports_forecast_state():
+    stream = bursty_stream(C.APP_ORDER, rate=1 / 900, n=14, burst=4, seed=2)
+    r = hetero(PredictiveDispatcher()).simulate(
+        stream, elastic=ELASTIC, forecast=ForecastConfig()
+    )
+    assert {r.job for r in r.records} >= {a.name for a in stream}
+    f = r.forecast
+    assert f["arrivals_observed"] == len(stream)
+    assert f["refinements"] > 0  # COMPLETE events fed the posterior
+    assert f["rate_baseline"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# ArrivalRateEWMA
+# ---------------------------------------------------------------------------
+
+
+def test_ewma_steady_rate_and_warmup():
+    est = ArrivalRateEWMA(horizon=8, baseline_horizon=64)
+    assert est.rate() == 0.0 and est.burst_factor() == 1.0
+    for i in range(20):
+        est.observe(100.0 * i)
+    assert est.rate() == pytest.approx(1 / 100.0, rel=1e-6)
+    assert est.baseline_rate() == pytest.approx(1 / 100.0, rel=1e-6)
+    assert est.burst_factor() == pytest.approx(1.0, rel=1e-6)
+
+
+def test_ewma_burst_spikes_short_rate_and_silence_decays_it():
+    est = ArrivalRateEWMA(horizon=4, baseline_horizon=64)
+    for i in range(12):
+        est.observe(100.0 * i)
+    # a same-instant burst: zero gaps crush the short-horizon mean gap
+    for _ in range(5):
+        est.observe(1100.0)
+    assert est.burst_factor() > 2.0
+    assert est.rate() > est.baseline_rate()
+    # censoring: long silence pulls the short rate straight back down
+    assert est.burst_factor(now=1100.0 + 2000.0) < 1.0
+    # and the stored EWMA state is untouched by censored queries
+    assert est.burst_factor() > 2.0
+
+
+def test_ewma_rejects_bad_horizons():
+    with pytest.raises(ValueError):
+        ArrivalRateEWMA(horizon=0)
+
+
+# ---------------------------------------------------------------------------
+# Hysteretic burst gate
+# ---------------------------------------------------------------------------
+
+
+def _plane(cfg=None, units=None):
+    return ForecastPlane(cfg or ForecastConfig(), units or {"n": 4})
+
+
+def test_burst_gate_arms_on_arrivals_and_releases_after_silence():
+    cfg = ForecastConfig(ewma_horizon=4, hysteresis_margin=0.5)
+    plane = _plane(cfg)
+    for i in range(12):
+        plane.on_arrival(100.0 * i)
+    assert plane.burst_risk(1100.0) == 0.0  # steady stream: released
+    t = 1100.0
+    for _ in range(6):  # a burst lands: gate must arm *at the arrivals*
+        plane.on_arrival(t)
+    assert plane._armed
+    assert plane.burst_risk(t) > 0.0
+    # hysteresis: risk persists right after the burst (factor still > lo)
+    assert plane.burst_risk(t + 1.0) > 0.0
+    # long silence censors the short rate below the release threshold
+    assert plane.burst_risk(t + 5000.0) == 0.0
+    assert not plane._armed
+    assert plane.gate_flips >= 2
+
+
+def test_burst_gate_off_reports_zero_risk():
+    plane = _plane(ForecastConfig(burst_gate=False, ewma_horizon=4))
+    for _ in range(8):
+        plane.on_arrival(50.0)
+    assert plane.burst_risk(50.0) == 0.0
+
+
+def test_resize_switch_cost_scales_with_pressure():
+    cfg = ForecastConfig(ewma_horizon=4, pressure_gain=2.0)
+    plane = _plane(cfg)
+    base = 0.05
+    assert plane.resize_switch_cost("n", base, 0.0) == base  # cold: no signal
+    for i in range(12):
+        plane.on_arrival(100.0 * i, "n")
+    rj = RunningJob(job="j", g=2, units=(0, 1), domain=0, start=0.0,
+                    end=400.0, power=100.0)
+    plane.on_launch("n", rj)
+    calm = plane.resize_switch_cost("n", base, 1100.0)
+    for _ in range(6):
+        plane.on_arrival(1100.0, "n")
+    hot = plane.resize_switch_cost("n", base, 1100.0)
+    assert hot > calm >= base
+
+
+# ---------------------------------------------------------------------------
+# Online perf-model refinement
+# ---------------------------------------------------------------------------
+
+AB_TRUTH = {
+    "A": JobProfile(name="A", runtime={1: 3500, 2: 2000, 4: 1450},
+                    busy_power={1: 140, 2: 250, 4: 380},
+                    dram_util={1: 1 / 3500, 2: 1 / 4000, 4: 1 / 5800}),
+}
+
+
+def test_refined_model_passes_through_until_observed():
+    base = ProfiledPerfModel(AB_TRUTH, noise=0.1, seed=3)
+    ref = RefinedPerfModel(base, weight=4.0)
+    assert ref.spec("A") is base.spec("A")  # no observations: same object
+    assert ref.version == 0
+    assert ref.profiling_energy("A") == base.profiling_energy("A")
+
+
+def test_refined_model_shrinks_toward_observations():
+    base = ProfiledPerfModel(AB_TRUTH, noise=0.1, seed=3)
+    ref = RefinedPerfModel(base, weight=2.0)
+    prior = base.spec("A")
+    # feed the *true* runtimes at two counts repeatedly
+    for _ in range(50):
+        ref.observe("A", 2, 2000.0)
+        ref.observe("A", 4, 1450.0)
+    post = ref.spec("A")
+    assert ref.version == 100
+    true_ratio = 1450.0 / 2000.0
+    prior_ratio = prior.mode(4).t_norm / prior.mode(2).t_norm
+    post_ratio = post.mode(4).t_norm / post.mode(2).t_norm
+    assert abs(post_ratio - true_ratio) < abs(prior_ratio - true_ratio)
+    assert abs(post_ratio - true_ratio) < 0.02 * true_ratio
+
+
+def test_refined_model_shares_posterior_across_instances():
+    """Instance-keyed truth tables alias one JobProfile per app: refining
+    one instance refines them all (the cluster sharing contract)."""
+    prof = AB_TRUTH["A"]
+    truth = {"A#0": prof, "A#1": prof}
+    # noise-free Phase I shares one mode tuple per profile object, so the
+    # shared posterior is the only thing that can move the specs — both
+    # instances must move together on observations fed through either
+    ref = RefinedPerfModel(ProfiledPerfModel(truth, noise=0.0, seed=3))
+    for _ in range(30):
+        # two counts: the measured *ratio* is what can move a relative
+        # spec (a single observed count only rescales, which cancels)
+        ref.observe("A#0", 2, 2500.0)  # slower than the estimate implies
+        ref.observe("A#0", 4, 1450.0)
+    s0, s1 = ref.spec("A#0"), ref.spec("A#1")
+    assert [(m.g, m.t_norm) for m in s0.modes] == [
+        (m.g, m.t_norm) for m in s1.modes
+    ]
+    # and differs from the unobserved prior
+    prior = ProfiledPerfModel(truth, noise=0.0, seed=3).spec("A#0")
+    assert [(m.g, m.t_norm) for m in s0.modes] != [
+        (m.g, m.t_norm) for m in prior.modes
+    ]
+
+
+def test_ecosched_filtered_cache_invalidates_on_refinement():
+    base = ProfiledPerfModel(AB_TRUTH, noise=0.1, seed=3)
+    pol = EcoSched(base, lam=LAM, tau=1.0)
+    plane = _plane(ForecastConfig())
+    pol.attach_forecast(plane, "n")
+    assert isinstance(pol.perf_model, RefinedPerfModel)
+    before = pol._spec("A")
+    for _ in range(30):
+        pol.perf_model.observe("A", 2, 2000.0)
+        pol.perf_model.observe("A", 4, 1450.0)
+    after = pol._spec("A")
+    assert [(m.g, m.t_norm) for m in before.modes] != [
+        (m.g, m.t_norm) for m in after.modes
+    ]
+
+
+def test_plane_feeds_posterior_from_complete_events():
+    """Single-node run with forecasting: completions observe the truth, so
+    the posterior converges on the true runtime ratios."""
+    truth = C.build_system("h100")
+    node = Node(4, 2, C.idle_power("h100"))
+    pol = EcoSched(ProfiledPerfModel(truth, noise=NOISE, seed=SEED),
+                   lam=LAM, tau=TAU)
+    r = simulate(pol, node, truth, queue=list(C.APP_ORDER),
+                 forecast=ForecastConfig())
+    assert r.forecast["refinements"] == len(r.records)
+    assert isinstance(pol.perf_model, RefinedPerfModel)
+
+
+# ---------------------------------------------------------------------------
+# Queueing wait forecast
+# ---------------------------------------------------------------------------
+
+
+def test_wait_forecast_inflates_by_sustained_load():
+    from repro.core.cluster import ClusterState
+
+    specs = [NodeSpec("n0", H100), NodeSpec("n1", H100)]
+    truth = {"n0": AB_TRUTH, "n1": AB_TRUTH}
+    state = ClusterState(specs, truth, ["A"])
+    cfg = ForecastConfig(ewma_horizon=4)
+    plane = ForecastPlane(cfg, {"n0": 4, "n1": 4}, state=state)
+    rj = RunningJob(job="A#0", g=4, units=(0, 1, 2, 3), domain=0,
+                    start=0.0, end=2000.0, power=380.0)
+    state.on_arrive(0, 0)
+    state.on_launch(0, 0, rj.end, rj.g)
+    for i in range(12):
+        plane.on_arrival(100.0 * i, "n0")
+    plane.on_launch("n0", rj)
+    now = 1100.0
+    raw = state.outstanding(now)
+    fc = plane.wait_forecast(now)
+    assert fc[0] > raw[0] > 0.0  # busy node inflates
+    assert fc[1] == raw[1] == 0.0  # empty node stays empty
+    # rho is clamped: inflation never exceeds 1 + rho_cap
+    assert fc[0] <= raw[0] * (1.0 + cfg.rho_cap) + 1e-9
+    # queueing off -> raw proxy
+    plane_off = ForecastPlane(
+        ForecastConfig(queueing=False), {"n0": 4, "n1": 4}, state=state
+    )
+    assert np.array_equal(plane_off.wait_forecast(now), raw)
+
+
+# ---------------------------------------------------------------------------
+# Forecasted migration veto
+# ---------------------------------------------------------------------------
+
+MIG_TRUTH_SLOW = {
+    # L's best mode is far slower on the "drained" node class below
+    "L": JobProfile(name="L", runtime={4: 4000.0}, busy_power={4: 400.0}),
+    "S": JobProfile(name="S", runtime={4: 400.0}, busy_power={4: 400.0}),
+}
+
+MIG_STREAM = [
+    Arrival(0.0, "L#0", "L"), Arrival(0.0, "S#1", "S"), Arrival(0.0, "L#2", "L"),
+]
+
+
+def _mig_cluster(truth_for, dispatcher):
+    from repro.core.baselines import SequentialMax
+
+    return Cluster(
+        [NodeSpec("n0", H100), NodeSpec("n1", H100)],
+        truth_for=truth_for,
+        policy_for=lambda s, t: SequentialMax(t),
+        dispatcher=dispatcher,
+    )
+
+
+def test_forecast_migration_still_pulls_when_job_wins():
+    """Symmetric hardware: the per-job completion forecast reduces to the
+    PR 4 wait-gap test, so the beneficial pull still happens.  (RoundRobin
+    routing pins L#2 behind L#0 like the PR 4 migration tests — the plane
+    gates migration for any dispatcher.)"""
+    from repro.core import RoundRobinDispatcher
+
+    cfg = ElasticConfig(migrate=True, migration_delay=10.0, min_gain_s=60.0)
+    el = _mig_cluster(lambda s: MIG_TRUTH_SLOW, RoundRobinDispatcher()).simulate(
+        MIG_STREAM, elastic=cfg, forecast=ForecastConfig()
+    )
+    assert el.migrations == 1
+    moved = next(r for r in el.records if r.job == "L#2")
+    assert moved.node == "n1"
+
+
+def test_forecast_migration_vetoes_slower_destination():
+    """Heterogeneous hardware: a pull whose best mode on the receiver runs
+    far longer than staying put is vetoed by the completion forecast —
+    the job-blind PR 4 gap test would have taken it."""
+    fast = {"L": JobProfile(name="L", runtime={4: 4000.0}, busy_power={4: 400.0}),
+            "S": JobProfile(name="S", runtime={4: 400.0}, busy_power={4: 400.0})}
+    slow = {"L": JobProfile(name="L", runtime={4: 9000.0}, busy_power={4: 400.0}),
+            "S": JobProfile(name="S", runtime={4: 400.0}, busy_power={4: 400.0})}
+
+    def truth_for(s):
+        return fast if s.name == "n0" else slow
+
+    cfg = ElasticConfig(migrate=True, migration_delay=10.0, min_gain_s=60.0)
+    eager = _mig_cluster(truth_for, EnergyAwareDispatcher()).simulate(
+        MIG_STREAM, elastic=cfg
+    )
+    assert eager.migrations == 1  # PR 4 pulls L#2 onto the slow node
+    moved = next(r for r in eager.records if r.job == "L#2")
+    assert moved.node == "n1" and moved.end - moved.start == 9000.0
+    pred = _mig_cluster(truth_for, EnergyAwareDispatcher()).simulate(
+        MIG_STREAM, elastic=cfg, forecast=ForecastConfig()
+    )
+    assert pred.migrations == 0  # forecasted completion gain is negative
+    assert pred.forecast["migrations_vetoed"] >= 1
+    assert pred.makespan < eager.makespan
+
+
+# ---------------------------------------------------------------------------
+# Resize-order ablation knob
+# ---------------------------------------------------------------------------
+
+
+def test_resize_before_backfill_gives_resize_first_claim():
+    """A completion frees units with both a resize candidate and a waiting
+    job: the default order backfills first (no resize), the ablation order
+    checkpoints the running job before the backfill pass."""
+    truth = {
+        "A": JobProfile(name="A", runtime={1: 3500, 2: 2000, 3: 1600, 4: 1450},
+                        busy_power={1: 140, 2: 250, 3: 330, 4: 380},
+                        dram_util={g: 1.0 / (t * g) for g, t in
+                                   {1: 3500, 2: 2000, 3: 1600, 4: 1450}.items()}),
+        "B": JobProfile(name="B", runtime={1: 1050, 2: 600, 3: 480, 4: 435},
+                        busy_power={1: 140, 2: 250, 3: 330, 4: 380},
+                        dram_util={g: 1.0 / (t * g) for g, t in
+                                   {1: 1050, 2: 600, 3: 480, 4: 435}.items()}),
+    }
+
+    def pol():
+        return EcoSched(ProfiledPerfModel(truth, noise=0.0, seed=0),
+                        lam=0.35, tau=0.45)
+
+    node = Node(4, 2, 10.0)
+    base = ElasticConfig(resize=True, ckpt_time=30.0, restart_time=15.0,
+                         min_gain_s=60.0)
+    arrivals = [(0.0, "A"), (0.0, "B"), (550.0, "C")]
+    truth["C"] = truth["B"]
+    after = simulate(pol(), node, truth, arrivals=arrivals, elastic=base)
+    before = simulate(
+        pol(), node, truth, arrivals=arrivals,
+        elastic=dataclasses.replace(base, resize_before_backfill=True),
+    )
+    # both complete all jobs with exact accounting
+    for r in (after, before):
+        assert {rec.job for rec in r.records} >= {"A", "B", "C"}
+        busy_us = sum((rec.end - rec.start) * rec.g for rec in r.records)
+        idle_us = r.idle_energy / node.idle_power_per_unit
+        assert busy_us + idle_us == pytest.approx(4 * r.makespan, rel=1e-9)
+    # the orders genuinely diverge on this workload
+    assert [(rec.job, rec.g, rec.start) for rec in after.records] != [
+        (rec.job, rec.g, rec.start) for rec in before.records
+    ]
+
+
+def test_resize_before_backfill_off_is_default_path():
+    cfg = ElasticConfig(resize=True, migrate=True)
+    assert not cfg.resize_before_backfill
+
+
+# ---------------------------------------------------------------------------
+# The committed adversarial-migration seed (regression case)
+# ---------------------------------------------------------------------------
+
+
+def test_adversarial_seed_eager_loses_and_forecast_flips_it():
+    """bench_forecast.ADVERSARIAL: PR 4 eager elastic loses to static on
+    EDP (the pulled job's best mode on the drained node runs ~4.3 ks
+    longer than on its donor); the forecast plane's per-job completion
+    veto + predictive routing flips the seed to beat *both*."""
+    stream = bursty_stream(
+        C.APP_ORDER, rate=ADVERSARIAL_RATE, n=24, burst=5,
+        seed=ADVERSARIAL_SEED,
+    )
+    static = hetero(EnergyAwareDispatcher()).simulate(stream)
+    eager = hetero(EnergyAwareDispatcher()).simulate(stream, elastic=ELASTIC)
+    pred = hetero(PredictiveDispatcher()).simulate(
+        stream, elastic=ELASTIC, forecast=ForecastConfig()
+    )
+    assert static.edp < eager.edp, "the PR 4 eager loss must reproduce"
+    assert pred.edp < static.edp, "the forecast plane must flip the seed"
+    assert pred.edp < eager.edp
+    assert pred.forecast["migrations_vetoed"] >= 1

@@ -1,0 +1,186 @@
+"""Scheduler-daemon end-to-end smoke + control-plane overhead (ISSUE 6).
+
+Boots the real daemon (``python -m repro.cli daemon``) on the simulation
+backend, drives it over the unix socket exactly the way a user would
+(submit / cancel / advance), then SIGKILLs it mid-workload, reboots it on
+the same journal, drains, and asserts the recovered schedule is
+**bit-identical** to an uninterrupted in-process run of the same ops —
+the ISSUE 6 durability contract, exercised through every layer (CLI
+wiring, socket protocol, journal, replay) rather than in-process only
+(tests/test_service.py covers that).
+
+``--smoke`` (CI) runs the small fixed workload above.  Full mode adds a
+bursty 32-job workload measuring per-request round-trip latency and
+journal-replay time — the control plane's overhead budget: a scheduler
+tick is microseconds, so the daemon wrapper must stay in the tens of
+microseconds per RPC.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+from benchmarks.common import Csv
+from repro.core.arrivals import bursty_stream
+from repro.core.service import SchedulerService, request
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+# the fixed smoke workload: every record kind, a same-instant pair, a
+# cancel, a bounded advance, a post-advance straggler.  The SIGKILL lands
+# after KILL_AFTER ops; the reboot re-applies the rest (idempotent).
+SMOKE_OPS = [
+    {"op": "submit", "name": "s0", "app": "bert", "t": 10.0},
+    {"op": "submit", "name": "s1", "app": "lbm", "t": 10.0},
+    {"op": "submit", "name": "s2", "app": "resnet50", "t": 45.0},
+    {"op": "cancel", "name": "s2"},
+    {"op": "advance", "until": 400.0},
+    {"op": "submit", "name": "s3", "app": "gpt2", "t": 900.0},
+]
+KILL_AFTER = 5  # SIGKILL lands between the advance and the straggler
+
+
+def _fingerprint(res: dict):
+    assert res.get("ok"), res
+    return (
+        tuple(tuple(r) for r in sorted(res["records"])),
+        res["makespan"],
+        res["total_energy"],
+    )
+
+
+def _boot(sock: str, jnl: str, preset: str = "hetero") -> subprocess.Popen:
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.cli", "daemon",
+            "--socket", sock, "--journal", jnl, "--preset", preset,
+        ],
+        env=env, cwd=REPO,
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+    )
+    deadline = time.time() + 30.0
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            out = proc.stdout.read().decode()
+            raise RuntimeError(f"daemon died on boot:\n{out}")
+        try:
+            if request(sock, {"op": "ping"}, timeout=5.0).get("pong"):
+                return proc
+        except (OSError, ValueError):
+            time.sleep(0.05)
+    proc.kill()
+    raise RuntimeError("daemon never answered ping")
+
+
+def _golden(ops) -> tuple:
+    """Uninterrupted in-process run of the same op sequence (the same
+    backend factory the daemon preset builds)."""
+    from repro.cli import make_backend_factory
+
+    svc = SchedulerService(make_backend_factory("hetero"))
+    for req in ops:
+        resp = svc.handle(req)
+        assert "error" not in resp, resp
+    svc.advance(None)
+    return _fingerprint(svc.result())
+
+
+def _kill_restart_cycle(ops, kill_after: int, verbose: bool):
+    """Drive ``ops`` through a live daemon with a SIGKILL after
+    ``kill_after`` ops, reboot on the same journal, re-apply the rest,
+    drain; returns (fingerprint, per-RPC latencies, replay seconds)."""
+    tmp = tempfile.mkdtemp(prefix="ecosvc-")
+    sock, jnl = os.path.join(tmp, "d.sock"), os.path.join(tmp, "d.jnl")
+    lat = []
+    proc = _boot(sock, jnl)
+    try:
+        for req in ops[:kill_after]:
+            t0 = time.perf_counter()
+            resp = request(sock, req)
+            lat.append(time.perf_counter() - t0)
+            assert resp.get("ok") or "reason" in resp, resp
+        os.kill(proc.pid, signal.SIGKILL)
+        proc.wait(timeout=10)
+        if verbose:
+            print(
+                f"service: SIGKILLed daemon after {kill_after} ops "
+                f"(journal {os.path.getsize(jnl)} bytes), rebooting"
+            )
+        t0 = time.perf_counter()
+        proc = _boot(sock, jnl)  # recovery = journal replay
+        replay_s = time.perf_counter() - t0
+        for req in ops[kill_after:]:
+            t0 = time.perf_counter()
+            resp = request(sock, req)
+            lat.append(time.perf_counter() - t0)
+            assert resp.get("ok") or "reason" in resp, resp
+        assert request(sock, {"op": "drain"})["ok"]
+        stats = request(sock, {"op": "stats"})
+        assert stats["replay_divergences"] == 0, stats
+        fp = _fingerprint(request(sock, {"op": "result"}))
+        assert request(sock, {"op": "shutdown"})["ok"]
+        proc.wait(timeout=10)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    return fp, lat, replay_s
+
+
+def run(csv: Csv, verbose: bool = True, smoke: bool = False):
+    golden = _golden(SMOKE_OPS)
+    fp, lat, replay_s = _kill_restart_cycle(SMOKE_OPS, KILL_AFTER, verbose)
+    assert fp == golden, (
+        "recovered daemon schedule diverged from the uninterrupted run:\n"
+        f"  daemon: {fp}\n  golden: {golden}"
+    )
+    rpc_us = 1e6 * sum(lat) / len(lat)
+    if verbose:
+        print(
+            f"service --smoke: kill+replay bit-identical "
+            f"({len(golden[0])} records, makespan {golden[1]:.1f} s), "
+            f"replay {replay_s * 1e3:.0f} ms, mean RPC {rpc_us:.0f} us"
+        )
+    csv.add("service_smoke", rpc_us, "SIGKILL+replay bit-identical")
+    if smoke:
+        return 0
+
+    # full mode: a bursty 32-job workload through the daemon, killed
+    # mid-stream — overhead numbers at a realistic op count
+    stream = bursty_stream(
+        ("bert", "lbm", "resnet50", "gpt2"), rate=1 / 300, n=32, burst=4,
+        seed=3,
+    )
+    ops = [
+        {"op": "submit", "name": a.name, "app": a.app, "t": a.t}
+        for a in sorted(stream, key=lambda a: a.t)
+    ]
+    golden = _golden(ops)
+    fp, lat, replay_s = _kill_restart_cycle(ops, len(ops) // 2, verbose)
+    assert fp == golden, "bursty daemon run diverged after SIGKILL+replay"
+    rpc_us = 1e6 * sum(lat) / len(lat)
+    if verbose:
+        print(
+            f"service full: 32-job bursty kill+replay bit-identical, "
+            f"replay {replay_s * 1e3:.0f} ms, mean RPC {rpc_us:.0f} us"
+        )
+    csv.add("service_rpc", rpc_us, "mean submit RPC round-trip")
+    csv.add("service_replay", replay_s * 1e6, "journal replay, 16 ops")
+    return 0
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    c = Csv()
+    run(c, smoke=args.smoke)
+    print("\nname,us_per_call,derived")
+    c.emit()

@@ -29,6 +29,7 @@ def main() -> None:
         bench_overhead,
         bench_roofline,
         bench_sensitivity,
+        bench_service,
         bench_table2_choices,
         bench_tpu_pod,
     )
@@ -52,6 +53,7 @@ def main() -> None:
     bench_elastic.run(csv, verbose=verbose, smoke=args.quick)
     forecast = bench_forecast.run(csv, verbose=verbose, smoke=args.quick)
     throughput = bench_cluster_throughput.run(csv, verbose=verbose, smoke=args.quick)
+    bench_service.run(csv, verbose=verbose, smoke=args.quick)
 
     # perf-trajectory snapshots (ISSUE 3/5): decision overhead + throughput,
     # and the forecast-vs-eager EDP rows.  Only full runs refresh the

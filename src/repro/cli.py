@@ -1,0 +1,202 @@
+"""Command-line front end for the scheduler daemon (ISSUE 6).
+
+``python -m repro.cli daemon`` boots a ``SchedulerService`` over a unix
+socket on a calibrated simulation backend; every other subcommand is a
+thin JSON-lines client against a running daemon:
+
+    python -m repro.cli daemon --socket /tmp/eco.sock --journal /tmp/eco.jnl &
+    python -m repro.cli submit --socket /tmp/eco.sock --name j0 --app resnet
+    python -m repro.cli advance --socket /tmp/eco.sock --until 3600
+    python -m repro.cli jobs --socket /tmp/eco.sock
+    python -m repro.cli drain --socket /tmp/eco.sock
+    python -m repro.cli result --socket /tmp/eco.sock
+    python -m repro.cli shutdown --socket /tmp/eco.sock
+
+Kill the daemon (even with SIGKILL) and boot it again with the same
+``--journal`` and preset: it replays the journal through a fresh backend
+and resumes exactly where it was — the recovery contract documented in
+docs/control_plane.md and property-tested in tests/test_service.py.
+
+Presets build the same calibrated systems the benchmarks use (the
+paper's H100/A100/V100 platforms, EcoSched per node):
+
+  * ``single-h100`` — one 4-GPU H100 node,
+  * ``hetero``      — one node each of H100/A100/V100 behind the
+                      energy-aware dispatcher.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core import calibration as C
+from repro.core.cluster import (
+    Cluster,
+    EnergyAwareDispatcher,
+    LeastLoadedDispatcher,
+    NodeSpec,
+    PredictiveDispatcher,
+    RoundRobinDispatcher,
+)
+from repro.core.ecosched import EcoSched
+from repro.core.events import ElasticConfig
+from repro.core.forecast import ForecastConfig
+from repro.core.perfmodel import ProfiledPerfModel
+from repro.core.service import (
+    AdmissionConfig,
+    ClusterBackend,
+    SchedulerService,
+    request,
+    serve,
+)
+from repro.roofline.hw import CHIPS
+
+# reproduction-locked policy hyperparameters (EXPERIMENTS.md)
+LAM, TAU, NOISE, SEED = 0.35, 0.45, 0.02, 1
+
+PRESETS = {
+    "single-h100": ("h100",),
+    "hetero": ("h100", "a100", "v100"),
+}
+
+DISPATCHERS = {
+    "eco": EnergyAwareDispatcher,
+    "predictive": PredictiveDispatcher,
+    "rr": RoundRobinDispatcher,
+    "least-loaded": LeastLoadedDispatcher,
+}
+
+
+def make_backend_factory(
+    preset: str,
+    *,
+    dispatcher: str = "eco",
+    elastic: bool = False,
+    forecast: bool = False,
+):
+    """A fresh-backend factory for ``SchedulerService``: every call
+    rebuilds the calibrated cluster from scratch (deterministically),
+    which is exactly what journal replay needs."""
+    systems = PRESETS[preset]
+
+    def make() -> ClusterBackend:
+        seen = {}
+        specs = []
+        for s in systems:
+            idx = seen.get(s, 0)
+            seen[s] = idx + 1
+            specs.append(NodeSpec(name=f"{s}-{idx}", chip=CHIPS[s]))
+        cluster = Cluster(
+            specs,
+            truth_for=lambda spec: C.build_system(spec.chip.name),
+            policy_for=lambda spec, truth: EcoSched(
+                ProfiledPerfModel(truth, noise=NOISE, seed=SEED),
+                lam=LAM,
+                tau=TAU,
+            ),
+            dispatcher=DISPATCHERS[dispatcher](),
+            slowdown_for=lambda spec: C.cross_numa_slowdown,
+            label=f"{preset}:{dispatcher}",
+        )
+        return ClusterBackend(
+            cluster,
+            elastic=(
+                ElasticConfig(resize=True, migrate=len(systems) > 1)
+                if elastic
+                else None
+            ),
+            forecast=ForecastConfig() if forecast else None,
+        )
+
+    return make
+
+
+def _client(args: argparse.Namespace, req: dict) -> int:
+    resp = request(args.socket, req)
+    print(json.dumps(resp, sort_keys=True, indent=2))
+    return 0 if resp.get("ok") else 1
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="repro.cli", description=__doc__)
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    def add(name, **kw):
+        sp = sub.add_parser(name, **kw)
+        sp.add_argument("--socket", required=True, help="unix socket path")
+        return sp
+
+    d = add("daemon", help="boot the scheduler daemon")
+    d.add_argument("--journal", default=None, help="append-only journal path")
+    d.add_argument("--preset", default="hetero", choices=sorted(PRESETS))
+    d.add_argument(
+        "--dispatcher", default="eco", choices=sorted(DISPATCHERS)
+    )
+    d.add_argument("--elastic", action="store_true")
+    d.add_argument("--forecast", action="store_true")
+    d.add_argument("--fsync", action="store_true")
+    d.add_argument("--max-pending", type=int, default=256)
+    d.add_argument("--burst-limit", type=float, default=3.0)
+    d.add_argument("--burst-pending", type=int, default=16)
+
+    s = add("submit", help="submit one job")
+    s.add_argument("--name", required=True)
+    s.add_argument("--app", required=True)
+    s.add_argument("--t", type=float, default=None)
+
+    c = add("cancel", help="cancel a not-yet-running job")
+    c.add_argument("--name", required=True)
+
+    st = add("status", help="one job's lifecycle state")
+    st.add_argument("--name", required=True)
+
+    add("jobs", help="list all jobs")
+    a = add("advance", help="advance simulated time")
+    a.add_argument("--until", type=float, default=None)
+    add("drain", help="run until every queued job has finished")
+    add("stats", help="daemon statistics")
+    add("result", help="final schedule fingerprint (after drain)")
+    add("ping", help="liveness check")
+    add("shutdown", help="stop the daemon cleanly")
+
+    args = p.parse_args(argv)
+
+    if args.cmd == "daemon":
+        service = SchedulerService(
+            make_backend_factory(
+                args.preset,
+                dispatcher=args.dispatcher,
+                elastic=args.elastic,
+                forecast=args.forecast,
+            ),
+            journal_path=args.journal,
+            admission=AdmissionConfig(
+                max_pending=args.max_pending,
+                burst_limit=args.burst_limit,
+                burst_pending=args.burst_pending,
+            ),
+            fsync=args.fsync,
+        )
+        print(f"daemon: {service.backend.describe()} on {args.socket}", flush=True)
+        serve(service, args.socket)
+        return 0
+    if args.cmd == "submit":
+        req = {"op": "submit", "name": args.name, "app": args.app}
+        if args.t is not None:
+            req["t"] = args.t
+        return _client(args, req)
+    if args.cmd == "cancel":
+        return _client(args, {"op": "cancel", "name": args.name})
+    if args.cmd == "status":
+        return _client(args, {"op": "status", "name": args.name})
+    if args.cmd == "advance":
+        req = {"op": "advance"}
+        if args.until is not None:
+            req["until"] = args.until
+        return _client(args, req)
+    return _client(args, {"op": args.cmd})
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,7 @@ from repro.core.baselines import (
 )
 from repro.core.cluster import (
     Cluster,
+    ClusterRun,
     ClusterState,
     EnergyAwareDispatcher,
     LeastLoadedDispatcher,
@@ -54,7 +55,18 @@ from repro.core.perfmodel import (
     ProfiledPerfModel,
     RooflinePerfModel,
 )
+from repro.core.journal import Journal, JournalError
 from repro.core.placement import PlacementState, domains_of_units
+from repro.core.service import (
+    AdmissionConfig,
+    AdmissionGate,
+    ClusterBackend,
+    IllegalTransition,
+    JobInfo,
+    RecoveryError,
+    SchedulerService,
+    serve,
+)
 from repro.core.simulator import Node, NodeSim, simulate
 from repro.core.types import (
     ClusterResult,
@@ -67,10 +79,14 @@ from repro.core.types import (
 )
 
 __all__ = [
+    "AdmissionConfig",
+    "AdmissionGate",
     "Arrival",
     "ArrivalRateEWMA",
     "Cluster",
+    "ClusterBackend",
     "ClusterResult",
+    "ClusterRun",
     "ClusterState",
     "DecisionCache",
     "DomainInterferenceModel",
@@ -81,8 +97,12 @@ __all__ = [
     "EventQueue",
     "ForecastConfig",
     "ForecastPlane",
+    "IllegalTransition",
+    "JobInfo",
     "JobProfile",
     "JobSpec",
+    "Journal",
+    "JournalError",
     "Launch",
     "LeastLoadedDispatcher",
     "Marble",
@@ -98,13 +118,16 @@ __all__ = [
     "PlacementState",
     "PredictiveDispatcher",
     "ProfiledPerfModel",
+    "RecoveryError",
     "RefinedPerfModel",
     "ScoredBatch",
     "RooflinePerfModel",
     "RoundRobinDispatcher",
     "ScheduleResult",
+    "SchedulerService",
     "SequentialMax",
     "SequentialOptimal",
+    "serve",
     "bursty_stream",
     "cluster_oracle_bound",
     "domains_of_units",

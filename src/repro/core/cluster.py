@@ -257,21 +257,55 @@ class EnergyAwareDispatcher:
     this is the pure energy-optimal hardware choice; as a node's backlog
     grows its score inflates by the queueing slowdown, spilling work onto
     faster (or merely idler) hardware — the EDP tradeoff at cluster level.
+
+    With a forecast plane attached (``forecast=...`` runs) the (E*, t*)
+    cells come from ``plane.dispatch_tables()`` — the static priors with
+    observed cells re-derived from each node's refined posterior — so
+    dispatch and per-node placement score the *same* model (ISSUE 6
+    satellite; before this, dispatchers routed on static tables while the
+    node policies had already refined away from them).  Unattached,
+    scoring reads ``ClusterState`` directly and is bit-identical to the
+    pre-plane dispatcher.
     """
+
+    def __init__(self):
+        self._plane: Optional[ForecastPlane] = None
 
     def name(self) -> str:
         return "eco"
 
+    def reset(self) -> None:
+        self._plane = None  # re-attached per run by Cluster.simulate
+
+    def attach_forecast(self, plane: ForecastPlane) -> None:
+        self._plane = plane
+
+    def _tables(self, state: ClusterState) -> Tuple[np.ndarray, np.ndarray]:
+        if self._plane is None:
+            return state.e_best, state.t_best
+        return self._plane.dispatch_tables()
+
     def route_indexed(self, ai: int, state: ClusterState, now: float) -> int:
         out = state.outstanding(now)
-        t = state.t_best[:, ai]
+        e_best, t_best = self._tables(state)
+        t = t_best[:, ai]
         score = np.where(
-            state.fits[:, ai], state.e_best[:, ai] * (out + t) / t, np.inf
+            state.fits[:, ai], e_best[:, ai] * (out + t) / t, np.inf
         )
         i = int(np.argmin(score))  # ties -> lowest index, like the list scan
         return i if state.fits[i, ai] else -1
 
     def route(self, arr: Arrival, statuses: Sequence[NodeStatus]) -> str:
+        if self._plane is not None:
+            # the legacy list protocol carries no ClusterState/clock, so
+            # it cannot see the plane; routing plane-blind while
+            # migration/resize stay forecasted would silently measure as
+            # a half-forecast run
+            raise RuntimeError(
+                f"{self.name()} dispatcher with an attached forecast plane "
+                "requires the vectorized dispatch path; run with "
+                "fast_status=True (the default)"
+            )
         best = None
         for i, st in enumerate(statuses):
             if not st.fits(arr.app):
@@ -304,38 +338,17 @@ class PredictiveDispatcher(EnergyAwareDispatcher):
     ``EnergyAwareDispatcher`` — parity-locked in tests/test_forecast.py.
     """
 
-    def __init__(self):
-        self._plane: Optional[ForecastPlane] = None
-
     def name(self) -> str:
         return "predictive"
-
-    def reset(self) -> None:
-        self._plane = None  # re-attached per run by Cluster.simulate
-
-    def attach_forecast(self, plane: ForecastPlane) -> None:
-        self._plane = plane
-
-    def route(self, arr: Arrival, statuses: Sequence[NodeStatus]) -> str:
-        if self._plane is not None:
-            # the legacy list protocol carries no ClusterState/clock, so
-            # it cannot see the plane; routing plane-blind while
-            # migration/resize stay forecasted would silently measure as
-            # a half-forecast run
-            raise RuntimeError(
-                "PredictiveDispatcher with an attached forecast plane "
-                "requires the vectorized dispatch path; run with "
-                "fast_status=True (the default)"
-            )
-        return super().route(arr, statuses)
 
     def route_indexed(self, ai: int, state: ClusterState, now: float) -> int:
         if self._plane is None:
             return super().route_indexed(ai, state, now)
         wait = self._plane.wait_forecast(now)
-        t = state.t_best[:, ai]
+        e_best, t_best = self._tables(state)
+        t = t_best[:, ai]
         score = np.where(
-            state.fits[:, ai], state.e_best[:, ai] * (wait + t) / t, np.inf
+            state.fits[:, ai], e_best[:, ai] * (wait + t) / t, np.inf
         )
         i = int(np.argmin(score))  # ties -> lowest index
         return i if state.fits[i, ai] else -1
@@ -376,6 +389,34 @@ class Cluster:
         self.slowdown_for = slowdown_for
         self.label = label
 
+    def open_run(
+        self,
+        *,
+        apps: Sequence[str],
+        jobs: Sequence[Tuple[str, str]] = (),
+        elastic: Optional[ElasticConfig] = None,
+        forecast: Optional[ForecastConfig] = None,
+        max_events: Optional[int] = None,
+        fast_status: bool = True,
+        on_transition: Optional[Callable] = None,
+    ) -> "ClusterRun":
+        """Build an incrementally drivable run over a fixed app universe —
+        the control-plane backend entry point (ISSUE 6).  ``jobs`` seeds
+        (name, app) instances known up-front; a daemon adds more later via
+        ``ClusterRun.submit``."""
+        if hasattr(self.dispatcher, "reset"):
+            self.dispatcher.reset()  # stateful dispatchers restart per run
+        return ClusterRun(
+            self,
+            apps=apps,
+            jobs=jobs,
+            elastic=elastic,
+            forecast=forecast,
+            max_events=max_events,
+            fast_status=fast_status,
+            on_transition=on_transition,
+        )
+
     def simulate(
         self,
         stream: Sequence[Arrival],
@@ -404,222 +445,401 @@ class Cluster:
                 DeprecationWarning,
                 stacklevel=2,
             )
+        run = ClusterRun(
+            self,
+            apps=sorted({a.app for a in stream}),
+            jobs=[(a.name, a.app) for a in stream],
+            elastic=elastic,
+            forecast=forecast,
+            max_events=max_events,
+            fast_status=fast_status,
+        )
+        for arr in stream:
+            if arr.t <= 0.0:
+                run.route(arr, 0.0)
+            else:
+                run.loop.queue.push(arr.t, EVT_ARRIVAL, arr)
+        run.loop.run()
+        return run.finalize(charge_profiling=charge_profiling)
 
-        app_truth: Dict[str, Dict[str, JobProfile]] = {
-            s.name: self.truth_for(s) for s in self.specs
+
+class ClusterRun:
+    """One live cluster simulation, exposed as a steppable backend.
+
+    ``Cluster.simulate`` is a thin batch wrapper over this class (seed
+    every arrival, ``loop.run()``, ``finalize()`` — bit-identical to the
+    pre-refactor monolith); the scheduler daemon (``repro.core.service``)
+    instead drives it incrementally: ``submit`` pushes arrivals into the
+    live event heap, ``run_until``/``run_to_completion`` advance the
+    clock, ``cancel`` drops never-launched jobs, and every lifecycle
+    transition is reported through the optional ``on_transition`` callback
+    — ``(event, t, job, node, g, end)`` with event in {queued, launch,
+    done, ckpt, requeue, migrate} — which the daemon journals.
+
+    The app universe (``apps``) is fixed at construction: the
+    ``ClusterState`` routing tables are preallocated over it.  Job
+    *instances* may keep arriving — per-node truth views and the
+    instance->app map grow in place, which is safe because policies and
+    perf models read their truth tables lazily per event.
+    """
+
+    def __init__(
+        self,
+        cluster: Cluster,
+        *,
+        apps: Sequence[str],
+        jobs: Sequence[Tuple[str, str]] = (),
+        elastic: Optional[ElasticConfig] = None,
+        forecast: Optional[ForecastConfig] = None,
+        max_events: Optional[int] = None,
+        fast_status: bool = True,
+        on_transition: Optional[Callable] = None,
+    ):
+        self.cluster = cluster
+        self.specs = cluster.specs
+        self.dispatcher = cluster.dispatcher
+        self.elastic = elastic
+        self.fast_status = fast_status
+        self.on_transition = on_transition
+
+        self.app_truth: Dict[str, Dict[str, JobProfile]] = {
+            s.name: cluster.truth_for(s) for s in self.specs
         }
-        app_of = {a.name: a.app for a in stream}
-        spec_of = {s.name: s for s in self.specs}
-        apps = sorted({a.app for a in stream})
-        state = ClusterState(self.specs, app_truth, apps)
+        self.spec_of = {s.name: s for s in self.specs}
+        self.apps = list(apps)
+        state = self.state = ClusterState(self.specs, self.app_truth, self.apps)
         # per-node per-app minimum busy unit-seconds (legacy-scan form of
         # ClusterState.min_unit_s, for the PR-2 baseline status path)
-        min_unit_s: Dict[str, Dict[str, float]] = {
+        self.min_unit_s: Dict[str, Dict[str, float]] = {
             s.name: {
                 app: state.min_unit_s[state.index[s.name], state.app_index[app]]
-                for app in apps
+                for app in self.apps
                 if state.fits[state.index[s.name], state.app_index[app]]
             }
             for s in self.specs
         }
         # forecast-driven control plane (ISSUE 5): never built on the
         # default path, so forecast=None is bit-identical to PR 4
-        plane: Optional[ForecastPlane] = None
+        self.plane: Optional[ForecastPlane] = None
         if forecast is not None and forecast.enabled:
-            plane = ForecastPlane(
+            self.plane = ForecastPlane(
                 forecast,
                 {s.name: s.units for s in self.specs},
                 state=state,
                 elastic=elastic,
             )
             if hasattr(self.dispatcher, "attach_forecast"):
-                self.dispatcher.attach_forecast(plane)
+                self.dispatcher.attach_forecast(self.plane)
+            # posterior-refined dispatch tables (ISSUE 6 satellite)
+            self.plane.bind_dispatch(self.app_truth)
 
-        sims: Dict[str, NodeSim] = {}
+        # instance-keyed state; grows in place as jobs are added
+        self.app_of: Dict[str, str] = {}
+        self._truth_n: Dict[str, Dict[str, JobProfile]] = {
+            s.name: {} for s in self.specs
+        }
+        for name, app in jobs:
+            self._register(name, app)
+        self.n_jobs = len(self.app_of)
+
+        self.sims: Dict[str, NodeSim] = {}
         for s in self.specs:
             # instance-keyed view of the hardware truth for this stream;
             # apps this hardware has no profile for are simply absent (the
             # dispatcher's fits() already refuses to route them here)
-            truth_n = {
-                a.name: app_truth[s.name][a.app]
-                for a in stream
-                if a.app in app_truth[s.name]
-            }
-            policy = self.policy_for(s, truth_n)
-            if plane is not None and hasattr(policy, "attach_forecast"):
-                policy.attach_forecast(plane, s.name)
-            sims[s.name] = NodeSim(
+            truth_n = self._truth_n[s.name]
+            policy = cluster.policy_for(s, truth_n)
+            if self.plane is not None and hasattr(policy, "attach_forecast"):
+                policy.attach_forecast(self.plane, s.name)
+            self.sims[s.name] = NodeSim(
                 Node(s.units, s.domains, s.idle_power_per_unit),
                 truth_n,
                 policy,
-                slowdown_model=self.slowdown_for(s) if self.slowdown_for else None,
+                slowdown_model=(
+                    cluster.slowdown_for(s) if cluster.slowdown_for else None
+                ),
                 name=s.name,
                 elastic=elastic,
             )
 
-        def statuses(now: float) -> List[NodeStatus]:
-            outs = state.outstanding(now) if fast_status else None
-            out = []
-            for i, s in enumerate(self.specs):
-                sim = sims[s.name]
-                if fast_status:
-                    outstanding = float(outs[i])
-                else:
-                    # PR-2 reference scan: remaining work vs the *global*
-                    # clock — a node's local sim.t lags until its next
-                    # event, which would inflate its load
-                    mins = min_unit_s[s.name]
-                    outstanding = (
-                        sum(max(r.end - now, 0.0) * r.g for r in sim.running)
-                        + sum(mins[app_of[j]] for j in sim.waiting)
-                    ) / s.units
-                out.append(
-                    NodeStatus(
-                        spec=s,
-                        view=sim.node_view(),
-                        backlog=list(sim.waiting),
-                        truth=app_truth[s.name],
-                        outstanding_s=outstanding,
-                    )
-                )
-            return out
-
-        vector_route = fast_status and hasattr(self.dispatcher, "route_indexed")
-
-        def route(arr: Arrival, t: float) -> str:
-            ai = state.app_index[arr.app]
-            if vector_route:
-                ni = self.dispatcher.route_indexed(ai, state, t)
-                if ni < 0:
-                    raise ValueError(
-                        f"no node can fit any feasible mode of {arr.app}"
-                    )
-                nm = state.names[ni]
-            else:
-                nm = self.dispatcher.route(arr, statuses(t))
-                ni = state.index[nm]
-            # fits == profile present with a mode that fits the node
-            if not state.fits[ni, ai]:
-                raise ValueError(
-                    f"{self.dispatcher.name()} routed {arr.app} to {nm} "
-                    f"(units={spec_of[nm].units}) with no feasible mode"
-                )
-            sims[nm].arrive(arr.name, t)
-            state.on_arrive(ni, ai)
-            if plane is not None:
-                plane.on_arrival(t, nm)
-            return nm
-
-        # array-state bookkeeping hooks the substrate fires on transitions
-        def on_launch(nm: str, rj: RunningJob) -> None:
-            state.on_launch(
-                state.index[nm], state.app_index[app_of[rj.job]], rj.end, rj.g
-            )
-            if plane is not None:
-                plane.on_launch(nm, rj)
-
-        def on_complete(nm: str, rj: RunningJob) -> None:
-            state.on_complete(state.index[nm], rj.end, rj.g)
-            if plane is not None:
-                plane.on_complete(nm, rj)
-
-        def on_requeue(nm: str, job: str) -> None:
-            state.on_arrive(state.index[nm], state.app_index[app_of[job]])
-
-        def on_dequeue(nm: str, job: str) -> None:
-            state.on_migrate_out(state.index[nm], state.app_index[app_of[job]])
-
-        def on_retime(nm: str, rj: RunningJob, old_end: float) -> None:
-            state.on_retime(state.index[nm], old_end, rj.end, rj.g)
-
-        def migrate_candidate(nm: str, t: float):
-            """Pull one waiting job from the most backlogged node onto the
-            node that just completed, when the predicted-wait gap beats the
-            move cost.  With a forecast plane the gap test runs on
-            *forecasted* waits (queueing-inflated drain) and, while the
-            burst gate is armed, demands an extra risk margin — the
-            hysteresis that fixes the PR 4 eager-migration losing seeds.
-            A dispatcher may override via
-            ``select_migration(nm, state, sims, now, cfg)``."""
-            hook = getattr(self.dispatcher, "select_migration", None)
-            if hook is not None:
-                return hook(nm, state, sims, t, elastic)
-            ni = state.index[nm]
-            if sims[nm].placement.free_count() <= 0:
-                return None
-            # One greedy proposer, two accept tests.  PR 4 path
-            # (plane=None): raw drain-proxy gap, job-independent — a
-            # checkpointed job pays its restart wherever it relaunches,
-            # so only the transit delay counts against the move.
-            # Forecast path: the same scan on *forecasted* waits, but a
-            # fitting job is only pulled when its per-job completion
-            # forecast predicts it finishes earlier on the receiver —
-            #   (W_fc[donor] − own queued work + t_best[donor]) −
-            #   (W_fc[recv] + delay + t_best[recv]) > burst-risk penalty
-            # — which is what kills the PR 4 losing pulls: a job whose
-            # best mode on the drained (slower) node runs thousands of
-            # seconds longer never wins the gap test job-blindly won,
-            # and an armed burst gate demands extra margin on top.
-            if plane is None:
-                out = state.outstanding(t)
-                penalty = None
-            else:
-                out = plane.wait_forecast(t)
-                penalty = plane.migration_penalty_s(nm, t)
-            threshold = out[ni] + elastic.migration_delay + elastic.min_gain_s
-            for di in np.argsort(-out, kind="stable"):
-                di = int(di)
-                if di == ni or state.n_waiting[di] == 0:
-                    continue
-                if out[di] <= threshold:
-                    break  # donors come in descending order: scan is done
-                dsim = sims[state.names[di]]
-                for job in dsim.waiting:
-                    ai2 = state.app_index[app_of[job]]
-                    if not state.fits[ni, ai2]:
-                        continue
-                    if penalty is None:
-                        return state.names[di], job
-                    # the donor backlog includes the candidate's own
-                    # queued min-work; staying means waiting behind the
-                    # *rest* of it.  The gap threshold above already
-                    # charged min_gain_s, so this veto only blocks moves
-                    # the forecast predicts to be harmful.
-                    own = state.min_unit_s[di, ai2] / state.units[di]
-                    gain = (out[di] - own + state.t_best[di, ai2]) - (
-                        out[ni] + elastic.migration_delay + state.t_best[ni, ai2]
-                    )
-                    if gain > penalty:
-                        return state.names[di], job
-                    plane.migrations_vetoed += 1
-            return None
-
-        loop = EventLoop(
-            sims,
-            arrive=route,
+        self._vector_route = fast_status and hasattr(
+            self.dispatcher, "route_indexed"
+        )
+        self._cancelled: set = set()  # cancelled before their ARRIVAL popped
+        self._routed: set = set()  # instances that reached a node queue
+        if max_events is None:
+            max_events = _auto_max_events(self.n_jobs, floor=1_000_000)
+        self.loop = EventLoop(
+            self.sims,
+            arrive=self.route,
             max_events=max_events,
             cap_msg="cluster event cap exceeded (policy deadlock?)",
             elastic=elastic,
-            on_launch=on_launch,
-            on_complete=on_complete,
-            on_requeue=on_requeue,
-            on_dequeue=on_dequeue,
-            on_retime=on_retime,
-            migrate_candidate=migrate_candidate,
+            on_launch=self._on_launch,
+            on_complete=self._on_complete,
+            on_requeue=self._on_requeue,
+            on_dequeue=self._on_dequeue,
+            on_retime=self._on_retime,
+            migrate_candidate=self._migrate_candidate,
         )
-        for arr in stream:
-            if arr.t <= 0.0:
-                route(arr, 0.0)
+
+    # -- job registry --------------------------------------------------------
+
+    def _register(self, name: str, app: str) -> None:
+        if name in self.app_of:
+            raise ValueError(f"duplicate job instance {name!r}")
+        self.app_of[name] = app
+        for s in self.specs:
+            truth = self.app_truth[s.name]
+            if app in truth:
+                self._truth_n[s.name][name] = truth[app]
+
+    @property
+    def now(self) -> float:
+        return self.loop.now
+
+    def add_job(self, name: str, app: str) -> None:
+        """Register one new instance (daemon path).  Raises when the app
+        is outside this run's universe or no node can fit it."""
+        ai = self.state.app_index.get(app)
+        if ai is None:
+            raise ValueError(
+                f"unknown application {app!r} (universe: {self.apps})"
+            )
+        if not bool(self.state.fits[:, ai].any()):
+            raise ValueError(f"no node can fit any feasible mode of {app}")
+        self._register(name, app)
+        self.n_jobs += 1
+        self.loop.max_events = max(
+            self.loop.max_events, _auto_max_events(self.n_jobs, floor=1_000_000)
+        )
+
+    def submit(self, name: str, app: str, t: float) -> None:
+        """Register + push the ARRIVAL event (daemon path).  ``t`` must not
+        precede already-processed events; the service layer clamps."""
+        self.add_job(name, app)
+        self.loop.queue.push(t, EVT_ARRIVAL, Arrival(t=t, name=name, app=app))
+
+    def cancel(self, name: str) -> bool:
+        """Drop a job that has not launched yet.  True on success: either
+        the ARRIVAL is still in flight (marked to be dropped at its pop) or
+        the job is waiting, never-launched, on some node (dequeued in
+        place).  False for anything already running, checkpointed, in
+        migration transit, finished, or already cancelled."""
+        if name not in self.app_of or name in self._cancelled:
+            return False
+        if name not in self._routed:
+            self._cancelled.add(name)
+            return True
+        for nm, sim in self.sims.items():
+            if name not in sim.waiting:
+                continue
+            if (
+                name in sim.progress
+                or name in sim.needs_restart
+                or sim._segments.get(name, 0)
+            ):
+                return False  # has elastic state: not a pure queue entry
+            sim.cancel_waiting(name)
+            self.state.on_migrate_out(
+                self.state.index[nm], self.state.app_index[self.app_of[name]]
+            )
+            self._cancelled.add(name)
+            return True
+        return False
+
+    # -- driving -------------------------------------------------------------
+
+    def run_until(self, t: float) -> None:
+        self.loop.run_until(t)
+
+    def run_to_completion(self) -> None:
+        self.loop.run()
+
+    # -- dispatch + substrate hooks ------------------------------------------
+
+    def _emit(
+        self, event: str, t: float, job: str, node: str, g: int, end: float
+    ) -> None:
+        if self.on_transition is not None:
+            self.on_transition(event, t, job, node, g, end)
+
+    def statuses(self, now: float) -> List[NodeStatus]:
+        outs = self.state.outstanding(now) if self.fast_status else None
+        out = []
+        for i, s in enumerate(self.specs):
+            sim = self.sims[s.name]
+            if self.fast_status:
+                outstanding = float(outs[i])
             else:
-                loop.queue.push(arr.t, EVT_ARRIVAL, arr)
-        loop.run()
+                # PR-2 reference scan: remaining work vs the *global*
+                # clock — a node's local sim.t lags until its next
+                # event, which would inflate its load
+                mins = self.min_unit_s[s.name]
+                outstanding = (
+                    sum(max(r.end - now, 0.0) * r.g for r in sim.running)
+                    + sum(mins[self.app_of[j]] for j in sim.waiting)
+                ) / s.units
+            out.append(
+                NodeStatus(
+                    spec=s,
+                    view=sim.node_view(),
+                    backlog=list(sim.waiting),
+                    truth=self.app_truth[s.name],
+                    outstanding_s=outstanding,
+                )
+            )
+        return out
 
-        stuck = {nm: sim.waiting for nm, sim in sims.items() if sim.waiting}
+    def route(self, arr: Arrival, t: float) -> Optional[str]:
+        if arr.name in self._cancelled:
+            return None  # cancelled between submit and its ARRIVAL pop
+        state = self.state
+        ai = state.app_index[arr.app]
+        if self._vector_route:
+            ni = self.dispatcher.route_indexed(ai, state, t)
+            if ni < 0:
+                raise ValueError(
+                    f"no node can fit any feasible mode of {arr.app}"
+                )
+            nm = state.names[ni]
+        else:
+            nm = self.dispatcher.route(arr, self.statuses(t))
+            ni = state.index[nm]
+        # fits == profile present with a mode that fits the node
+        if not state.fits[ni, ai]:
+            raise ValueError(
+                f"{self.dispatcher.name()} routed {arr.app} to {nm} "
+                f"(units={self.spec_of[nm].units}) with no feasible mode"
+            )
+        self.sims[nm].arrive(arr.name, t)
+        state.on_arrive(ni, ai)
+        if self.plane is not None:
+            self.plane.on_arrival(t, nm)
+        self._routed.add(arr.name)
+        self._emit("queued", t, arr.name, nm, 0, t)
+        return nm
+
+    # array-state bookkeeping hooks the substrate fires on transitions
+
+    def _on_launch(self, nm: str, rj: RunningJob) -> None:
+        state = self.state
+        state.on_launch(
+            state.index[nm], state.app_index[self.app_of[rj.job]], rj.end, rj.g
+        )
+        if self.plane is not None:
+            self.plane.on_launch(nm, rj)
+        self._emit("launch", rj.start, rj.job, nm, rj.g, rj.end)
+
+    def _on_complete(self, nm: str, rj: RunningJob) -> None:
+        self.state.on_complete(self.state.index[nm], rj.end, rj.g)
+        if self.plane is not None:
+            self.plane.on_complete(nm, rj)
+        self._emit(
+            "ckpt" if rj.preempted else "done", rj.end, rj.job, nm, rj.g, rj.end
+        )
+
+    def _on_requeue(self, nm: str, job: str) -> None:
+        state = self.state
+        state.on_arrive(state.index[nm], state.app_index[self.app_of[job]])
+        self._emit("requeue", self.loop.now, job, nm, 0, self.loop.now)
+
+    def _on_dequeue(self, nm: str, job: str) -> None:
+        state = self.state
+        state.on_migrate_out(state.index[nm], state.app_index[self.app_of[job]])
+        self._emit("migrate", self.loop.now, job, nm, 0, self.loop.now)
+
+    def _on_retime(self, nm: str, rj: RunningJob, old_end: float) -> None:
+        self.state.on_retime(self.state.index[nm], old_end, rj.end, rj.g)
+
+    def _migrate_candidate(self, nm: str, t: float):
+        """Pull one waiting job from the most backlogged node onto the
+        node that just completed, when the predicted-wait gap beats the
+        move cost.  With a forecast plane the gap test runs on
+        *forecasted* waits (queueing-inflated drain) and, while the
+        burst gate is armed, demands an extra risk margin — the
+        hysteresis that fixes the PR 4 eager-migration losing seeds.
+        A dispatcher may override via
+        ``select_migration(nm, state, sims, now, cfg)``."""
+        hook = getattr(self.dispatcher, "select_migration", None)
+        if hook is not None:
+            return hook(nm, self.state, self.sims, t, self.elastic)
+        state = self.state
+        sims = self.sims
+        plane = self.plane
+        elastic = self.elastic
+        ni = state.index[nm]
+        if sims[nm].placement.free_count() <= 0:
+            return None
+        # One greedy proposer, two accept tests.  PR 4 path
+        # (plane=None): raw drain-proxy gap, job-independent — a
+        # checkpointed job pays its restart wherever it relaunches,
+        # so only the transit delay counts against the move.
+        # Forecast path: the same scan on *forecasted* waits, but a
+        # fitting job is only pulled when the move's forecasted
+        # cluster-level saving beats the burst-risk penalty —
+        #   [(W_fc[donor] − own queued work + t_best[donor]) −
+        #    (W_fc[recv] + delay + t_best[recv])]          (the moved job)
+        #   + relief · (donor waiters left behind)          (their queue)
+        #   > penalty
+        # — the per-job term is what kills the PR 4 losing pulls (a job
+        # whose best mode on the drained slower node runs thousands of
+        # seconds longer never wins the gap test job-blindly won); the
+        # relief term is the ISSUE 6 saturation fix: at high load the
+        # donor's remaining waiters each stop waiting behind the moved
+        # job's queued work, a cluster-throughput gain the myopic
+        # single-job test left on the table.
+        if plane is None:
+            out = state.outstanding(t)
+            penalty = None
+        else:
+            out = plane.wait_forecast(t)
+            penalty = plane.migration_penalty_s(nm, t)
+        threshold = out[ni] + elastic.migration_delay + elastic.min_gain_s
+        for di in np.argsort(-out, kind="stable"):
+            di = int(di)
+            if di == ni or state.n_waiting[di] == 0:
+                continue
+            if out[di] <= threshold:
+                break  # donors come in descending order: scan is done
+            dsim = sims[state.names[di]]
+            for job in dsim.waiting:
+                ai2 = state.app_index[self.app_of[job]]
+                if not state.fits[ni, ai2]:
+                    continue
+                if penalty is None:
+                    return state.names[di], job
+                # the donor backlog includes the candidate's own
+                # queued min-work; staying means waiting behind the
+                # *rest* of it.  The gap threshold above already
+                # charged min_gain_s, so this veto only blocks moves
+                # the forecast predicts to be harmful.
+                own = state.min_unit_s[di, ai2] / state.units[di]
+                gain = (out[di] - own + state.t_best[di, ai2]) - (
+                    out[ni] + elastic.migration_delay + state.t_best[ni, ai2]
+                )
+                relief = (
+                    plane.cfg.migration_relief_weight
+                    * own
+                    * max(int(state.n_waiting[di]) - 1, 0)
+                )
+                if gain + relief > penalty:
+                    return state.names[di], job
+                plane.migrations_vetoed += 1
+        return None
+
+    # -- results -------------------------------------------------------------
+
+    def finalize(self, *, charge_profiling: bool = False) -> ClusterResult:
+        stuck = {
+            nm: sim.waiting for nm, sim in self.sims.items() if sim.waiting
+        }
         if stuck:
-            raise RuntimeError(f"cluster run finished with waiting jobs {stuck}")
-
+            raise RuntimeError(
+                f"cluster run finished with waiting jobs {stuck}"
+            )
         per_node = {
-            s.name: sims[s.name].result(charge_profiling=charge_profiling)
+            s.name: self.sims[s.name].result(charge_profiling=charge_profiling)
             for s in self.specs
         }
         makespan = max((r.makespan for r in per_node.values()), default=0.0)
@@ -629,7 +849,7 @@ class Cluster:
             * s.idle_power_per_unit
             for s in self.specs
         )
-        label = self.label or (
+        label = self.cluster.label or (
             f"{self.dispatcher.name()}:"
             f"{per_node[self.specs[0].name].policy if self.specs else ''}"
         )
@@ -638,5 +858,5 @@ class Cluster:
             per_node=per_node,
             makespan=makespan,
             tail_idle_energy=tail_idle,
-            forecast=plane.summary() if plane is not None else {},
+            forecast=self.plane.summary() if self.plane is not None else {},
         )

@@ -131,6 +131,10 @@ class EventQueue:
         batching test."""
         return bool(self._heap) and self._heap[0][0] == t and self._heap[0][1] == kind
 
+    def peek_time(self) -> Optional[float]:
+        """Head event time, or None when the heap is empty."""
+        return self._heap[0][0] if self._heap else None
+
 
 class EventLoop:
     """Shared driver: pops events, invokes per-node policies, applies the
@@ -139,7 +143,10 @@ class EventLoop:
       sims       — name -> NodeSim, in scheduling order (t=0 policy pass
                    runs over this order, like the pre-refactor loops),
       arrive     — (payload, t) -> node name: absorb one ARRIVAL payload
-                   (single-node: enqueue locally; cluster: route + enqueue),
+                   (single-node: enqueue locally; cluster: route + enqueue).
+                   May return None to *drop* the arrival (a job cancelled
+                   between submit and its ARRIVAL pop, control-plane path);
+                   batch callers always return a name,
       max_events — deadlock-guard cap, counted per popped head event,
       cap_msg    — the RuntimeError message when the cap trips,
       elastic    — ``ElasticConfig`` or None (None = pre-refactor behavior),
@@ -177,6 +184,12 @@ class EventLoop:
         self.on_dequeue = on_dequeue
         self.on_retime = on_retime
         self.migrate_candidate = migrate_candidate
+        # stepping state (control-plane incremental driving, ISSUE 6):
+        # ``now`` advances to each popped head-event time, ``events`` is the
+        # per-head-event cap counter, ``started`` guards the t=0 pass.
+        self.now = 0.0
+        self.events = 0
+        self.started = False
 
     # -- scheduling ---------------------------------------------------------
 
@@ -191,57 +204,89 @@ class EventLoop:
 
     # -- main loop ----------------------------------------------------------
 
-    def run(self) -> None:
-        q = self.queue
-        for nm in self.sims:  # t=0 scheduling pass, node order = spec order
+    def start(self) -> None:
+        """The t=0 scheduling pass (node order = spec order).  Idempotent,
+        so incremental drivers can call it defensively before stepping."""
+        if self.started:
+            return
+        self.started = True
+        for nm in self.sims:
             self._schedule(nm)
-        events = 0
-        while len(q):
-            events += 1
-            if events > self.max_events:
-                raise RuntimeError(self.cap_msg)
-            t, kind, payload = q.pop()
-            if kind == EVT_ARRIVAL:
-                touched = [self.arrive(payload, t)]
-                while q.next_is(t, EVT_ARRIVAL):
-                    nm = self.arrive(q.pop()[2], t)
-                    if nm not in touched:
-                        touched.append(nm)
-                for nm in touched:
+
+    def step(self) -> bool:
+        """Pop and process one head event (plus its same-instant arrival
+        batch).  Returns False when the queue is empty.  Event counting and
+        the cap check are per head event — exactly ``run()``'s accounting."""
+        q = self.queue
+        if not len(q):
+            return False
+        self.events += 1
+        if self.events > self.max_events:
+            raise RuntimeError(self.cap_msg)
+        t, kind, payload = q.pop()
+        self.now = t
+        self._dispatch(t, kind, payload)
+        return True
+
+    def run_until(self, t_max: float) -> None:
+        """Drain every event with time <= ``t_max`` (the control plane's
+        ``advance`` verb).  ``now`` ends at the last processed event."""
+        self.start()
+        while True:
+            head = self.queue.peek_time()
+            if head is None or head > t_max:
+                return
+            self.step()
+
+    def run(self) -> None:
+        self.start()
+        while self.step():
+            pass
+
+    def _dispatch(self, t: float, kind: int, payload: object) -> None:
+        q = self.queue
+        if kind == EVT_ARRIVAL:
+            touched: List[Optional[str]] = [self.arrive(payload, t)]
+            while q.next_is(t, EVT_ARRIVAL):
+                nm = self.arrive(q.pop()[2], t)
+                if nm not in touched:
+                    touched.append(nm)
+            for nm in touched:
+                if nm is not None:  # None = arrival dropped (cancelled job)
                     self._schedule(nm)
-            elif kind == EVT_COMPLETE:
-                nm, rj = payload
-                if rj.preempted:
-                    continue  # superseded by a PREEMPT event at ckpt end
-                sim = self.sims[nm]
-                sim.complete(rj)
-                if self.on_complete is not None:
-                    self.on_complete(nm, rj)
-                if self.elastic is None:
-                    if sim.waiting:
-                        self._schedule(nm)
-                else:
-                    self._post_complete(nm, t)
-            elif kind == EVT_PREEMPT:
-                nm, rj = payload
-                self.sims[nm].finish_preempt(rj, t)
-                if self.on_complete is not None:
-                    self.on_complete(nm, rj)  # rj.end == t after retiming
-                q.push(t, EVT_RESUME, (nm, rj.job))
-            elif kind == EVT_RESUME:
-                nm, job = payload
-                self.sims[nm].requeue(job, t)
-                if self.on_requeue is not None:
-                    self.on_requeue(nm, job)
-                self._schedule(nm)
-            elif kind == EVT_MIGRATE:
-                to, job, state = payload
-                self.sims[to].absorb(job, t, state)
-                if self.on_requeue is not None:
-                    self.on_requeue(to, job)
-                self._schedule(to)
-            else:  # pragma: no cover - defensive
-                raise RuntimeError(f"unknown event kind {kind}")
+        elif kind == EVT_COMPLETE:
+            nm, rj = payload
+            if rj.preempted:
+                return  # superseded by a PREEMPT event at ckpt end
+            sim = self.sims[nm]
+            sim.complete(rj)
+            if self.on_complete is not None:
+                self.on_complete(nm, rj)
+            if self.elastic is None:
+                if sim.waiting:
+                    self._schedule(nm)
+            else:
+                self._post_complete(nm, t)
+        elif kind == EVT_PREEMPT:
+            nm, rj = payload
+            self.sims[nm].finish_preempt(rj, t)
+            if self.on_complete is not None:
+                self.on_complete(nm, rj)  # rj.end == t after retiming
+            q.push(t, EVT_RESUME, (nm, rj.job))
+        elif kind == EVT_RESUME:
+            nm, job = payload
+            self.sims[nm].requeue(job, t)
+            if self.on_requeue is not None:
+                self.on_requeue(nm, job)
+            self._schedule(nm)
+        elif kind == EVT_MIGRATE:
+            to, job, state = payload
+            self.sims[to].absorb(job, t, state)
+            if self.on_requeue is not None:
+                self.on_requeue(to, job)
+            self._schedule(to)
+        else:  # pragma: no cover - defensive
+            raise RuntimeError(f"unknown event kind {kind}")
 
     # -- elastic hooks (resize + migration), bounded per COMPLETE event -----
 

@@ -83,6 +83,17 @@ class ForecastConfig:
     refine: bool = True  # online runtime-posterior refinement
     queueing: bool = True  # M/G/c wait inflation on the drain proxy
     burst_gate: bool = True  # hysteretic burst-risk gating of elastic acts
+    # dispatch consumers of the refined posteriors (ISSUE 6 satellites;
+    # both are no-ops unless ``refine`` built per-node models):
+    # dispatch_refine — EnergyAware/Predictive dispatchers read
+    # posterior-blended (E*, t*) tables instead of the static priors, so
+    # dispatch and per-node placement see the *same* model;
+    # migration_relief_weight — the migrate accept additionally credits
+    # the freeing of the donor's queue (each remaining waiter's forecasted
+    # wait drops by the moved job's drain seconds), weighted by this —
+    # 0 restores the myopic single-job gain.
+    dispatch_refine: bool = True
+    migration_relief_weight: float = 1.0
     posterior_weight: float = 4.0  # Phase-I prior strength (pseudo-segments)
     ewma_horizon: int = 4  # short-horizon arrival-rate EWMA (samples)
     baseline_horizon: int = 64  # long-run baseline EWMA (samples)
@@ -206,6 +217,36 @@ class RefinedPerfModel:
     def profiling_energy(self, job: str) -> float:
         return self.base.profiling_energy(job)
 
+    def posterior_curves(
+        self, prof, *, limit: Optional[int] = None
+    ) -> Optional[Dict[int, Tuple[float, float]]]:
+        """Posterior (runtime s, busy power W) per feasible count for the
+        app whose ground-truth profile is ``prof``, blending the caller's
+        absolute prior (the profile itself) toward this node's observed
+        segments with the usual ``(w·prior + n·obs) / (w + n)`` shrink.
+        ``None`` when this node has no observations of the app — callers
+        keep their static tables.  This is the dispatch-table feed
+        (``ForecastPlane.dispatch_tables``): unlike ``spec()``, the prior
+        here is the dispatcher's calibrated truth, not the Phase-I noisy
+        estimate, because that is the table being corrected."""
+        obs = self._obs.get(id(prof))
+        if not obs:
+            return None
+        w = self.weight
+        out: Dict[int, Tuple[float, float]] = {}
+        for g in prof.feasible_counts:
+            if limit is not None and g > limit:
+                continue
+            n, mt, np_, mp = obs.get(g, (0, 0.0, 0, 0.0))
+            t_post = (w * prof.runtime[g] + n * mt) / (w + n)
+            p_post = (
+                (w * prof.busy_power[g] + np_ * mp) / (w + np_)
+                if np_
+                else prof.busy_power[g]
+            )
+            out[g] = (t_post, p_post)
+        return out or None
+
 
 class ForecastPlane:
     """The shared online-signal state for one simulation run.
@@ -237,6 +278,10 @@ class ForecastPlane:
         self._routed: Dict[str, int] = {nm: 0 for nm in units}
         self._models: Dict[str, RefinedPerfModel] = {}
         self._armed = False
+        # dispatch-table overlay state (bind_dispatch / dispatch_tables)
+        self._dispatch_truth: Optional[Dict[str, Dict[str, object]]] = None
+        self._tables: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._tables_ver: Optional[Tuple[int, ...]] = None
         # observability counters (surfaced via summary())
         self.gate_flips = 0
         self.migrations_vetoed = 0
@@ -255,6 +300,57 @@ class ForecastPlane:
         model = RefinedPerfModel(base, weight=self.cfg.posterior_weight)
         self._models[nm] = model
         return model
+
+    def bind_dispatch(self, app_truth: Dict[str, Dict[str, object]]) -> None:
+        """Give the plane the dispatcher's per-node app->JobProfile tables
+        so ``dispatch_tables`` can rebuild (E*, t*) cells from posteriors.
+        Called by the cluster run when a plane exists; harmless otherwise."""
+        self._dispatch_truth = app_truth
+        self._tables = None
+        self._tables_ver = None
+
+    def dispatch_tables(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-(node, app) best-mode (energy, runtime) tables for the
+        dispatchers, with every cell a node has *observed* re-derived from
+        that node's refined posterior — dispatch and per-node placement see
+        the same model (ISSUE 6 satellite).  Falls back to the static
+        ``ClusterState`` priors when refinement (or ``dispatch_refine``)
+        is off or nothing has been observed.  Rebuilds are cached keyed on
+        the tuple of per-node model versions, so the arrays are only
+        recomputed after an accepted observation."""
+        st = self.state
+        assert st is not None, "dispatch_tables needs a ClusterState"
+        if (
+            not (self.cfg.refine and self.cfg.dispatch_refine)
+            or self._dispatch_truth is None
+            or not self._models
+        ):
+            return st.e_best, st.t_best
+        ver = tuple(m.version for m in self._models.values())
+        if self._tables is not None and self._tables_ver == ver:
+            return self._tables
+        e = np.array(st.e_best)
+        t = np.array(st.t_best)
+        for nm, model in self._models.items():
+            ni = st.index.get(nm)
+            truth = self._dispatch_truth.get(nm)
+            if ni is None or not truth:
+                continue
+            for app, ai in st.app_index.items():
+                if not st.fits[ni, ai]:
+                    continue
+                prof = truth.get(app)
+                if prof is None:
+                    continue
+                curves = model.posterior_curves(prof, limit=int(st.units[ni]))
+                if curves is None:
+                    continue
+                eb, tb = min((tt * pp, tt) for tt, pp in curves.values())
+                e[ni, ai] = eb
+                t[ni, ai] = tb
+        self._tables = (e, t)
+        self._tables_ver = ver
+        return self._tables
 
     # -- substrate feeds -----------------------------------------------------
 

@@ -278,6 +278,19 @@ class NodeSim:
         self._queued_at[job] = t
         self.waiting.append(job)
 
+    def cancel_waiting(self, job: str) -> None:
+        """Drop a waiting job that has never launched (control-plane
+        cancel, ISSUE 6).  The caller is responsible for refusing jobs
+        that are running, checkpointed or carrying elastic state — this
+        only erases the queue entry and its arrival bookkeeping."""
+        if job in self.progress or job in self.needs_restart:
+            raise ValueError(f"{job}: cannot cancel a checkpointed job")
+        if self._segments.get(job, 0):
+            raise ValueError(f"{job}: cannot cancel after it has launched")
+        self.waiting.remove(job)  # raises if not waiting
+        self.arrival_of.pop(job, None)
+        self._queued_at.pop(job, None)
+
     def evict(self, job: str) -> "MigrantState":
         """Detach a waiting job for migration; returns everything that must
         travel with it — original arrival, completed-work fraction, the

@@ -1,0 +1,516 @@
+"""Durable scheduler control plane (ISSUE 6): job-lifecycle state
+machine, admission gate, journal round-trips, daemon-vs-batch schedule
+parity, and the crash-recovery property — truncate the journal at random
+byte offsets (a SIGKILL can land anywhere), restart, replay, re-apply
+the surviving workload, and the final schedule must be bit-identical to
+the uninterrupted run."""
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdmissionConfig,
+    Arrival,
+    Cluster,
+    ClusterBackend,
+    EcoSched,
+    EnergyAwareDispatcher,
+    IllegalTransition,
+    JobInfo,
+    Journal,
+    JournalError,
+    NodeSpec,
+    ProfiledPerfModel,
+    RecoveryError,
+    SchedulerService,
+)
+from repro.core import calibration as C
+from repro.core.service import (
+    ADMITTED,
+    CANCELLED,
+    DONE,
+    FAILED,
+    MIGRATING,
+    PREEMPTED,
+    QUEUED,
+    RUNNING,
+    SUBMITTED,
+    TRANSITIONS,
+)
+from repro.roofline.hw import A100, H100
+
+LAM, TAU, NOISE, SEED = 0.35, 0.45, 0.02, 1
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def _cluster(dispatcher=None):
+    return Cluster(
+        [NodeSpec("h100-0", H100), NodeSpec("a100-0", A100)],
+        truth_for=lambda s: C.build_system(s.chip.name),
+        policy_for=lambda s, t: EcoSched(
+            ProfiledPerfModel(t, noise=NOISE, seed=SEED), lam=LAM, tau=TAU
+        ),
+        dispatcher=dispatcher or EnergyAwareDispatcher(),
+        slowdown_for=lambda s: C.cross_numa_slowdown,
+        label="svc-test",
+    )
+
+
+def _factory(**kw):
+    return lambda: ClusterBackend(_cluster(), **kw)
+
+
+def _fingerprint(service):
+    res = service.result()
+    assert res["ok"], res
+    return (
+        tuple(tuple(r) for r in sorted(res["records"])),
+        res["makespan"],
+        res["total_energy"],
+    )
+
+
+# a workload exercising every journal record kind: staggered submits,
+# a same-instant pair, a cancel, bounded advances, a late straggler, drain
+OPS = [
+    ("submit", "j0", "bert", 10.0),
+    ("submit", "j1", "lbm", 10.0),
+    ("submit", "j2", "resnet50", 40.0),
+    ("advance", 60.0),
+    ("submit", "j3", "gpt2", 90.0),
+    ("submit", "j4", "MonteCarlo", 90.0),
+    ("cancel", "j4"),
+    ("advance", 800.0),
+    ("submit", "j5", "vgg16", 1200.0),
+    ("drain",),
+]
+
+
+def _apply(service, ops=OPS):
+    for op in ops:
+        if op[0] == "submit":
+            service.submit(op[1], op[2], op[3])
+        elif op[0] == "cancel":
+            service.cancel(op[1])
+        elif op[0] == "advance":
+            service.advance(op[1])
+        else:
+            service.advance(None)
+
+
+# --------------------------------------------------------------------------
+# state machine
+# --------------------------------------------------------------------------
+
+
+def test_legal_lifecycle_paths():
+    j = JobInfo(name="a", app="x")
+    for s in (ADMITTED, QUEUED, RUNNING, PREEMPTED, QUEUED, MIGRATING,
+              QUEUED, RUNNING, DONE):
+        j.advance(s, 1.0)
+    assert j.state == DONE
+    assert [s for _, s in j.history] == [
+        ADMITTED, QUEUED, RUNNING, PREEMPTED, QUEUED, MIGRATING,
+        QUEUED, RUNNING, DONE,
+    ]
+
+
+@pytest.mark.parametrize(
+    "path",
+    [
+        (RUNNING,),                      # SUBMITTED cannot launch directly
+        (ADMITTED, RUNNING),             # must be QUEUED first
+        (ADMITTED, QUEUED, RUNNING, DONE, QUEUED),   # DONE is terminal
+        (ADMITTED, CANCELLED, QUEUED),   # CANCELLED is terminal
+        (FAILED, ADMITTED),              # FAILED is terminal
+        (ADMITTED, QUEUED, PREEMPTED),   # preempt only from RUNNING
+    ],
+)
+def test_illegal_transitions_raise(path):
+    j = JobInfo(name="a", app="x")
+    with pytest.raises(IllegalTransition):
+        for s in path:
+            j.advance(s, 0.0)
+
+
+def test_unknown_state_raises():
+    j = JobInfo(name="a", app="x")
+    with pytest.raises(IllegalTransition):
+        j.advance("LIMBO", 0.0)
+
+
+def test_every_state_is_reachable():
+    reachable, frontier = {SUBMITTED}, [SUBMITTED]
+    while frontier:
+        for nxt in TRANSITIONS[frontier.pop()]:
+            if nxt not in reachable:
+                reachable.add(nxt)
+                frontier.append(nxt)
+    assert reachable == set(TRANSITIONS)
+
+
+# --------------------------------------------------------------------------
+# journal
+# --------------------------------------------------------------------------
+
+
+def test_journal_round_trip(tmp_path):
+    path = str(tmp_path / "j.jnl")
+    recs = [
+        {"k": "hdr", "v": 1},
+        {"k": "sub", "t": 1.5, "name": "a", "app": "x", "ok": True},
+        {"k": "evt", "e": "queued", "t": 1.5, "job": "a"},
+    ]
+    with Journal(path) as j:
+        for r in recs:
+            j.append(r)
+    assert Journal.read(path) == recs
+
+
+def test_journal_torn_tail_dropped(tmp_path):
+    path = str(tmp_path / "j.jnl")
+    with Journal(path) as j:
+        j.append({"k": "hdr", "v": 1})
+        j.append({"k": "sub", "name": "a"})
+    with open(path, "ab") as f:
+        f.write(b'{"k":"sub","na')  # SIGKILL mid-append
+    recs = Journal.read(path)
+    assert [r["k"] for r in recs] == ["hdr", "sub"]
+
+
+def test_journal_corrupt_middle_raises(tmp_path):
+    path = str(tmp_path / "j.jnl")
+    lines = ['{"k":"hdr","v":1}', "not json at all", '{"k":"sub","name":"a"}']
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with pytest.raises(JournalError):
+        Journal.read(path)
+
+
+def test_journal_complete_tail_without_newline_kept(tmp_path):
+    path = str(tmp_path / "j.jnl")
+    with open(path, "w") as f:
+        f.write('{"k":"hdr","v":1}\n{"k":"sub","name":"a"}')  # newline lost
+    assert [r["k"] for r in Journal.read(path)] == ["hdr", "sub"]
+
+
+# --------------------------------------------------------------------------
+# admission control
+# --------------------------------------------------------------------------
+
+
+def test_queue_full_rejection():
+    svc = SchedulerService(
+        _factory(), admission=AdmissionConfig(max_pending=2, burst_limit=0)
+    )
+    assert svc.submit("a", "bert", 10.0)["ok"]
+    assert svc.submit("b", "bert", 11.0)["ok"]
+    resp = svc.submit("c", "bert", 12.0)
+    assert not resp["ok"] and "queue full" in resp["reason"]
+    assert svc.jobs["c"].state == FAILED
+    assert svc.gate.rejected == 1
+    # the backlog draining re-opens the gate
+    svc.advance(None)
+    assert svc.submit("d", "bert", 20000.0)["ok"]
+
+
+def test_burst_shed_rejection():
+    svc = SchedulerService(
+        _factory(),
+        admission=AdmissionConfig(
+            max_pending=0, burst_limit=2.0, burst_pending=2,
+            ewma_horizon=4, baseline_horizon=64,
+        ),
+    )
+    # establish a slow baseline...
+    t = 0.0
+    for i in range(8):
+        t += 500.0
+        assert svc.submit(f"s{i}", "bert", t)["ok"]
+    # ...then a tight burst on top of a deep backlog
+    rejected = []
+    for i in range(12):
+        t += 1.0
+        resp = svc.submit(f"b{i}", "bert", t)
+        if not resp["ok"]:
+            rejected.append(resp["reason"])
+    assert rejected and all("burst shed" in r for r in rejected)
+    assert svc.gate.rejected == len(rejected)
+
+
+def test_unplaceable_app_fails_at_the_edge():
+    svc = SchedulerService(_factory())
+    resp = svc.submit("a", "no-such-app", 1.0)
+    assert not resp["ok"] and "no node can run" in resp["reason"]
+    assert svc.jobs["a"].state == FAILED
+
+
+def test_idempotent_resubmit(tmp_path):
+    path = str(tmp_path / "j.jnl")
+    svc = SchedulerService(_factory(), journal_path=path)
+    svc.submit("a", "bert", 10.0)
+    resp = svc.submit("a", "bert", 10.0)  # client retry after a crash
+    assert resp["ok"] and resp.get("dup")
+    svc.close()
+    subs = [r for r in Journal.read(path) if r["k"] == "sub"]
+    assert len(subs) == 1  # the retry journaled nothing
+
+
+# --------------------------------------------------------------------------
+# cancel semantics
+# --------------------------------------------------------------------------
+
+
+def test_cancel_queued_job_and_refuse_running():
+    svc = SchedulerService(_factory())
+    svc.submit("a", "bert", 10.0)
+    svc.submit("b", "lbm", 20.0)
+    assert svc.cancel("a")["ok"]  # never launched: cancellable
+    assert svc.jobs["a"].state == CANCELLED
+    svc.advance(100.0)  # b launches
+    assert svc.jobs["b"].state == RUNNING
+    resp = svc.cancel("b")
+    assert not resp["ok"] and "not cancellable" in resp["reason"]
+    assert not svc.cancel("nope")["ok"]  # unknown job
+    svc.advance(None)
+    res = svc.result()
+    assert [r[0] for r in res["records"]] == ["b"]  # a left no trace
+
+
+# --------------------------------------------------------------------------
+# daemon-vs-batch schedule parity
+# --------------------------------------------------------------------------
+
+
+def test_service_matches_batch_simulate():
+    stream = [
+        Arrival(t=10.0, name="j0", app="bert"),
+        Arrival(t=10.0, name="j1", app="lbm"),
+        Arrival(t=40.0, name="j2", app="resnet50"),
+        Arrival(t=90.0, name="j3", app="gpt2"),
+        Arrival(t=1200.0, name="j4", app="vgg16"),
+    ]
+    batch = _cluster().simulate(stream)
+    svc = SchedulerService(
+        lambda: ClusterBackend(
+            _cluster(), apps=sorted({a.app for a in stream})
+        )
+    )
+    for a in stream:
+        assert svc.submit(a.name, a.app, a.t)["ok"]
+    svc.advance(None)
+    res = svc.result()
+    assert res["ok"]
+    batch_keyed = sorted(
+        [r.job, r.node, r.g, r.start, r.end] for r in batch.records
+    )
+    assert sorted(res["records"]) == batch_keyed
+    assert res["makespan"] == batch.makespan
+    assert res["total_energy"] == batch.total_energy
+
+
+# --------------------------------------------------------------------------
+# recovery
+# --------------------------------------------------------------------------
+
+
+def test_clean_restart_recovers_identical_state(tmp_path):
+    path = str(tmp_path / "j.jnl")
+    svc = SchedulerService(_factory(), journal_path=path)
+    _apply(svc)
+    golden = _fingerprint(svc)
+    golden_jobs = {n: j.to_dict() for n, j in svc.jobs.items()}
+    svc.close()
+
+    back = SchedulerService(_factory(), journal_path=path)
+    assert back.replay_divergences == 0
+    assert _fingerprint(back) == golden
+    assert {n: j.to_dict() for n, j in back.jobs.items()} == golden_jobs
+    back.close()
+
+
+def test_crash_recovery_at_random_offsets(tmp_path):
+    """The tentpole property: kill the daemon at ANY byte offset of the
+    journal, restart, replay, re-drive the workload — the final schedule
+    is bit-identical to the run that never crashed."""
+    golden_path = str(tmp_path / "golden.jnl")
+    svc = SchedulerService(_factory(), journal_path=golden_path)
+    _apply(svc)
+    golden = _fingerprint(svc)
+    svc.close()
+    blob = open(golden_path, "rb").read()
+    header_end = blob.index(b"\n") + 1
+
+    rng = np.random.default_rng(1234)
+    offsets = sorted(
+        {int(o) for o in rng.integers(1, len(blob), size=12)}
+        | {header_end - 2, header_end, len(blob) - 1}
+    )
+    for off in offsets:
+        path = str(tmp_path / f"crash{off}.jnl")
+        with open(path, "wb") as f:
+            f.write(blob[:off])
+        back = SchedulerService(_factory(), journal_path=path)  # recovers
+        _apply(back)  # the client re-drives; submits are idempotent
+        assert _fingerprint(back) == golden, f"diverged at offset {off}"
+        assert back.replay_divergences == 0
+        back.close()
+        # and the repaired journal recovers once more, untouched
+        again = SchedulerService(_factory(), journal_path=path)
+        assert _fingerprint(again) == golden
+        again.close()
+
+
+def test_tampered_event_raises_recovery_error(tmp_path):
+    path = str(tmp_path / "j.jnl")
+    svc = SchedulerService(_factory(), journal_path=path)
+    _apply(svc)
+    svc.close()
+    lines = open(path).read().splitlines()
+    for i, line in enumerate(lines):
+        rec = json.loads(line)
+        if rec["k"] == "evt" and rec["e"] == "launch":
+            rec["node"] = "h100-0" if rec["node"] != "h100-0" else "a100-0"
+            lines[i] = json.dumps(rec, separators=(",", ":"), sort_keys=True)
+            break
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with pytest.raises(RecoveryError):
+        SchedulerService(_factory(), journal_path=path)
+
+
+def test_lost_input_record_raises_recovery_error(tmp_path):
+    # deleting an *input* (adv) leaves journaled transitions that replay
+    # can no longer regenerate -> the prefix check must refuse
+    path = str(tmp_path / "j.jnl")
+    svc = SchedulerService(_factory(), journal_path=path)
+    _apply(svc)
+    svc.close()
+    lines = [
+        l for l in open(path).read().splitlines()
+        if json.loads(l)["k"] != "adv"
+    ]
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with pytest.raises(RecoveryError):
+        SchedulerService(_factory(), journal_path=path)
+
+
+def test_wrong_backend_raises_recovery_error(tmp_path):
+    path = str(tmp_path / "j.jnl")
+    svc = SchedulerService(_factory(), journal_path=path)
+    svc.submit("a", "bert", 10.0)
+    svc.close()
+
+    def other():
+        return ClusterBackend(
+            Cluster(
+                [NodeSpec("h100-0", H100)],
+                truth_for=lambda s: C.build_system(s.chip.name),
+                policy_for=lambda s, t: EcoSched(
+                    ProfiledPerfModel(t, noise=NOISE, seed=SEED),
+                    lam=LAM, tau=TAU,
+                ),
+                dispatcher=EnergyAwareDispatcher(),
+            )
+        )
+
+    with pytest.raises(RecoveryError):
+        SchedulerService(other, journal_path=path)
+
+
+# --------------------------------------------------------------------------
+# the real thing: SIGKILL a live daemon subprocess, restart, compare
+# --------------------------------------------------------------------------
+
+
+def _rpc(sock_path, req, *, timeout=10.0):
+    with socket.socket(socket.AF_UNIX, socket.SOCK_STREAM) as c:
+        c.settimeout(timeout)
+        c.connect(sock_path)
+        c.sendall((json.dumps(req) + "\n").encode())
+        buf = b""
+        while not buf.endswith(b"\n"):
+            chunk = c.recv(65536)
+            if not chunk:
+                break
+            buf += chunk
+    return json.loads(buf.decode())
+
+
+def _boot_daemon(sock_path, jnl_path):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.cli", "daemon",
+            "--socket", sock_path, "--journal", jnl_path,
+            "--preset", "hetero",
+        ],
+        env=env, cwd=REPO,
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+    )
+    deadline = time.time() + 30.0
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            out = proc.stdout.read().decode()
+            raise RuntimeError(f"daemon died on boot:\n{out}")
+        try:
+            if _rpc(sock_path, {"op": "ping"}).get("pong"):
+                return proc
+        except (OSError, ValueError):
+            time.sleep(0.1)
+    proc.kill()
+    raise RuntimeError("daemon never answered ping")
+
+
+@pytest.mark.slow
+def test_sigkill_daemon_recovers_bit_identical(tmp_path):
+    from repro.cli import make_backend_factory
+
+    ops = [
+        {"op": "submit", "name": "a", "app": "bert", "t": 10.0},
+        {"op": "submit", "name": "b", "app": "lbm", "t": 25.0},
+        {"op": "submit", "name": "c", "app": "resnet50", "t": 25.0},
+        {"op": "advance", "until": 500.0},
+        {"op": "submit", "name": "d", "app": "gpt2", "t": 900.0},
+    ]
+    golden_svc = SchedulerService(make_backend_factory("hetero"))
+    for req in ops:
+        assert golden_svc.handle(req)["ok"]
+    golden_svc.advance(None)
+    golden = _fingerprint(golden_svc)
+
+    sock = str(tmp_path / "d.sock")
+    jnl = str(tmp_path / "d.jnl")
+    proc = _boot_daemon(sock, jnl)
+    try:
+        for req in ops:
+            assert _rpc(sock, req)["ok"]
+        os.kill(proc.pid, signal.SIGKILL)  # no warning, no flush window
+        proc.wait(timeout=10)
+
+        proc = _boot_daemon(sock, jnl)  # same journal -> replay
+        assert _rpc(sock, {"op": "drain"})["ok"]
+        res = _rpc(sock, {"op": "result"})
+        assert res["ok"]
+        assert (
+            tuple(tuple(r) for r in sorted(res["records"])),
+            res["makespan"],
+            res["total_energy"],
+        ) == golden
+        stats = _rpc(sock, {"op": "stats"})
+        assert stats["replay_divergences"] == 0
+        assert _rpc(sock, {"op": "shutdown"})["ok"]
+        proc.wait(timeout=10)
+    finally:
+        if proc.poll() is None:
+            proc.kill()

@@ -1,0 +1,210 @@
+"""DVFS as the third decision axis: joint (count, frequency) EcoSched
+vs the count-only PR 6 policy (ISSUE 7).
+
+Each calibrated system (the paper's H100/A100/V100 platforms) runs the
+single-node golden workload twice under identical hyperparameters
+(``LAM/TAU/NOISE/SEED``):
+
+  * ``count_only`` — ``build_system(sys)``: base clock only, the exact
+    PR 6 decision space,
+  * ``joint``      — ``build_system(sys, freq_levels=<full ladder>)``:
+    every app carries per-frequency runtime/power curves from the
+    sweet-spot model (``ChipSpec.freq_time_multiplier`` /
+    ``freq_power_multiplier``), and EcoSched argmins over the joint
+    (count, frequency) candidate set.
+
+The sweet-spot model makes this a real trade, not a free win:
+downclocking saves energy everywhere (cubic power in the clock ratio)
+but stretches compute-bound apps near-linearly, so EDP only improves
+where the mix is memory-bound enough — the paper's central DVFS claim.
+
+Gates (full mode):
+  * joint EDP <= count-only EDP on >= 2/3 calibrated systems,
+  * joint total energy strictly below count-only on *all* systems,
+  * frequency-off parity: an explicit ``freq_levels=1`` H100 run is
+    bit-identical to the default build AND still matches the PR 6
+    golden schedule fingerprint.
+
+``--smoke`` (CI): the frequency-off parity + golden-fingerprint lock,
+plus the deterministic H100 joint EDP win as a regression tripwire.
+
+Writes ``benchmarks/results/dvfs.csv``; ``run.py`` snapshots the rows
+into the committed ``benchmarks/BENCH_dvfs.json``.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import time
+
+from benchmarks.common import LAM, NOISE, SEED, TAU, RESULTS_DIR, Csv
+from repro.core import EcoSched, Node, ProfiledPerfModel, simulate
+from repro.core import calibration as C
+from repro.roofline.hw import CHIPS
+
+SYSTEMS = ("h100", "a100", "v100")
+
+# the PR 6 single-node golden schedule (tests/test_events.py /
+# tests/test_dvfs.py) — frequency-off runs must still produce it
+GOLDEN_H100_FP = "4e5acdeeb3914722311e6f77658684e6"
+
+
+def fp_records(records) -> str:
+    s = ";".join(
+        f"{r.job}|{r.g}|{r.start!r}|{r.end!r}|{r.node}|{r.domain}"
+        for r in records
+    )
+    return hashlib.md5(s.encode()).hexdigest()
+
+
+def _run(system: str, freq_levels: int | None = None):
+    """The golden single-node workload on one calibrated system."""
+    truth = (
+        C.build_system(system)
+        if freq_levels is None
+        else C.build_system(system, freq_levels=freq_levels)
+    )
+    node = Node(4, 2, C.idle_power(system))
+    pol = EcoSched(
+        ProfiledPerfModel(truth, noise=NOISE, seed=SEED), lam=LAM, tau=TAU
+    )
+    return simulate(
+        pol,
+        node,
+        truth,
+        arrivals=[(120.0 * i, a) for i, a in enumerate(C.APP_ORDER)],
+        slowdown_model=C.cross_numa_slowdown,
+    )
+
+
+def _parity(csv: Csv, verbose: bool) -> None:
+    """freq_levels=1 is bit-identical to count-only — the PR 6 lock."""
+    t0 = time.perf_counter()
+    base = _run("h100")
+    one = _run("h100", freq_levels=1)
+    assert fp_records(one.records) == fp_records(base.records), (
+        "freq_levels=1 must reproduce the count-only schedule bit-identically"
+    )
+    assert one.total_energy == base.total_energy
+    assert all(r.f == 0 for r in one.records)
+    assert fp_records(base.records) == GOLDEN_H100_FP, (
+        f"count-only H100 schedule drifted from the PR 6 golden lock: "
+        f"{fp_records(base.records)}"
+    )
+    us = (time.perf_counter() - t0) * 1e6
+    if verbose:
+        print("dvfs parity: freq_levels=1 == count-only == PR 6 golden")
+    csv.add("dvfs_parity", us, "freq-off bit-identical to PR 6")
+
+
+def run(csv: Csv, verbose: bool = True, smoke: bool = False):
+    if smoke:
+        return _smoke(csv, verbose)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    _parity(csv, verbose)
+    rows = [
+        "system,levels,count_only_edp_Js,joint_edp_Js,"
+        "count_only_energy_J,joint_energy_J,count_only_makespan_s,"
+        "joint_makespan_s,downclocked_launches,win"
+    ]
+    snapshot = {"rows": []}
+    wins = 0
+    for system in SYSTEMS:
+        t0 = time.perf_counter()
+        levels = len(CHIPS[system].freq_ratios)
+        base = _run(system)
+        joint = _run(system, freq_levels=levels)
+        us = (time.perf_counter() - t0) * 1e6
+        down = sum(r.f > 0 for r in joint.records)
+        win = joint.edp <= base.edp
+        wins += win
+        rows.append(
+            f"{system},{levels},{base.edp:.6e},{joint.edp:.6e},"
+            f"{base.total_energy:.1f},{joint.total_energy:.1f},"
+            f"{base.makespan:.1f},{joint.makespan:.1f},{down},{int(win)}"
+        )
+        snapshot["rows"].append(
+            {
+                "system": system,
+                "levels": levels,
+                "count_only_edp": base.edp,
+                "joint_edp": joint.edp,
+                "count_only_energy": base.total_energy,
+                "joint_energy": joint.total_energy,
+                "downclocked_launches": int(down),
+                "win": bool(win),
+            }
+        )
+        assert joint.total_energy < base.total_energy, (
+            f"{system}: joint DVFS must save energy "
+            f"({joint.total_energy:.3e} vs {base.total_energy:.3e})"
+        )
+        if verbose:
+            print(
+                f"dvfs {system} ({levels} levels): "
+                f"count-only EDP={base.edp:.3e} | joint {joint.edp:.3e} "
+                f"({100 * (joint.edp / base.edp - 1):+.2f}%), "
+                f"energy {100 * (joint.total_energy / base.total_energy - 1):+.1f}%, "
+                f"{down} downclocked launches | {'WIN' if win else 'no win'}"
+            )
+        csv.add(
+            f"dvfs_{system}", us,
+            f"edp_vs_count_only={100 * (joint.edp / base.edp - 1):+.2f}%",
+        )
+    out_path = os.path.join(RESULTS_DIR, "dvfs.csv")
+    with open(out_path, "w") as f:
+        f.write("\n".join(rows) + "\n")
+    if verbose:
+        print(f"dvfs CSV -> {out_path}")
+    assert wins >= 2, (
+        f"joint (count, frequency) EcoSched must match or beat count-only "
+        f"EDP on >= 2/3 calibrated systems, got {wins}"
+    )
+    return snapshot
+
+
+def write_json(path: str, snapshot: dict) -> None:
+    """Committed DVFS-trajectory snapshot (run.py, full runs only)."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(snapshot, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def _smoke(csv: Csv, verbose: bool) -> int:
+    """CI tripwire: frequency-off parity + the deterministic H100 win."""
+    _parity(csv, verbose)
+    t0 = time.perf_counter()
+    base = _run("h100")
+    joint = _run("h100", freq_levels=len(CHIPS["h100"].freq_ratios))
+    assert any(r.f > 0 for r in joint.records), (
+        "the joint run must actually exercise the frequency axis"
+    )
+    assert joint.total_energy < base.total_energy
+    assert joint.edp <= base.edp, (
+        f"H100 joint EDP win regressed: {joint.edp:.3e} vs {base.edp:.3e}"
+    )
+    us = (time.perf_counter() - t0) * 1e6
+    if verbose:
+        print(
+            f"dvfs --smoke: h100 joint EDP {joint.edp:.3e} vs "
+            f"count-only {base.edp:.3e}"
+        )
+    csv.add("dvfs_smoke", us, "parity+h100 EDP win OK")
+    return 0
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", help="also write the BENCH_dvfs.json snapshot")
+    args = ap.parse_args()
+    c = Csv()
+    snap = run(c, smoke=args.smoke)
+    if args.json and not args.smoke:
+        write_json(args.json, snap)
+        print(f"dvfs snapshot -> {args.json}")
+    c.emit()

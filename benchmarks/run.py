@@ -20,6 +20,7 @@ def main() -> None:
         bench_cluster,
         bench_cluster_throughput,
         bench_decision_overhead,
+        bench_dvfs,
         bench_elastic,
         bench_forecast,
         bench_fig1_scaling,
@@ -52,6 +53,7 @@ def main() -> None:
     bench_cluster.run(csv, verbose=verbose)
     bench_elastic.run(csv, verbose=verbose, smoke=args.quick)
     forecast = bench_forecast.run(csv, verbose=verbose, smoke=args.quick)
+    dvfs = bench_dvfs.run(csv, verbose=verbose, smoke=args.quick)
     throughput = bench_cluster_throughput.run(csv, verbose=verbose, smoke=args.quick)
     bench_service.run(csv, verbose=verbose, smoke=args.quick)
 
@@ -68,8 +70,12 @@ def main() -> None:
             os.path.dirname(__file__), "BENCH_forecast.json"
         )
         bench_forecast.write_json(forecast_path, forecast)
+        dvfs_path = os.path.join(os.path.dirname(__file__), "BENCH_dvfs.json")
+        bench_dvfs.write_json(dvfs_path, dvfs)
         if verbose:
-            print(f"perf baselines -> {json_path}, {forecast_path}")
+            print(
+                f"perf baselines -> {json_path}, {forecast_path}, {dvfs_path}"
+            )
 
     print("\nname,us_per_call,derived")
     csv.emit()

@@ -74,10 +74,15 @@ def make_backend_factory(
     dispatcher: str = "eco",
     elastic: bool = False,
     forecast: bool = False,
+    freq_levels: int = 1,
 ):
     """A fresh-backend factory for ``SchedulerService``: every call
     rebuilds the calibrated cluster from scratch (deterministically),
-    which is exactly what journal replay needs."""
+    which is exactly what journal replay needs.  ``freq_levels > 1``
+    enables DVFS: each node's truth tables carry per-frequency
+    runtime/power curves, the per-node policies pick joint (count,
+    frequency) actions, and the chosen level is journaled per transition
+    so crash recovery replays it bit-identically."""
     systems = PRESETS[preset]
 
     def make() -> ClusterBackend:
@@ -89,7 +94,9 @@ def make_backend_factory(
             specs.append(NodeSpec(name=f"{s}-{idx}", chip=CHIPS[s]))
         cluster = Cluster(
             specs,
-            truth_for=lambda spec: C.build_system(spec.chip.name),
+            truth_for=lambda spec: C.build_system(
+                spec.chip.name, freq_levels=freq_levels
+            ),
             policy_for=lambda spec, truth: EcoSched(
                 ProfiledPerfModel(truth, noise=NOISE, seed=SEED),
                 lam=LAM,
@@ -135,6 +142,12 @@ def main(argv=None) -> int:
     )
     d.add_argument("--elastic", action="store_true")
     d.add_argument("--forecast", action="store_true")
+    d.add_argument(
+        "--freq-levels",
+        type=int,
+        default=1,
+        help="DVFS levels per chip (1 = base clock only)",
+    )
     d.add_argument("--fsync", action="store_true")
     d.add_argument("--max-pending", type=int, default=256)
     d.add_argument("--burst-limit", type=float, default=3.0)
@@ -169,6 +182,7 @@ def main(argv=None) -> int:
                 dispatcher=args.dispatcher,
                 elastic=args.elastic,
                 forecast=args.forecast,
+                freq_levels=args.freq_levels,
             ),
             journal_path=args.journal,
             admission=AdmissionConfig(

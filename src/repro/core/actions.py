@@ -1,7 +1,7 @@
 """Feasible-action enumeration (paper §III-C) — pure-Python reference.
 
-An action is a set of ⟨job, unit-count⟩ modes satisfying, under the
-*current* node state:
+An action is a set of ⟨job, unit-count, frequency-level⟩ modes
+satisfying, under the *current* node state:
   * total units ≤ free units, placeable as contiguous ranges (checked by
     replaying the simulator's domain-spreading first-fit on a copy of the
     node's placement state — counts in descending order, exactly the order
@@ -13,7 +13,7 @@ For the paper's node (M=4, K=2) exhaustive enumeration is tiny.  For pod
 scale (M=16, K=4, 17-job windows) the exact space can exceed 10^5, so
 beyond ``exact_limit`` we fall back to beam construction: extend the
 current beam of partial actions by every (job, mode), dedupe partials
-that reach the same {job → g} set through different extension orders
+that reach the same {job → (g, f)} set through different extension orders
 (otherwise one good set occupies several beam slots and beam width buys
 no diversity), keep the best ``beam`` by score, and collect every partial
 generated — greedy-complete in the same spirit as the paper's greedy
@@ -73,6 +73,7 @@ def enumerate_actions(
     free_map: List[bool],
     *,
     lam: float,
+    lam_f: float = 0.0,
     exact_limit: int = 50_000,
     beam: int = 64,
 ) -> List[Tuple[float, Tuple[Tuple[JobSpec, ModeEstimate], ...]]]:
@@ -82,7 +83,7 @@ def enumerate_actions(
     M = view.total_units
     domain_jobs = list(view.domain_jobs) or [0] * view.domains
     if k_avail <= 0 or not specs:
-        return [(score((), g_free=g_free, M=M, lam=lam), ())]
+        return [(score((), g_free=g_free, M=M, lam=lam, lam_f=lam_f), ())]
 
     est = _space_estimate([len(s.modes) for s in specs], k_avail, exact_limit)
 
@@ -97,7 +98,7 @@ def enumerate_actions(
             return False
         if action and not _placeable(free_map, counts, view.domains, domain_jobs):
             return False
-        s = score(mode_list(action), g_free=g_free, M=M, lam=lam)
+        s = score(mode_list(action), g_free=g_free, M=M, lam=lam, lam_f=lam_f)
         results.append((s, tuple(action)))
         return True
 
@@ -112,23 +113,25 @@ def enumerate_actions(
 
     # --- beam construction -------------------------------------------------
     frontier: List[Tuple[float, Tuple[Tuple[JobSpec, ModeEstimate], ...]]] = [
-        (score((), g_free=g_free, M=M, lam=lam), ())
+        (score((), g_free=g_free, M=M, lam=lam, lam_f=lam_f), ())
     ]
     for _ in range(k_avail):
-        # dedupe by the {(job, g)} set: the same action reached through
-        # different extension orders must occupy one beam slot, not many
+        # dedupe by the {(job, g, f)} set: the same action reached through
+        # different extension orders must occupy one beam slot, not many.
+        # (g, f) is the joint mode identity; with a single frequency level
+        # every f is 0 and the key collapses to the historical (job, g) set.
         seen = {}
         for _, partial in frontier:
             used = {sp.name for sp, _ in partial}
             used_g = sum(m.g for _, m in partial)
-            base_key = frozenset((sp.name, m.g) for sp, m in partial)
+            base_key = frozenset((sp.name, m.g, m.f) for sp, m in partial)
             for sp in specs:
                 if sp.name in used:
                     continue
                 for m in sp.modes:
                     if used_g + m.g > g_free:
                         continue
-                    key = base_key | {(sp.name, m.g)}
+                    key = base_key | {(sp.name, m.g, m.f)}
                     if key in seen:
                         continue
                     na = partial + ((sp, m),)
@@ -136,7 +139,12 @@ def enumerate_actions(
                         free_map, [mm.g for _, mm in na], view.domains, domain_jobs
                     ):
                         continue
-                    seen[key] = (score(mode_list(na), g_free=g_free, M=M, lam=lam), na)
+                    seen[key] = (
+                        score(
+                            mode_list(na), g_free=g_free, M=M, lam=lam, lam_f=lam_f
+                        ),
+                        na,
+                    )
         if not seen:
             break
         candidates = list(seen.values())

@@ -166,9 +166,47 @@ _SIGNAL_DISTORTION = {
     "bert": 0.02, "gpt2": 0.015, "lbm": 0.01, "pot3d": 0.01,
 }
 
+# Memory-bound fraction μ per application — the DVFS slowdown shape
+# (Afzal et al.: memory-bound kernels barely slow when the core clock
+# drops, so their energy sweet spot sits well below base clock; compute-
+# bound kernels slow ~linearly and stay at base).  Bandwidth-dominated
+# stencil/streaming codes sit high, dense-GEMM training moderate,
+# latency/compute-bound kernels low.
+MEMORY_BOUND_MU: Dict[str, float] = {
+    "conjugateGradient": 0.55, "MonteCarlo": 0.10, "simpleP2P": 0.70,
+    "streamOrderedAllocation": 0.72, "lbm": 0.75, "cloverleaf": 0.62,
+    "tealeaf": 0.65, "minisweep": 0.35, "pot3d": 0.68, "miniweather": 0.58,
+    "resnet101": 0.30, "resnet152": 0.28, "resnet50": 0.33,
+    "vgg19": 0.26, "vgg16": 0.27, "bert": 0.22, "gpt2": 0.20,
+}
 
-def build_system(system: str) -> Dict[str, JobProfile]:
-    """JobProfile table for one platform."""
+
+def freq_curves(
+    system: str, app: str, levels: int
+) -> Tuple[Dict[int, float], Dict[int, float]]:
+    """Analytic DVFS sweet-spot curves for one (chip, app) pair: per-level
+    (runtime multiplier, power multiplier) dicts, level 0 = base clock.
+
+    Runtime stretches only in the compute-bound fraction (sub-linear
+    slowdown), power falls with the chip's cubic-ish dynamic curve above a
+    static floor — so E(f) = T(f)·P(f) has an interior minimum for
+    memory-bound apps.  ``levels`` is clamped to the chip's ratio ladder.
+    """
+    from repro.roofline.hw import CHIPS
+
+    chip = CHIPS[system.lower()]
+    mu = MEMORY_BOUND_MU.get(app, 0.3)
+    n = max(1, min(int(levels), len(chip.freq_ratios)))
+    ft = {f: chip.freq_time_multiplier(f, mu) for f in range(n)}
+    fp = {f: chip.freq_power_multiplier(f) for f in range(n)}
+    return ft, fp
+
+
+def build_system(system: str, freq_levels: int = 1) -> Dict[str, JobProfile]:
+    """JobProfile table for one platform.  ``freq_levels=1`` (default)
+    builds the count-only profiles — bit-identical to the pre-DVFS tables;
+    ``freq_levels>1`` attaches the analytic sweet-spot frequency curves
+    (clamped to the chip's ratio ladder)."""
     system = system.lower()
     t_scale, p_scale, _idle = SYSTEM_SCALE[system]
     out: Dict[str, JobProfile] = {}
@@ -188,6 +226,10 @@ def build_system(system: str) -> Dict[str, JobProfile]:
             base = 1.0 / (runtime[g] * g)
             draw = float(np.clip(rng.standard_normal(), -1.5, 1.5))
             util[g] = base * (1.0 + dis * draw)
+        ft: Dict[int, float] = {}
+        fp: Dict[int, float] = {}
+        if freq_levels > 1:
+            ft, fp = freq_curves(system, app, freq_levels)
         out[app] = JobProfile(
             name=app,
             runtime=runtime,
@@ -195,6 +237,8 @@ def build_system(system: str) -> Dict[str, JobProfile]:
             dram_util=util,
             profiling_energy=PROFILING_KJ[app] * 1e3 * p_scale,
             profiling_time=60.0,
+            freq_time=ft,
+            freq_power=fp,
         )
     return out
 

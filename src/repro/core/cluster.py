@@ -38,21 +38,22 @@ forecast-free substrate.
 Routing is array-backed (ISSUE 3): ``ClusterState`` holds preallocated
 numpy columns — per-node outstanding-work sums updated in place on
 launch/complete, and per-(node, app) feasibility/best-mode tables built
-once per run — so the built-in dispatchers route through
-``route_indexed`` without materializing a ``NodeStatus`` list per arrival.
-Custom dispatchers that only implement ``route(arr, statuses)`` still
-work: the legacy list is built on demand, its ``outstanding_s`` read from
-the same ``ClusterState``, so both protocols see identical load values
-and make identical choices (locked in tests/test_decision_cache.py).
-``simulate(fast_status=False)`` switches to the PR-2 per-arrival Python
-scan — kept as the reference implementation and the benchmark baseline
-(benchmarks/bench_cluster_throughput.py).
+once per run — so dispatchers route through ``route_indexed`` without
+materializing a per-arrival status list.  ``route_indexed(ai, state,
+now) -> node index`` is the *only* dispatch protocol: the legacy
+``route(arr, statuses)`` list protocol (deprecated since PR 4) has been
+removed, and a dispatcher without ``route_indexed`` is rejected at run
+construction with a ``TypeError``.  ``simulate(fast_status=False)``
+keeps the PR-2 per-arrival Python scan as the *reference outstanding
+computation* — the same ``route_indexed`` dispatch over a state view
+whose drain proxy is recomputed by scanning every node (the benchmark
+baseline in benchmarks/bench_cluster_throughput.py, parity-locked in
+tests/test_decision_cache.py).
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -60,7 +61,7 @@ from repro.core.arrivals import Arrival
 from repro.core.events import EVT_ARRIVAL, ElasticConfig, EventLoop
 from repro.core.forecast import ForecastConfig, ForecastPlane
 from repro.core.simulator import Node, NodeSim, _auto_max_events
-from repro.core.types import ClusterResult, JobProfile, NodeView, RunningJob
+from repro.core.types import ClusterResult, JobProfile, RunningJob
 from repro.roofline.hw import ChipSpec
 
 
@@ -78,25 +79,10 @@ class NodeSpec:
         return self.chip.power_idle
 
 
-@dataclass
-class NodeStatus:
-    """Dispatcher-visible snapshot of one node at an arrival event."""
-
-    spec: NodeSpec
-    view: NodeView
-    backlog: List[str]  # waiting instance names
-    truth: Dict[str, JobProfile]  # app-keyed ground truth on this hardware
-    outstanding_s: float  # committed busy unit-seconds / units (drain proxy)
-
-    def fits(self, app: str) -> bool:
-        prof = self.truth.get(app)
-        return prof is not None and min(prof.feasible_counts) <= self.spec.units
-
-
 class ClusterState:
     """Preallocated array view of the cluster for vectorized dispatch.
 
-    Replaces the per-arrival ``statuses()`` list-of-dataclass scan: the
+    Replaces the PR-2 per-arrival list-of-dataclass status scan: the
     drain proxy becomes three per-node accumulators updated in place —
 
         outstanding·units = max(Σ end·g − now·Σ g, 0) + Σ waiting min-work
@@ -132,8 +118,19 @@ class ClusterState:
                 if not counts:
                     continue
                 self.fits[i, j] = True
-                self.min_unit_s[i, j] = min(prof.runtime[g] * g for g in counts)
-                e, t = min((prof.energy(g), prof.runtime[g]) for g in counts)
+                # best modes over the joint (count, frequency) set; a
+                # single-level profile reduces every *_at(g, 0) to the
+                # count-only curves, so these cells are bit-identical to
+                # the pre-DVFS tables there
+                levels = prof.freq_levels
+                self.min_unit_s[i, j] = min(
+                    prof.runtime_at(g, f) * g for g in counts for f in levels
+                )
+                e, t = min(
+                    (prof.energy_at(g, f), prof.runtime_at(g, f))
+                    for g in counts
+                    for f in levels
+                )
                 self.e_best[i, j], self.t_best[i, j] = e, t
         # in-place accumulators (launch/complete update these, not scans);
         # the counts let drained accumulators snap back to exactly 0.0 —
@@ -187,9 +184,9 @@ class ClusterState:
 
 # ---------------------------------------------------------------------------
 # Dispatchers (cluster level — defer launch decisions to the node policy).
-# ``route_indexed(ai, state, now) -> node index`` is the array fast path
-# (returns -1 when no node fits); ``route(arr, statuses)`` is the legacy
-# list protocol, kept for custom dispatchers and the PR-2 baseline mode.
+# ``route_indexed(ai, state, now) -> node index`` is the single dispatch
+# protocol (returns -1 when no node fits).  The legacy ``route(arr,
+# statuses)`` list protocol was removed after its PR-4 deprecation cycle.
 # ---------------------------------------------------------------------------
 
 
@@ -215,15 +212,6 @@ class RoundRobinDispatcher:
         self._i = (self._i + k + 1) % n
         return int(order[k])
 
-    def route(self, arr: Arrival, statuses: Sequence[NodeStatus]) -> str:
-        n = len(statuses)
-        for k in range(n):
-            st = statuses[(self._i + k) % n]
-            if st.fits(arr.app):
-                self._i = (self._i + k + 1) % n
-                return st.spec.name
-        raise ValueError(f"no node can fit any feasible mode of {arr.app}")
-
 
 class LeastLoadedDispatcher:
     """Route to the feasible node with the shallowest committed backlog."""
@@ -235,18 +223,6 @@ class LeastLoadedDispatcher:
         load = np.where(state.fits[:, ai], state.outstanding(now), np.inf)
         i = int(np.argmin(load))  # ties -> lowest index, like the list scan
         return i if state.fits[i, ai] else -1
-
-    def route(self, arr: Arrival, statuses: Sequence[NodeStatus]) -> str:
-        best = None
-        for i, st in enumerate(statuses):
-            if not st.fits(arr.app):
-                continue
-            key = (st.outstanding_s, i)
-            if best is None or key < best[0]:
-                best = (key, st.spec.name)
-        if best is None:
-            raise ValueError(f"no node can fit any feasible mode of {arr.app}")
-        return best[1]
 
 
 class EnergyAwareDispatcher:
@@ -294,34 +270,6 @@ class EnergyAwareDispatcher:
         )
         i = int(np.argmin(score))  # ties -> lowest index, like the list scan
         return i if state.fits[i, ai] else -1
-
-    def route(self, arr: Arrival, statuses: Sequence[NodeStatus]) -> str:
-        if self._plane is not None:
-            # the legacy list protocol carries no ClusterState/clock, so
-            # it cannot see the plane; routing plane-blind while
-            # migration/resize stay forecasted would silently measure as
-            # a half-forecast run
-            raise RuntimeError(
-                f"{self.name()} dispatcher with an attached forecast plane "
-                "requires the vectorized dispatch path; run with "
-                "fast_status=True (the default)"
-            )
-        best = None
-        for i, st in enumerate(statuses):
-            if not st.fits(arr.app):
-                continue
-            prof = st.truth[arr.app]
-            counts = [g for g in prof.feasible_counts if g <= st.spec.units]
-            e_best, t_best = min(
-                ((prof.energy(g), prof.runtime[g]) for g in counts)
-            )
-            score = e_best * (st.outstanding_s + t_best) / t_best
-            key = (score, i)
-            if best is None or key < best[0]:
-                best = (key, st.spec.name)
-        if best is None:
-            raise ValueError(f"no node can fit any feasible mode of {arr.app}")
-        return best[1]
 
 
 class PredictiveDispatcher(EnergyAwareDispatcher):
@@ -436,15 +384,6 @@ class Cluster:
             self.dispatcher.reset()  # stateful dispatchers restart per run
         if len({a.name for a in stream}) != len(stream):
             raise ValueError("arrival instance names must be unique")
-        if not hasattr(self.dispatcher, "route_indexed"):
-            warnings.warn(
-                f"dispatcher {self.dispatcher.name()!r} only implements the "
-                "legacy route(arr, statuses) protocol; implement "
-                "route_indexed(ai, state, now) for vectorized dispatch "
-                "(the legacy list protocol will eventually be removed)",
-                DeprecationWarning,
-                stacklevel=2,
-            )
         run = ClusterRun(
             self,
             apps=sorted({a.app for a in stream}),
@@ -463,6 +402,39 @@ class Cluster:
         return run.finalize(charge_profiling=charge_profiling)
 
 
+class _ReferenceStateView:
+    """``ClusterState`` proxy whose drain proxy is the PR-2 reference
+    scan: ``outstanding(now)`` recomputes every node's committed busy
+    unit-seconds by walking its running/waiting lists against the global
+    clock instead of reading the in-place accumulators.  Dispatchers see
+    the same ``route_indexed`` state interface either way — this is what
+    ``simulate(fast_status=False)`` routes through (the benchmark
+    baseline in benchmarks/bench_cluster_throughput.py, parity-locked in
+    tests/test_decision_cache.py); every other attribute delegates to
+    the real state."""
+
+    def __init__(self, run: "ClusterRun"):
+        self._run = run
+
+    def __getattr__(self, name):
+        return getattr(self._run.state, name)
+
+    def outstanding(self, now: float) -> np.ndarray:
+        run = self._run
+        out = np.zeros(len(run.specs))
+        for i, s in enumerate(run.specs):
+            sim = run.sims[s.name]
+            # PR-2 reference scan: remaining work vs the *global* clock —
+            # a node's local sim.t lags until its next event, which
+            # would inflate its load
+            mins = run.min_unit_s[s.name]
+            out[i] = (
+                sum(max(r.end - now, 0.0) * r.g for r in sim.running)
+                + sum(mins[run.app_of[j]] for j in sim.waiting)
+            ) / s.units
+        return out
+
+
 class ClusterRun:
     """One live cluster simulation, exposed as a steppable backend.
 
@@ -473,7 +445,7 @@ class ClusterRun:
     live event heap, ``run_until``/``run_to_completion`` advance the
     clock, ``cancel`` drops never-launched jobs, and every lifecycle
     transition is reported through the optional ``on_transition`` callback
-    — ``(event, t, job, node, g, end)`` with event in {queued, launch,
+    — ``(event, t, job, node, g, end, f)`` with event in {queued, launch,
     done, ckpt, requeue, migrate} — which the daemon journals.
 
     The app universe (``apps``) is fixed at construction: the
@@ -498,6 +470,12 @@ class ClusterRun:
         self.cluster = cluster
         self.specs = cluster.specs
         self.dispatcher = cluster.dispatcher
+        if not hasattr(self.dispatcher, "route_indexed"):
+            raise TypeError(
+                f"dispatcher {self.dispatcher.name()!r} must implement "
+                "route_indexed(ai, state, now); the legacy route(arr, "
+                "statuses) protocol (deprecated since PR 4) has been removed"
+            )
         self.elastic = elastic
         self.fast_status = fast_status
         self.on_transition = on_transition
@@ -562,8 +540,10 @@ class ClusterRun:
                 elastic=elastic,
             )
 
-        self._vector_route = fast_status and hasattr(
-            self.dispatcher, "route_indexed"
+        # fast_status=False swaps in the reference-scan drain proxy; the
+        # dispatch protocol itself is route_indexed either way
+        self._dispatch_state = (
+            state if fast_status else _ReferenceStateView(self)
         )
         self._cancelled: set = set()  # cancelled before their ARRIVAL popped
         self._routed: set = set()  # instances that reached a node queue
@@ -659,53 +639,29 @@ class ClusterRun:
     # -- dispatch + substrate hooks ------------------------------------------
 
     def _emit(
-        self, event: str, t: float, job: str, node: str, g: int, end: float
+        self,
+        event: str,
+        t: float,
+        job: str,
+        node: str,
+        g: int,
+        end: float,
+        f: int = 0,
     ) -> None:
         if self.on_transition is not None:
-            self.on_transition(event, t, job, node, g, end)
-
-    def statuses(self, now: float) -> List[NodeStatus]:
-        outs = self.state.outstanding(now) if self.fast_status else None
-        out = []
-        for i, s in enumerate(self.specs):
-            sim = self.sims[s.name]
-            if self.fast_status:
-                outstanding = float(outs[i])
-            else:
-                # PR-2 reference scan: remaining work vs the *global*
-                # clock — a node's local sim.t lags until its next
-                # event, which would inflate its load
-                mins = self.min_unit_s[s.name]
-                outstanding = (
-                    sum(max(r.end - now, 0.0) * r.g for r in sim.running)
-                    + sum(mins[self.app_of[j]] for j in sim.waiting)
-                ) / s.units
-            out.append(
-                NodeStatus(
-                    spec=s,
-                    view=sim.node_view(),
-                    backlog=list(sim.waiting),
-                    truth=self.app_truth[s.name],
-                    outstanding_s=outstanding,
-                )
-            )
-        return out
+            self.on_transition(event, t, job, node, g, end, f)
 
     def route(self, arr: Arrival, t: float) -> Optional[str]:
         if arr.name in self._cancelled:
             return None  # cancelled between submit and its ARRIVAL pop
         state = self.state
         ai = state.app_index[arr.app]
-        if self._vector_route:
-            ni = self.dispatcher.route_indexed(ai, state, t)
-            if ni < 0:
-                raise ValueError(
-                    f"no node can fit any feasible mode of {arr.app}"
-                )
-            nm = state.names[ni]
-        else:
-            nm = self.dispatcher.route(arr, self.statuses(t))
-            ni = state.index[nm]
+        ni = self.dispatcher.route_indexed(ai, self._dispatch_state, t)
+        if ni < 0:
+            raise ValueError(
+                f"no node can fit any feasible mode of {arr.app}"
+            )
+        nm = state.names[ni]
         # fits == profile present with a mode that fits the node
         if not state.fits[ni, ai]:
             raise ValueError(
@@ -729,14 +685,20 @@ class ClusterRun:
         )
         if self.plane is not None:
             self.plane.on_launch(nm, rj)
-        self._emit("launch", rj.start, rj.job, nm, rj.g, rj.end)
+        self._emit("launch", rj.start, rj.job, nm, rj.g, rj.end, rj.f)
 
     def _on_complete(self, nm: str, rj: RunningJob) -> None:
         self.state.on_complete(self.state.index[nm], rj.end, rj.g)
         if self.plane is not None:
             self.plane.on_complete(nm, rj)
         self._emit(
-            "ckpt" if rj.preempted else "done", rj.end, rj.job, nm, rj.g, rj.end
+            "ckpt" if rj.preempted else "done",
+            rj.end,
+            rj.job,
+            nm,
+            rj.g,
+            rj.end,
+            rj.f,
         )
 
     def _on_requeue(self, nm: str, job: str) -> None:

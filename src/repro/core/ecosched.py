@@ -69,6 +69,7 @@ class EcoSched:
         *,
         lam: float = 0.5,
         tau: float = 0.35,
+        lam_f: float = 0.0,
         window: Optional[int] = None,
         exact_limit: int = 50_000,
         beam: int = 64,
@@ -81,6 +82,11 @@ class EcoSched:
         self.perf_model = perf_model
         self.lam = lam
         self.tau = tau
+        # DVFS conservatism weight: λ_f penalizes (or, negative, rewards)
+        # the mean frequency level of an action.  0.0 — the default — makes
+        # the joint argmin purely energy-driven and keeps single-frequency
+        # scores bit-identical to the count-only scorer.
+        self.lam_f = lam_f
         self.window = window
         self.exact_limit = exact_limit
         self.beam = beam
@@ -88,8 +94,8 @@ class EcoSched:
         self.engine = engine
         self._cache = DecisionCache() if (cache and engine != "python") else None
         self._filtered: Dict[str, JobSpec] = {}  # job -> τ-filtered spec
-        # launch-level memo: decision state -> [(window position, g)].  The
-        # chosen action is a pure function of the (name-free) decision
+        # launch-level memo: decision state -> [(window position, g, f)].
+        # The chosen action is a pure function of the (name-free) decision
         # state, so a repeated state skips scoring outright and only
         # rebinds window positions to the current job names.
         self._launch_memo: "OrderedDict[Tuple, Tuple]" = OrderedDict()
@@ -180,14 +186,16 @@ class EcoSched:
                 self._launch_memo.move_to_end(key)
                 self.launch_hits += 1
                 if order is None:
-                    pairs = [(c, g) for c, g in hit]
+                    pairs = [(c, g, f) for c, g, f in hit]
                 else:
-                    pairs = [(order[c], g) for c, g in hit]
+                    pairs = [(order[c], g, f) for c, g, f in hit]
                 # normalize equal-g ties to current-window position so a
                 # permuted hit replays the order a cold evaluation of THIS
                 # window would produce (cache purity)
                 pairs.sort(key=lambda pg: (-pg[1], pg[0]))
-                return [Launch(job=specs[p].name, g=g) for p, g in pairs]
+                return [
+                    Launch(job=specs[p].name, g=g, f=f) for p, g, f in pairs
+                ]
         if self.engine == "python":
             action = self._best_python(specs, view)
         elif self.engine == "jax":
@@ -201,7 +209,7 @@ class EcoSched:
         # rebound to a permuted window
         pos_of = {id(sp): i for i, sp in enumerate(specs)}
         pairs = sorted(
-            ((pos_of[id(sp)], m.g) for sp, m in action),
+            ((pos_of[id(sp)], m.g, m.f) for sp, m in action),
             key=lambda pg: (-pg[1], pg[0]),
         )
         if key is not None:
@@ -211,17 +219,18 @@ class EcoSched:
                 inv = [0] * len(specs)
                 for c, p in enumerate(order):
                     inv[p] = c
-                stored = tuple((inv[p], g) for p, g in pairs)
+                stored = tuple((inv[p], g, f) for p, g, f in pairs)
             self._launch_memo[key] = stored
             if len(self._launch_memo) > 8192:
                 self._launch_memo.popitem(last=False)
-        return [Launch(job=specs[p].name, g=g) for p, g in pairs]
+        return [Launch(job=specs[p].name, g=g, f=f) for p, g, f in pairs]
 
     def _enumerate(self, specs, view: NodeView):
         # free_map is only read (mask/bitmask replay) — no defensive copy
         return enumerate_scored(
             specs, view, view.free_map,
-            lam=self.lam, exact_limit=self.exact_limit, beam=self.beam,
+            lam=self.lam, lam_f=self.lam_f,
+            exact_limit=self.exact_limit, beam=self.beam,
             cache=self._cache,
         )
 
@@ -248,10 +257,14 @@ class EcoSched:
         from repro.kernels.score_reduce import score_reduce
 
         dev, g, n = batch.padded_cols()
+        # the f plane only shifts scores through λ_f; skip materializing it
+        # when the weight is 0 (the kernel zero-fills it internally)
+        fcol = batch.padded_f() if self.lam_f else None
         bias = (self.lookahead * batch.spread) if self.lookahead else None
         _, i = score_reduce(
             dev, g, n,
-            lam=self.lam, g_free=view.free_units, M=view.total_units, bias=bias,
+            lam=self.lam, g_free=view.free_units, M=view.total_units,
+            f=fcol, lam_f=self.lam_f, bias=bias,
         )
         if i < 0:  # unreachable: the empty action is always feasible
             return ()
@@ -259,7 +272,7 @@ class EcoSched:
             _, j = score_reduce(
                 dev, g, n,
                 lam=self.lam, g_free=view.free_units, M=view.total_units,
-                bias=bias, mask=batch.n_jobs > 0,
+                f=fcol, lam_f=self.lam_f, bias=bias, mask=batch.n_jobs > 0,
             )
             if j >= 0:
                 i = j
@@ -268,7 +281,8 @@ class EcoSched:
     def _best_python(self, specs, view: NodeView):
         scored = enumerate_actions(
             specs, view, list(view.free_map),
-            lam=self.lam, exact_limit=self.exact_limit, beam=self.beam,
+            lam=self.lam, lam_f=self.lam_f,
+            exact_limit=self.exact_limit, beam=self.beam,
         )
         if self.lookahead:
             scored = [(s + self._lookahead_penalty(a, view), a) for s, a in scored]
@@ -284,14 +298,15 @@ class EcoSched:
     def propose_resizes(self, view: NodeView, *, frac_of, cfg) -> List[Launch]:
         """Substrate hook (``repro.core.events``): on a COMPLETE event,
         propose preempt-and-relaunch of one running job at a now-better
-        unit count.
+        (count, frequency) mode — a pure frequency retune rides the same
+        checkpoint/relaunch mechanics as a count resize.
 
-        Each running job's alternative counts are scored through the same
-        batched Eq. (1) path as launch decisions — a single-job window on
-        the hypothetical node state with the job's units freed — with
+        Each running job's alternative (g, f) modes are scored through the
+        same batched Eq. (1) path as launch decisions — a single-job window
+        on the hypothetical node state with the job's units freed — with
         ``cfg.switch_cost`` added to every candidate that changes the
-        count, so a resize must beat staying put by the switch margin on
-        the same scale the scheduler already optimizes.  On top of the
+        joint mode, so a resize must beat staying put by the switch margin
+        on the same scale the scheduler already optimizes.  On top of the
         score win, the predicted remaining-time saving (via the Phase-I
         t_norm ratio) must exceed the checkpoint + restart overhead by
         ``cfg.min_gain_s`` — energy-better-but-slower moves never degrade
@@ -323,21 +338,23 @@ class EcoSched:
             spec = self._spec(rj.job)
             if len(spec.modes) < 2:
                 continue
-            cur = next((m for m in spec.modes if m.g == rj.g), None)
-            if cur is None:
-                continue  # current count fell to the τ-filter; leave it be
+            try:
+                cur = spec.mode(rj.g, rj.f)
+            except KeyError:
+                continue  # current mode fell to the τ-filter; leave it be
             hypo = self._freed_view(view, rj)
-            g_new = self._best_resize_count(spec, hypo, switch_cost, rj.g)
-            if g_new is None or g_new == rj.g:
+            new = self._best_resize_mode(spec, hypo, switch_cost, rj.g, rj.f)
+            if new is None or new == (rj.g, rj.f):
                 continue
+            g_new, f_new = new
             pred_rem = overhead + useful_rem * (
-                spec.mode(g_new).t_norm / cur.t_norm
+                spec.mode(g_new, f_new).t_norm / cur.t_norm
             )
             gain = rem_t - pred_rem
             if gain <= cfg.min_gain_s:
                 continue
             if best is None or gain > best[0]:
-                best = (gain, Launch(job=rj.job, g=g_new))
+                best = (gain, Launch(job=rj.job, g=g_new, f=f_new))
         return [best[1]] if best is not None else []
 
     @staticmethod
@@ -360,41 +377,54 @@ class EcoSched:
             domain_jobs=occ,
         )
 
-    def _best_resize_count(
-        self, spec: JobSpec, hypo: NodeView, switch_cost: float, g_cur: int
-    ) -> Optional[int]:
-        """Best count for one job on the freed node state, switch-cost
-        biased, scored through whichever backend the policy runs on."""
+    def _best_resize_mode(
+        self,
+        spec: JobSpec,
+        hypo: NodeView,
+        switch_cost: float,
+        g_cur: int,
+        f_cur: int,
+    ) -> Optional[Tuple[int, int]]:
+        """Best (count, frequency) mode for one job on the freed node
+        state, switch-cost biased, scored through whichever backend the
+        policy runs on.  "Staying put" is joint-mode identity: a candidate
+        at the same count but a different DVFS level pays the switch cost
+        too (it still costs a checkpoint/relaunch)."""
         if self.engine == "python":
             scored = enumerate_actions(
                 [spec], hypo, list(hypo.free_map),
-                lam=self.lam, exact_limit=self.exact_limit, beam=self.beam,
+                lam=self.lam, lam_f=self.lam_f,
+                exact_limit=self.exact_limit, beam=self.beam,
             )
             best = None
             for s, a in scored:
                 if not a:
                     continue
-                g = a[0][1].g
-                key = (s + (switch_cost if g != g_cur else 0.0), -g)
+                m = a[0][1]
+                moved = m.g != g_cur or m.f != f_cur
+                key = (s + (switch_cost if moved else 0.0), -m.g)
                 if best is None or key < best[0]:
-                    best = (key, g)
+                    best = (key, (m.g, m.f))
             return best[1] if best else None
         try:
             batch = self._enumerate([spec], hypo)
         except OverflowError:  # pragma: no cover - single-job windows are tiny
             return None
-        # single-job window: each non-empty row's total_g IS its count
-        bias = np.where(
-            (batch.total_g != g_cur) & (batch.n_jobs > 0), switch_cost, 0.0
+        # single-job window: each non-empty row's total_g IS its count and
+        # slot 0 of the padded f plane IS its frequency level
+        moved = (batch.total_g != g_cur) | (
+            batch.padded_f()[:, 0].astype(np.int64) != f_cur
         )
+        bias = np.where(moved & (batch.n_jobs > 0), switch_cost, 0.0)
         if self.engine == "jax":
             from repro.kernels.score_reduce import score_reduce
 
             dev, g, n = batch.padded_cols()
+            fcol = batch.padded_f() if self.lam_f else None
             _, i = score_reduce(
                 dev, g, n,
                 lam=self.lam, g_free=hypo.free_units, M=hypo.total_units,
-                bias=bias, mask=batch.n_jobs > 0,
+                f=fcol, lam_f=self.lam_f, bias=bias, mask=batch.n_jobs > 0,
             )
             if i < 0:
                 return None
@@ -403,7 +433,10 @@ class EcoSched:
             if i is None:
                 return None
         action = batch.action(int(i))
-        return action[0][1].g if action else None
+        if not action:
+            return None
+        m = action[0][1]
+        return (m.g, m.f)
 
     # -- beyond-paper: completion-alignment lookahead ----------------------
     def _lookahead_penalty(self, action, view: NodeView) -> float:

@@ -183,11 +183,13 @@ class _SpecTable:
         mm = max(n_modes) if J else 0
         self.max_modes = mm
         self.mode_g = np.zeros((J, mm), dtype=np.int64)
+        self.mode_f = np.zeros((J, mm), dtype=np.int64)  # DVFS level per mode
         self.mode_dev = np.zeros((J, mm))  # e_norm - 1
         self.mode_load = np.zeros((J, mm))  # t_norm * g (lookahead proxy)
         for j, s in enumerate(self.specs):
             for k, m in enumerate(s.modes):
                 self.mode_g[j, k] = m.g
+                self.mode_f[j, k] = m.f
                 self.mode_dev[j, k] = m.e_norm - 1.0
                 self.mode_load[j, k] = m.t_norm * m.g
         # flattened (job, mode) pairs, job-major/mode-minor — the reference
@@ -199,6 +201,7 @@ class _SpecTable:
             else np.zeros(0, dtype=np.int64)
         )
         self.pair_g = self.mode_g[self.pair_job, self.pair_mode]
+        self.pair_f = self.mode_f[self.pair_job, self.pair_mode]
         self.pair_dev = self.mode_dev[self.pair_job, self.pair_mode]
         self.pair_load = self.mode_load[self.pair_job, self.pair_mode]
         self._cand: Dict[int, Tuple[np.ndarray, ...]] = {}
@@ -366,9 +369,12 @@ class DecisionCache:
 
     @staticmethod
     def structure_of(spec: JobSpec) -> Tuple:
-        """Name-free mode structure: the (g, t_norm, e_norm) tuples —
-        everything Eq. (1) scoring and placement can observe of a job."""
-        return tuple((m.g, m.t_norm, m.e_norm) for m in spec.modes)
+        """Name-free mode structure: the (g, f, t_norm, e_norm) tuples —
+        everything Eq. (1) scoring and placement can observe of a job.
+        ``f`` distinguishes same-count modes at different DVFS levels; it
+        is constant 0 on single-frequency specs, so interning behavior
+        there is unchanged."""
+        return tuple((m.g, m.f, m.t_norm, m.e_norm) for m in spec.modes)
 
     def spec_token(self, spec: JobSpec) -> int:
         entry = self._spec_tokens.get(id(spec))
@@ -507,6 +513,7 @@ class ScoredBatch:
         self._blocks = blocks
         self._table = table
         self._padded: Optional[Tuple[np.ndarray, ...]] = None
+        self._padded_f: Optional[np.ndarray] = None
         self._best_memo: Dict[Tuple[float, bool], Optional[int]] = {}
         self._spread: Optional[np.ndarray] = None
         self._n_jobs: Optional[np.ndarray] = None
@@ -568,6 +575,26 @@ class ScoredBatch:
             self._padded = (dev, g, self.n_jobs.astype(np.float32))
         return self._padded
 
+    def padded_f(self) -> np.ndarray:
+        """Per-candidate slot frequency levels, (B, S) float32 zero-padded —
+        the kernel backend's frequency axis.  Kept separate from
+        ``padded_cols`` (same memoize-through-``rebind`` behavior) so the
+        single-frequency fast path never materializes an all-zero plane
+        twice."""
+        if self._padded_f is None:
+            B = len(self.scores)
+            S = max((b[3].shape[1] for b in self._blocks), default=0) or 1
+            fcol = np.zeros((B, S), dtype=np.float32)
+            for start, blk in zip(self._starts, self._blocks):
+                _, _, _, job_mat, mode_mat = blk
+                s = job_mat.shape[1]
+                if s == 0:
+                    continue
+                rows = slice(start, start + len(blk[0]))
+                fcol[rows, :s] = self._table.mode_f[job_mat, mode_mat]
+            self._padded_f = fcol
+        return self._padded_f
+
     def action(self, i: int) -> Tuple[Tuple[JobSpec, ModeEstimate], ...]:
         b = int(np.searchsorted(self._starts, i, side="right")) - 1
         row = i - self._starts[b]
@@ -618,6 +645,7 @@ def enumerate_scored(
     free_map: List[bool],
     *,
     lam: float,
+    lam_f: float = 0.0,
     exact_limit: int = 50_000,
     beam: int = 64,
     cache: Optional[DecisionCache] = None,
@@ -632,7 +660,8 @@ def enumerate_scored(
     M = view.total_units
     if k_avail <= 0 or not specs:
         return ScoredBatch(
-            specs, [_empty_block(score((), g_free=g_free, M=M, lam=lam))]
+            specs,
+            [_empty_block(score((), g_free=g_free, M=M, lam=lam, lam_f=lam_f))],
         )
     dkey = None
     order = None
@@ -644,7 +673,7 @@ def enumerate_scored(
         # order-canonical decision key: permuted windows share one entry
         order = cache.canonical_order(wkey)
         ckey = wkey if order is None else tuple(wkey[i] for i in order)
-        dkey = (ckey, mask, occ, g_free, M, lam, exact_limit, beam)
+        dkey = (ckey, mask, occ, g_free, M, lam, lam_f, exact_limit, beam)
         hit = cache.decision(dkey)
         if hit is not None:
             batch, st_order = hit
@@ -656,12 +685,16 @@ def enumerate_scored(
     else:
         table = _SpecTable(specs)
         oracle = PlacementOracle(free_map, view.domains, view.domain_jobs)
-    empty = _empty_block(score((), g_free=g_free, M=M, lam=lam))
+    empty = _empty_block(score((), g_free=g_free, M=M, lam=lam, lam_f=lam_f))
     est = table.space_estimate(k_avail, exact_limit)
     if est <= exact_limit:
-        blocks = _exact_blocks(table, oracle, k_avail, g_free, M, lam, reuse=warm)
+        blocks = _exact_blocks(
+            table, oracle, k_avail, g_free, M, lam, lam_f=lam_f, reuse=warm
+        )
     else:
-        blocks = _beam_blocks(table, oracle, k_avail, g_free, M, lam, beam)
+        blocks = _beam_blocks(
+            table, oracle, k_avail, g_free, M, lam, beam, lam_f=lam_f
+        )
     batch = ScoredBatch(specs, [empty] + blocks, table=table)
     if dkey is not None:
         cache.store_decision(dkey, (batch, order))
@@ -734,6 +767,7 @@ def _exact_blocks(
     M: int,
     lam: float,
     *,
+    lam_f: float = 0.0,
     reuse: bool = False,
 ) -> List[_Block]:
     """Exact path.  ``reuse=False`` (one-shot tables) streams the candidate
@@ -744,7 +778,9 @@ def _exact_blocks(
     capacity mask, the (memoized) placement verdicts and two vector
     expressions remain.  Both produce the identical block row order."""
     if reuse:
-        return _exact_blocks_cached(table, oracle, k_avail, g_free, M, lam)
+        return _exact_blocks_cached(
+            table, oracle, k_avail, g_free, M, lam, lam_f=lam_f
+        )
     J = len(table.specs)
     mm = table.max_modes
     out: List[_Block] = []
@@ -782,6 +818,10 @@ def _exact_blocks(
         loads = table.mode_load[job_mat, mode_mat]
         tot = counts.sum(axis=1)
         scores = dev.sum(axis=1) / s + lam * ((g_free - tot) / M)
+        if lam_f:
+            scores = scores + lam_f * (
+                table.mode_f[job_mat, mode_mat].sum(axis=1) / s
+            )
         spread = _spread(loads.max(axis=1), loads.min(axis=1), s)
         out.append((scores, tot, spread, job_mat, mode_mat))
     return out
@@ -794,6 +834,8 @@ def _exact_blocks_cached(
     g_free: int,
     M: int,
     lam: float,
+    *,
+    lam_f: float = 0.0,
 ) -> List[_Block]:
     J = len(table.specs)
     out: List[_Block] = []
@@ -813,6 +855,10 @@ def _exact_blocks_cached(
         job_mat, mode_mat = job_mat[keep], mode_mat[keep]
         tot_k = tot[keep]
         scores = dev_sum[keep] / s + lam * ((g_free - tot_k) / M)
+        if lam_f:
+            scores = scores + lam_f * (
+                table.mode_f[job_mat, mode_mat].sum(axis=1) / s
+            )
         spread = _spread(lmax[keep], lmin[keep], s)
         out.append((scores, tot_k, spread, job_mat, mode_mat))
     return out
@@ -826,21 +872,28 @@ def _beam_blocks(
     M: int,
     lam: float,
     beam: int,
+    *,
+    lam_f: float = 0.0,
 ) -> List[_Block]:
     J = len(table.specs)
     out: List[_Block] = []
-    # A partial action's identity is its {(job, g)} set.  Encode each
-    # member as job·(maxg+1)+g and the whole set as a base-B little-endian
-    # integer over members in ascending order — order-free and injective,
-    # so set equality becomes int64 equality and the dedupe vectorizes.
+    # A partial action's identity is its {(job, g, f)} set.  Encode each
+    # member as (job·(maxg+1)+g)·(maxf+1)+f and the whole set as a base-B
+    # little-endian integer over members in ascending order — order-free
+    # and injective, so set equality becomes int64 equality and the dedupe
+    # vectorizes.  Single-frequency windows have maxf = 0, collapsing the
+    # member code and base to the historical job·(maxg+1)+g encoding.
     maxg = int(table.pair_g.max()) if len(table.pair_g) else 0
-    B = J * (maxg + 1) + 1
+    maxf = int(table.pair_f.max()) if len(table.pair_f) else 0
+    B = J * (maxg + 1) * (maxf + 1) + 1
     if float(B) ** k_avail >= 2**62:  # never at pod scale (17·17 base, K=4)
         raise OverflowError(
             f"action-set key space {B}^{k_avail} overflows int64; "
             "use the pure-Python reference path for windows this large"
         )
-    pair_code = table.pair_job * (maxg + 1) + table.pair_g
+    pair_code = (
+        table.pair_job * (maxg + 1) + table.pair_g
+    ) * (maxf + 1) + table.pair_f
     # frontier = the single empty partial
     f_jobs = np.zeros((1, 0), dtype=np.int64)
     f_modes = np.zeros((1, 0), dtype=np.int64)
@@ -848,6 +901,7 @@ def _beam_blocks(
     f_codes = np.zeros((1, 0), dtype=np.int64)  # member codes, ascending
     f_dev = np.zeros(1)  # running Σ(e_norm-1) in extension order
     f_g = np.zeros(1, dtype=np.int64)
+    f_fs = np.zeros(1, dtype=np.int64)  # running Σ frequency level
     f_lmax = np.full(1, -np.inf)
     f_lmin = np.full(1, np.inf)
     f_used = np.zeros((1, J), dtype=bool)
@@ -881,6 +935,8 @@ def _beam_blocks(
         scores = (f_dev[fi] + table.pair_dev[pi]) / size + lam * (
             (g_free - (f_g[fi] + pg[pi])) / M
         )
+        if lam_f:
+            scores = scores + lam_f * ((f_fs[fi] + table.pair_f[pi]) / size)
         # stable top-k by score: ties keep generation order, like the
         # reference's stable list sort
         sel = np.argsort(scores, kind="stable")[:beam]
@@ -896,6 +952,7 @@ def _beam_blocks(
         )
         f_dev = f_dev[fsel] + table.pair_dev[psel]
         f_g = f_g[fsel] + pg[psel]
+        f_fs = f_fs[fsel] + table.pair_f[psel]
         f_lmax = np.maximum(f_lmax[fsel], table.pair_load[psel])
         f_lmin = np.minimum(f_lmin[fsel], table.pair_load[psel])
         f_used = f_used[fsel].copy()

@@ -91,7 +91,7 @@ class ElasticConfig:
     migration_delay: float = 10.0  # s a migrating job spends in transit
     min_gain_s: float = 60.0  # predicted saving must exceed this
     max_preempts: int = 2  # checkpoints per job (bounds churn)
-    switch_cost: float = 0.05  # Eq. (1) bias on resize candidates != current g
+    switch_cost: float = 0.05  # Eq. (1) bias on resize candidates != (g, f)
     # resize-order ablation (ISSUE 5 satellite): evaluate resizes *before*
     # the backfill scheduling pass on COMPLETE events, so a running job's
     # upsize gets first claim on freed units instead of backfill soaking

@@ -147,9 +147,13 @@ class RefinedPerfModel:
         self.weight = weight
         self.version = 0
         self._truth = getattr(base, "truth", None)
-        # profile-key -> {g: (n_t, mean_t, n_p, mean_p)} — power keeps its
-        # own count so t-only observations never dilute the power mean
-        self._obs: Dict[object, Dict[int, Tuple[int, float, int, float]]] = {}
+        # profile-key -> {(g, f): (n_t, mean_t, n_p, mean_p)} — keyed on
+        # the joint (count, frequency-level) mode so DVFS runs refine each
+        # operating point separately; power keeps its own count so t-only
+        # observations never dilute the power mean
+        self._obs: Dict[
+            object, Dict[Tuple[int, int], Tuple[int, float, int, float]]
+        ] = {}
         self._ver_of: Dict[object, int] = {}
         self._profiles: List[object] = []  # pin ids while keyed on them
         self._spec_cache: Dict[str, Tuple[int, JobSpec]] = {}
@@ -161,22 +165,25 @@ class RefinedPerfModel:
                 return id(prof)
         return job
 
-    def observe(self, job: str, g: int, t_obs: float, p_obs: float = 0.0) -> None:
+    def observe(
+        self, job: str, g: int, t_obs: float, p_obs: float = 0.0, f: int = 0
+    ) -> None:
         """One completed segment: solo-equivalent full runtime ``t_obs``
-        seconds at count ``g`` (and the observed busy power, if known)."""
+        seconds at count ``g`` and frequency level ``f`` (and the observed
+        busy power, if known)."""
         if t_obs <= 0.0:
             return
         key = self._key(job)
         if key not in self._obs and self._truth is not None:
             self._profiles.append(self._truth.get(job))
         d = self._obs.setdefault(key, {})
-        n, mt, np_, mp = d.get(g, (0, 0.0, 0, 0.0))
+        n, mt, np_, mp = d.get((g, f), (0, 0.0, 0, 0.0))
         n += 1
         mt += (t_obs - mt) / n
         if p_obs > 0.0:
             np_ += 1
             mp += (p_obs - mp) / np_
-        d[g] = (n, mt, np_, mp)
+        d[(g, f)] = (n, mt, np_, mp)
         self._ver_of[key] = self._ver_of.get(key, 0) + 1
         self.version += 1
 
@@ -190,23 +197,24 @@ class RefinedPerfModel:
         hit = self._spec_cache.get(job)
         if hit is not None and hit[0] == ver:
             return hit[1]
-        prior_t = {m.g: m.t_norm for m in base_spec.modes}
-        prior_p = {m.g: m.p_bar for m in base_spec.modes}
-        seen = [(g, n, mt) for g, (n, mt, _, _) in obs.items() if g in prior_t]
+        prior_t = {(m.g, m.f): m.t_norm for m in base_spec.modes}
+        prior_p = {(m.g, m.f): m.p_bar for m in base_spec.modes}
+        seen = [(k, n, mt) for k, (n, mt, _, _) in obs.items() if k in prior_t]
         if not seen:
-            return base_spec  # observed counts all fell outside the prior
+            return base_spec  # observed modes all fell outside the prior
         # anchor the relative prior to the observed absolute scale
         n_tot = sum(n for _, n, _ in seen)
-        s = sum(n * (mt / prior_t[g]) for g, n, mt in seen) / n_tot
+        s = sum(n * (mt / prior_t[k]) for k, n, mt in seen) / n_tot
         w = self.weight
         t_post, p_post = {}, {}
         for m in base_spec.modes:
-            n, mt, np_, mp = obs.get(m.g, (0, 0.0, 0, 0.0))
-            t_post[m.g] = (w * s * prior_t[m.g] + n * mt) / (w + n)
-            p_post[m.g] = (
-                (w * prior_p[m.g] + np_ * mp) / (w + np_)
+            k = (m.g, m.f)
+            n, mt, np_, mp = obs.get(k, (0, 0.0, 0, 0.0))
+            t_post[k] = (w * s * prior_t[k] + n * mt) / (w + n)
+            p_post[k] = (
+                (w * prior_p[k] + np_ * mp) / (w + np_)
                 if np_
-                else prior_p[m.g]
+                else prior_p[k]
             )
         spec = _mk_spec(job, t_post, p_post)
         self._spec_cache[job] = (ver, spec)
@@ -219,13 +227,14 @@ class RefinedPerfModel:
 
     def posterior_curves(
         self, prof, *, limit: Optional[int] = None
-    ) -> Optional[Dict[int, Tuple[float, float]]]:
-        """Posterior (runtime s, busy power W) per feasible count for the
-        app whose ground-truth profile is ``prof``, blending the caller's
-        absolute prior (the profile itself) toward this node's observed
-        segments with the usual ``(w·prior + n·obs) / (w + n)`` shrink.
-        ``None`` when this node has no observations of the app — callers
-        keep their static tables.  This is the dispatch-table feed
+    ) -> Optional[Dict[Tuple[int, int], Tuple[float, float]]]:
+        """Posterior (runtime s, busy power W) per feasible (count,
+        frequency-level) mode for the app whose ground-truth profile is
+        ``prof``, blending the caller's absolute prior (the profile
+        itself) toward this node's observed segments with the usual
+        ``(w·prior + n·obs) / (w + n)`` shrink.  ``None`` when this node
+        has no observations of the app — callers keep their static
+        tables.  This is the dispatch-table feed
         (``ForecastPlane.dispatch_tables``): unlike ``spec()``, the prior
         here is the dispatcher's calibrated truth, not the Phase-I noisy
         estimate, because that is the table being corrected."""
@@ -233,18 +242,19 @@ class RefinedPerfModel:
         if not obs:
             return None
         w = self.weight
-        out: Dict[int, Tuple[float, float]] = {}
+        out: Dict[Tuple[int, int], Tuple[float, float]] = {}
         for g in prof.feasible_counts:
             if limit is not None and g > limit:
                 continue
-            n, mt, np_, mp = obs.get(g, (0, 0.0, 0, 0.0))
-            t_post = (w * prof.runtime[g] + n * mt) / (w + n)
-            p_post = (
-                (w * prof.busy_power[g] + np_ * mp) / (w + np_)
-                if np_
-                else prof.busy_power[g]
-            )
-            out[g] = (t_post, p_post)
+            for f in prof.freq_levels:
+                n, mt, np_, mp = obs.get((g, f), (0, 0.0, 0, 0.0))
+                t_post = (w * prof.runtime_at(g, f) + n * mt) / (w + n)
+                p_post = (
+                    (w * prof.power_at(g, f) + np_ * mp) / (w + np_)
+                    if np_
+                    else prof.power_at(g, f)
+                )
+                out[(g, f)] = (t_post, p_post)
         return out or None
 
 
@@ -395,7 +405,7 @@ class ForecastPlane:
         if frac <= 1e-9 or useful <= 0.0:
             return
         solo = useful / frac / max(rj.factor, 1.0)
-        model.observe(rj.job, rj.g, solo, rj.power)
+        model.observe(rj.job, rj.g, solo, rj.power, rj.f)
         self.refinements += 1
 
     # -- forecasts -----------------------------------------------------------

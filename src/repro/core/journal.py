@@ -25,7 +25,11 @@ Record kinds (the ``"k"`` field):
   adv — an advance request: ``until`` (float, or None = drain) (write-ahead).
   evt — one lifecycle transition from the event substrate:
         ``e`` in {queued, launch, done, ckpt, requeue, migrate}, plus
-        ``t, job, node, g, end`` (write-behind).
+        ``t, job, node, g, end, f`` (write-behind).
+
+Version history: v1 journaled transitions without the DVFS frequency
+level; v2 adds the ``f`` field to ``evt`` records so crash recovery
+replays chosen (count, frequency) actions bit-identically.
 """
 from __future__ import annotations
 
@@ -33,7 +37,7 @@ import json
 import os
 from typing import Dict, List, Optional
 
-JOURNAL_VERSION = 1
+JOURNAL_VERSION = 2
 
 
 class JournalError(RuntimeError):

@@ -45,20 +45,35 @@ def _stable_seed(*parts) -> int:
 
 
 
-def _mk_spec(name: str, t_hat: Dict[int, float], p_hat: Dict[int, float]) -> JobSpec:
+def _key_gf(k) -> tuple:
+    """Normalize a mode key: a bare count ``g`` means (g, base clock);
+    a ``(g, f)`` tuple names the joint (count, frequency-level) mode."""
+    if isinstance(k, tuple):
+        return int(k[0]), int(k[1])
+    return int(k), 0
+
+
+def _mk_spec(name: str, t_hat: Dict, p_hat: Dict) -> JobSpec:
+    """Shared spec constructor over the joint mode set.  Keys are bare
+    counts (single-frequency — today's behavior, bit-identical) or
+    ``(g, f)`` tuples; sorted key order puts modes in (g, f) order, which
+    collapses to the historical g order when every key is a bare count."""
     t_min = min(t_hat.values())
-    e_raw = {g: p_hat[g] * (t_hat[g] / t_min) for g in t_hat}
+    e_raw = {k: p_hat[k] * (t_hat[k] / t_min) for k in t_hat}
     e_min = min(e_raw.values())
-    modes = tuple(
-        ModeEstimate(
-            g=g,
-            t_norm=t_hat[g] / t_min,
-            p_bar=p_hat[g],
-            e_norm=e_raw[g] / e_min,
+    modes = []
+    for k in sorted(t_hat):
+        g, f = _key_gf(k)
+        modes.append(
+            ModeEstimate(
+                g=g,
+                t_norm=t_hat[k] / t_min,
+                p_bar=p_hat[k],
+                e_norm=e_raw[k] / e_min,
+                f=f,
+            )
         )
-        for g in sorted(t_hat)
-    )
-    return JobSpec(name=name, modes=modes)
+    return JobSpec(name=name, modes=tuple(modes))
 
 
 class DomainInterferenceModel:
@@ -168,6 +183,8 @@ class ProfiledPerfModel:
 
     def _estimate(self, prof: JobProfile, rng):
         t_hat, p_hat = {}, {}
+        levels = prof.freq_levels
+        multi = len(levels) > 1
         for g in prof.feasible_counts:
             util = prof.dram_util.get(g)
             if util:
@@ -176,10 +193,19 @@ class ProfiledPerfModel:
             else:
                 t_rel = prof.runtime[g]  # degenerate fallback (tests)
             eps = 1.0 + (rng.normal(0.0, self.noise) if rng is not None else 0.0)
-            t_hat[g] = t_rel * max(eps, 0.5)
-            p_hat[g] = prof.busy_power[g] * (
-                1.0 + (rng.normal(0.0, self.noise / 2) if rng is not None else 0.0)
+            p_eps = 1.0 + (
+                rng.normal(0.0, self.noise / 2) if rng is not None else 0.0
             )
+            if not multi:
+                t_hat[g] = t_rel * max(eps, 0.5)
+                p_hat[g] = prof.busy_power[g] * p_eps
+            else:
+                # the frequency response is the chip's analytic curve, so
+                # one profiling draw per count fans out across its levels
+                # (the noise models count-profiling error, not DVFS)
+                for f in levels:
+                    t_hat[(g, f)] = t_rel * prof.freq_time[f] * max(eps, 0.5)
+                    p_hat[(g, f)] = prof.power_at(g, f) * p_eps
         return t_hat, p_hat
 
     def profiling_energy(self, job: str) -> float:
@@ -196,9 +222,22 @@ class OraclePerfModel:
     def spec(self, job: str) -> JobSpec:
         if job not in self._cache:
             prof = self.truth[job]
-            self._cache[job] = _mk_spec(
-                job, dict(prof.runtime), dict(prof.busy_power)
-            )
+            if len(prof.freq_levels) > 1:
+                t_hat = {
+                    (g, f): prof.runtime_at(g, f)
+                    for g in prof.feasible_counts
+                    for f in prof.freq_levels
+                }
+                p_hat = {
+                    (g, f): prof.power_at(g, f)
+                    for g in prof.feasible_counts
+                    for f in prof.freq_levels
+                }
+                self._cache[job] = _mk_spec(job, t_hat, p_hat)
+            else:
+                self._cache[job] = _mk_spec(
+                    job, dict(prof.runtime), dict(prof.busy_power)
+                )
         return self._cache[job]
 
     def profiling_energy(self, job: str) -> float:

@@ -34,8 +34,32 @@ def idle_term(total_g: int, g_free: int, M: int) -> float:
     return (g_free - total_g) / M
 
 
+def freq_term(modes: Sequence[ModeEstimate]) -> float:
+    """Mean frequency level of the action (0 for the empty action and for
+    every base-clock action) — the DVFS conservatism axis."""
+    if not modes:
+        return 0.0
+    return sum(m.f for m in modes) / len(modes)
+
+
 def score(
-    modes: Sequence[ModeEstimate], *, g_free: int, M: int, lam: float
+    modes: Sequence[ModeEstimate],
+    *,
+    g_free: int,
+    M: int,
+    lam: float,
+    lam_f: float = 0.0,
 ) -> float:
+    """Eq. (1) score, generalized to (count × frequency) actions.
+
+    ``lam_f`` penalizes (positive) or rewards (negative) downclocked modes
+    by the action's mean frequency level; at the default 0.0 the joint
+    argmin is decided purely by the energy/idle terms and every score is
+    bit-identical to the count-only scorer (modes all carry ``f = 0``
+    there, so the term vanishes either way).
+    """
     total_g = sum(m.g for m in modes)
-    return r_energy(modes) + lam * idle_term(total_g, g_free, M)
+    s = r_energy(modes) + lam * idle_term(total_g, g_free, M)
+    if lam_f:
+        s += lam_f * freq_term(modes)
+    return s

@@ -246,10 +246,17 @@ class ClusterBackend:
         )
 
     def _emit(
-        self, event: str, t: float, job: str, node: str, g: int, end: float
+        self,
+        event: str,
+        t: float,
+        job: str,
+        node: str,
+        g: int,
+        end: float,
+        f: int = 0,
     ) -> None:
         if self._cb is not None:
-            self._cb(event, t, job, node, g, end)
+            self._cb(event, t, job, node, g, end, f)
 
     def set_transition_cb(self, cb: Optional[Callable]) -> None:
         self._cb = cb
@@ -262,7 +269,19 @@ class ClusterBackend:
         nodes = ",".join(
             f"{s.name}:{s.units}u{s.domains}d" for s in self.run.specs
         )
-        return f"cluster[{nodes}]/{self.run.dispatcher.name()}"
+        # DVFS-enabled systems journal a distinct identity: a journal
+        # written with frequency ladders must not replay through a
+        # base-clock-only backend (and vice versa)
+        levels = max(
+            (
+                len(prof.freq_levels)
+                for truth in self.run.app_truth.values()
+                for prof in truth.values()
+            ),
+            default=1,
+        )
+        suffix = f"/f{levels}" if levels > 1 else ""
+        return f"cluster[{nodes}]/{self.run.dispatcher.name()}{suffix}"
 
     def can_run(self, app: str) -> bool:
         ai = self.run.state.app_index.get(app)
@@ -354,11 +373,18 @@ class SchedulerService:
     # -- lifecycle transitions (substrate feed) ------------------------------
 
     def _on_transition(
-        self, event: str, t: float, job: str, node: str, g: int, end: float
+        self,
+        event: str,
+        t: float,
+        job: str,
+        node: str,
+        g: int,
+        end: float,
+        f: int = 0,
     ) -> None:
         rec = {
             "k": "evt", "e": event, "t": t, "job": job,
-            "node": node, "g": int(g), "end": end,
+            "node": node, "g": int(g), "end": end, "f": int(f),
         }
         if self._replaying:
             self._regen.append(rec)
@@ -500,7 +526,7 @@ class SchedulerService:
             "total_energy": res.total_energy,
             "edp": res.edp,
             "records": [
-                [r.job, r.node, r.g, r.start, r.end] for r in res.records
+                [r.job, r.node, r.g, r.f, r.start, r.end] for r in res.records
             ],
         }
 

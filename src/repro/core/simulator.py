@@ -67,6 +67,7 @@ class MigrantState:
     segment: int = 0
     preempts: int = 0  # checkpoint budget already spent (max_preempts)
     last_g: Optional[int] = None  # last launched count (resize history)
+    last_f: Optional[int] = None  # last launched frequency level (retunes)
     queued_at: float = 0.0  # when it last entered a waiting queue (donor)
 
 
@@ -116,7 +117,9 @@ class NodeSim:
         self.migrations_in = 0
         self.migrations_out = 0
         self.resize_history: Dict[str, List[Tuple[float, int, int]]] = {}
+        self.freq_history: Dict[str, List[Tuple[float, int, int]]] = {}
         self._last_g: Dict[str, int] = {}
+        self._last_f: Dict[str, int] = {}
         self._segments: Dict[str, int] = {}
         self._queued_at: Dict[str, float] = {}  # last (re-)enqueue time
 
@@ -171,6 +174,8 @@ class NodeSim:
             prof = self.truth[ln.job]
             if ln.g not in prof.runtime:
                 raise ValueError(f"{ln.job}: infeasible unit count {ln.g}")
+            if ln.f not in prof.freq_levels:
+                raise ValueError(f"{ln.job}: infeasible frequency level {ln.f}")
             if self.placement.occupied_domains() >= self.node.domains:
                 raise ValueError(
                     f"{self.policy.name()} exceeded domain cap K={self.node.domains}"
@@ -206,16 +211,25 @@ class NodeSim:
                     self.resize_history.setdefault(ln.job, []).append(
                         (self.t, last, ln.g)
                     )
+                last_f = self._last_f.get(ln.job)
+                if last_f is not None and last_f != ln.f and last == ln.g:
+                    # pure frequency retune: the relaunch kept the count
+                    # and only moved the DVFS level
+                    self.freq_history.setdefault(ln.job, []).append(
+                        (self.t, last_f, ln.f)
+                    )
                 self._last_g[ln.job] = ln.g
+                self._last_f[ln.job] = ln.f
+            solo = prof.runtime_at(ln.g, ln.f)
             if frac0 == 0.0 and restart == 0.0:
-                dur = prof.runtime[ln.g] * factor
+                dur = solo * factor
             else:
-                dur = restart + (1.0 - frac0) * prof.runtime[ln.g] * factor
-            power = prof.busy_power[ln.g]
+                dur = restart + (1.0 - frac0) * solo * factor
+            power = prof.power_at(ln.g, ln.f)
             rj = RunningJob(
                 job=ln.job, g=ln.g, units=units, domain=domain,
-                start=self.t, end=self.t + dur, power=power, factor=factor,
-                frac0=frac0, restart=restart,
+                start=self.t, end=self.t + dur, power=power, f=ln.f,
+                factor=factor, frac0=frac0, restart=restart,
             )
             self.waiting.remove(ln.job)
             self.running.append(rj)
@@ -228,6 +242,7 @@ class NodeSim:
                 domain=domain,
                 segment=segment,
                 queued=self._queued_at.get(ln.job, self.arrival_of.get(ln.job, 0.0)),
+                f=ln.f,
             )
             rj.record = rec
             self.records.append(rec)
@@ -309,6 +324,7 @@ class NodeSim:
             segment=self._segments.pop(job, 0),
             preempts=self.preempt_count.pop(job, 0),
             last_g=self._last_g.pop(job, None),
+            last_f=self._last_f.pop(job, None),
             queued_at=self._queued_at.pop(job, arrival),
         )
         self.migrations_out += 1
@@ -334,6 +350,8 @@ class NodeSim:
             self.preempt_count[job] = state.preempts
         if state.last_g is not None:
             self._last_g[job] = state.last_g
+        if state.last_f is not None:
+            self._last_f[job] = state.last_f
         self.waiting.append(job)
         self.migrations_in += 1
 
@@ -360,6 +378,7 @@ class NodeSim:
             migrations_out=self.migrations_out,
             ckpt_energy=self.ckpt_energy,
             resize_history=self.resize_history,
+            freq_history=self.freq_history,
         )
 
 

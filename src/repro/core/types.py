@@ -16,7 +16,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 @dataclass(frozen=True)
 class JobProfile:
-    """Ground truth for one application (simulator/oracle only)."""
+    """Ground truth for one application (simulator/oracle only).
+
+    ``freq_time``/``freq_power`` are per-frequency-level multipliers on the
+    count-indexed runtime/power curves (DVFS third axis): level 0 is the
+    base clock and both multipliers are 1.0 there.  Empty dicts mean the
+    profile has a single frequency level — every ``*_at(g, f=0)`` helper
+    collapses to the count-only curves, which keeps pre-DVFS behavior
+    bit-identical.
+    """
 
     name: str
     runtime: Dict[int, float]  # unit-count g -> solo execution seconds
@@ -24,10 +32,16 @@ class JobProfile:
     dram_util: Dict[int, float] = field(default_factory=dict)  # profiling signal
     profiling_energy: float = 0.0  # one-time Phase-I cost (J)
     profiling_time: float = 0.0  # s of debug-node time (amortization analysis)
+    freq_time: Dict[int, float] = field(default_factory=dict)  # f -> t multiplier
+    freq_power: Dict[int, float] = field(default_factory=dict)  # f -> P multiplier
 
     @property
     def feasible_counts(self) -> Tuple[int, ...]:
         return tuple(sorted(self.runtime))
+
+    @property
+    def freq_levels(self) -> Tuple[int, ...]:
+        return tuple(sorted(self.freq_time)) if self.freq_time else (0,)
 
     def optimal_count(self, limit: Optional[int] = None) -> int:
         """Performance-optimal count, optionally capped at ``limit`` units
@@ -40,15 +54,34 @@ class JobProfile:
     def energy(self, g: int) -> float:
         return self.runtime[g] * self.busy_power[g]
 
+    def runtime_at(self, g: int, f: int = 0) -> float:
+        """Solo runtime at count ``g``, frequency level ``f``."""
+        t = self.runtime[g]
+        return t if not self.freq_time else t * self.freq_time[f]
+
+    def power_at(self, g: int, f: int = 0) -> float:
+        """Busy power at count ``g``, frequency level ``f``."""
+        p = self.busy_power[g]
+        return p if not self.freq_power else p * self.freq_power[f]
+
+    def energy_at(self, g: int, f: int = 0) -> float:
+        return self.runtime_at(g, f) * self.power_at(g, f)
+
 
 @dataclass(frozen=True)
 class ModeEstimate:
-    """Phase-I output for one (job, unit-count) mode."""
+    """Phase-I output for one (job, unit-count, frequency-level) mode.
+
+    ``f`` is the DVFS frequency level (0 = base clock); profiles with a
+    single level only ever produce ``f=0`` modes, which is the pre-DVFS
+    mode set exactly.
+    """
 
     g: int
     t_norm: float  # predicted runtime / predicted best runtime (>= 1)
     p_bar: float  # measured average busy power (W)
     e_norm: float  # normalized energy proxy Ẽ = P̄ · T̂norm, min-normalized
+    f: int = 0  # DVFS frequency level (0 = base clock)
 
 
 @dataclass(frozen=True)
@@ -58,19 +91,28 @@ class JobSpec:
     name: str
     modes: Tuple[ModeEstimate, ...]  # τ-filtered happens in the policy
 
-    def mode(self, g: int) -> ModeEstimate:
-        for m in self.modes:
-            if m.g == g:
-                return m
-        raise KeyError((self.name, g))
+    def __post_init__(self):
+        # precomputed (g, f) -> mode map: mode() sits on the resize hot
+        # path and the joint DVFS mode set is 4-8x the count-only one
+        object.__setattr__(
+            self, "_by_gf", {(m.g, m.f): m for m in self.modes}
+        )
+
+    def mode(self, g: int, f: int = 0) -> ModeEstimate:
+        m = self._by_gf.get((g, f))
+        if m is None:
+            raise KeyError((self.name, g, f))
+        return m
 
 
 @dataclass(frozen=True)
 class Launch:
-    """One scheduling decision element: run ``job`` on ``g`` units."""
+    """One scheduling decision element: run ``job`` on ``g`` units at
+    frequency level ``f``."""
 
     job: str
     g: int
+    f: int = 0
 
 
 @dataclass
@@ -82,6 +124,7 @@ class RunningJob:
     start: float
     end: float
     power: float
+    f: int = 0  # DVFS frequency level the segment runs at
     factor: float = 1.0  # interference slowdown applied to this segment
     # elastic substrate state (repro.core.events); inert for static runs
     frac0: float = 0.0  # work fraction completed before this segment
@@ -140,6 +183,7 @@ class JobRecord:
     kind: str = "run"  # "run" = ran to completion, "ckpt" = checkpointed
     ckpt_energy: float = 0.0  # checkpoint-write energy inside busy_energy
     queued: float = 0.0  # when this segment entered a waiting queue
+    f: int = 0  # DVFS frequency level the segment ran at
 
     @property
     def wait(self) -> float:
@@ -168,6 +212,9 @@ class ScheduleResult:
     resize_history: Dict[str, List[Tuple[float, int, int]]] = field(
         default_factory=dict
     )  # job -> [(relaunch t, g_old, g_new)]
+    freq_history: Dict[str, List[Tuple[float, int, int]]] = field(
+        default_factory=dict
+    )  # job -> [(relaunch t, f_old, f_new)] — DVFS retunes across segments
     # forecast-plane observability (repro.core.forecast; empty when the
     # run had no plane): final rate estimates, burst-gate state/flips,
     # migrations vetoed by the risk penalty, posterior feed counts
@@ -180,6 +227,11 @@ class ScheduleResult:
     @property
     def resizes(self) -> int:
         return sum(len(v) for v in self.resize_history.values())
+
+    @property
+    def retunes(self) -> int:
+        """Pure frequency retunes (relaunches that changed f, not g)."""
+        return sum(len(v) for v in self.freq_history.values())
 
     @property
     def edp(self) -> float:
@@ -246,6 +298,10 @@ class ClusterResult:
     @property
     def resizes(self) -> int:
         return sum(r.resizes for r in self.per_node.values())
+
+    @property
+    def retunes(self) -> int:
+        return sum(r.retunes for r in self.per_node.values())
 
     @property
     def ckpt_energy(self) -> float:

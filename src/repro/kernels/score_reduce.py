@@ -1,15 +1,18 @@
 """Batched Eq. (1) score reduction + masked argmin (JAX/Pallas).
 
 The engine's candidate set for one scheduling event is a padded matrix of
-per-slot energy deviations and unit counts (``ScoredBatch.padded_cols``).
-Scoring it is a row reduction
+per-slot energy deviations, unit counts (``ScoredBatch.padded_cols``) and
+DVFS frequency levels (``ScoredBatch.padded_f``).  Scoring it is a row
+reduction
 
-    S[b] = Σ_s dev[b, s] / max(n[b], 1) + λ·(G_free − Σ_s g[b, s]) / M + bias[b]
+    S[b] = Σ_s dev[b, s] / max(n[b], 1) + λ·(G_free − Σ_s g[b, s]) / M
+           + λ_f·Σ_s f[b, s] / max(n[b], 1) + bias[b]
 
 followed by a masked argmin under EcoSched's tie-break (lowest score, then
 largest total unit count, then earliest row).  At pod scale the candidate
-space exceeds 10^5 rows per event; this module reduces it in one fused
-kernel instead of a chain of numpy temporaries.
+space exceeds 10^5 rows per event — and the joint (count × frequency) mode
+set is 4–8× larger still; this module reduces it in one fused kernel
+instead of a chain of numpy temporaries.
 
 Backend selection mirrors ``kernels/ops.py``: on TPU the Pallas kernel
 runs compiled (Mosaic); everywhere else ``REPRO_KERNELS`` picks
@@ -20,8 +23,9 @@ a per-block (min score, best count, best row) triple, and a tiny jnp
 combine selects the global winner across blocks — so the reduction never
 materializes on the host.
 
-λ, G_free and M ride in an SMEM params row (traced, not static): sweeping
-node fill levels does not recompile.  Rows are padded to a power of two
+λ, G_free, M and λ_f ride in an SMEM params row (traced, not static):
+sweeping node fill levels or frequency-conservatism weights does not
+recompile.  Rows are padded to a power of two
 and slots to a multiple of 8, so the jit cache stays small.  Scores are
 float32 — parity vs the float64 numpy engine is ≤1e-6 over seeded random
 windows (tests/test_score_reduce.py).
@@ -50,12 +54,17 @@ def _backend_mode() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def _row_scores(dev, g, n, bias, mask, lam, g_free, M):
-    """(B, 1) masked Eq. (1) scores from (B, S)/(B, 1) blocks."""
+def _row_scores(dev, g, f, n, bias, mask, lam, g_free, M, lam_f):
+    """(B, 1) masked Eq. (1) scores from (B, S)/(B, 1) blocks.  The
+    frequency term is λ_f·mean(f); at λ_f = 0 (or an all-zero f plane —
+    single-frequency windows) it contributes exactly +0.0, keeping scores
+    bit-identical to the count-only kernel."""
     tot = jnp.sum(g, axis=1, keepdims=True)
+    n_eff = jnp.maximum(n, 1.0)
     s = (
-        jnp.sum(dev, axis=1, keepdims=True) / jnp.maximum(n, 1.0)
+        jnp.sum(dev, axis=1, keepdims=True) / n_eff
         + lam * (g_free - tot) / M
+        + lam_f * jnp.sum(f, axis=1, keepdims=True) / n_eff
         + bias
     )
     return jnp.where(mask > 0, s, jnp.inf), tot
@@ -72,14 +81,15 @@ def _pick(scores, tot, idx, idx_cap):
     return m, t_best, i
 
 
-def _kernel(params_ref, dev_ref, g_ref, n_ref, bias_ref, mask_ref,
+def _kernel(params_ref, dev_ref, g_ref, f_ref, n_ref, bias_ref, mask_ref,
             scores_ref, bmin_ref, btot_ref, bidx_ref):
     lam = params_ref[0, 0]
     g_free = params_ref[0, 1]
     M = params_ref[0, 2]
+    lam_f = params_ref[0, 3]
     scores, tot = _row_scores(
-        dev_ref[:], g_ref[:], n_ref[:], bias_ref[:], mask_ref[:],
-        lam, g_free, M,
+        dev_ref[:], g_ref[:], f_ref[:], n_ref[:], bias_ref[:], mask_ref[:],
+        lam, g_free, M, lam_f,
     )
     scores_ref[:] = scores
     bb = scores.shape[0]
@@ -102,11 +112,12 @@ def _combine(scores, bmin, btot, bidx, b_pad):
 
 
 @functools.partial(jax.jit, static_argnames=("mode",))
-def _reduce_jit(params, dev, g, n, bias, mask, *, mode: str):
+def _reduce_jit(params, dev, g, f, n, bias, mask, *, mode: str):
     b_pad, s_pad = dev.shape
     if mode == "ref":
         scores, tot = _row_scores(
-            dev, g, n, bias, mask, params[0, 0], params[0, 1], params[0, 2]
+            dev, g, f, n, bias, mask,
+            params[0, 0], params[0, 1], params[0, 2], params[0, 3],
         )
         ridx = jax.lax.broadcasted_iota(jnp.int32, (b_pad, 1), 0)
         m, t_best, i = _pick(scores, tot, ridx, jnp.int32(b_pad))
@@ -115,13 +126,13 @@ def _reduce_jit(params, dev, g, n, bias, mask, *, mode: str):
     nb = b_pad // _BLOCK_B
     col = pl.BlockSpec((_BLOCK_B, 1), lambda i: (i, 0))
     blk = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    plane = pl.BlockSpec((_BLOCK_B, s_pad), lambda i: (i, 0))
     scores, bmin, btot, bidx = pl.pallas_call(
         _kernel,
         grid=(nb,),
         in_specs=[
-            pl.BlockSpec((1, 3), lambda i: (0, 0), memory_space=pltpu.SMEM),
-            pl.BlockSpec((_BLOCK_B, s_pad), lambda i: (i, 0)),
-            pl.BlockSpec((_BLOCK_B, s_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0), memory_space=pltpu.SMEM),
+            plane, plane, plane,
             col, col, col,
         ],
         out_specs=[col, blk, blk, blk],
@@ -132,7 +143,7 @@ def _reduce_jit(params, dev, g, n, bias, mask, *, mode: str):
             jax.ShapeDtypeStruct((nb, 1), jnp.int32),
         ],
         interpret=(mode == "interpret"),
-    )(params, dev, g, n, bias, mask)
+    )(params, dev, g, f, n, bias, mask)
     return _combine(scores, bmin, btot, bidx, b_pad)
 
 
@@ -150,6 +161,8 @@ def score_reduce(
     lam: float,
     g_free: int,
     M: int,
+    f: Optional[np.ndarray] = None,
+    lam_f: float = 0.0,
     bias: Optional[np.ndarray] = None,
     mask: Optional[np.ndarray] = None,
     mode: Optional[str] = None,
@@ -157,18 +170,23 @@ def score_reduce(
     """Scores + tie-broken argmin for a (B, S) candidate block.
 
     ``dev``/``g`` are per-slot deviation/count columns (zero-padded past
-    each action's size ``n``); ``bias`` is an optional per-candidate
-    additive term (EcoSched's lookahead spread penalty); ``mask`` marks
-    feasible candidates (default: all).  Returns (float32 scores (B,),
-    winning row index) — the index is -1 when no candidate is feasible.
+    each action's size ``n``); ``f`` is the optional per-slot DVFS
+    frequency-level plane (``None`` ≡ all base clock) weighted by
+    ``lam_f``; ``bias`` is an optional per-candidate additive term
+    (EcoSched's lookahead spread penalty); ``mask`` marks feasible
+    candidates (default: all).  Returns (float32 scores (B,), winning row
+    index) — the index is -1 when no candidate is feasible.
     """
     B, S = dev.shape
     b_pad = max(_BLOCK_B, 1 << max(B - 1, 0).bit_length())
     s_pad = max(_SLOT_PAD, -(-S // _SLOT_PAD) * _SLOT_PAD)
     dev_p = np.zeros((b_pad, s_pad), dtype=np.float32)
     g_p = np.zeros((b_pad, s_pad), dtype=np.float32)
+    f_p = np.zeros((b_pad, s_pad), dtype=np.float32)
     dev_p[:B, :S] = dev
     g_p[:B, :S] = g
+    if f is not None:
+        f_p[:B, :S] = f
     n_p = _pad_rows(np.asarray(n, dtype=np.float32).reshape(B, 1), b_pad)
     bias_p = (
         _pad_rows(np.asarray(bias, dtype=np.float32).reshape(B, 1), b_pad)
@@ -181,8 +199,9 @@ def score_reduce(
         else np.ones((B, 1), dtype=np.float32)
     )
     mask_p = _pad_rows(feasible, b_pad)  # padding rows stay masked out
-    params = np.array([[lam, g_free, M]], dtype=np.float32)
+    params = np.array([[lam, g_free, M, lam_f]], dtype=np.float32)
     scores, best = _reduce_jit(
-        params, dev_p, g_p, n_p, bias_p, mask_p, mode=mode or _backend_mode()
+        params, dev_p, g_p, f_p, n_p, bias_p, mask_p,
+        mode=mode or _backend_mode(),
     )
     return np.asarray(scores)[:B], int(best)

@@ -335,25 +335,21 @@ def test_fast_status_matches_reference_scan(dispatcher):
     assert r_fast.makespan == r_ref.makespan
 
 
-def test_legacy_route_protocol_still_works():
-    """A custom dispatcher implementing only route(arr, statuses) gets the
-    on-demand NodeStatus list (outstanding_s read from ClusterState)."""
+def test_legacy_route_protocol_hard_errors():
+    """A custom dispatcher implementing only route(arr, statuses) is
+    rejected at run construction — the PR-4 deprecation graduated to a
+    TypeError and the list-protocol shim was deleted."""
 
     class PickFirst:
         def name(self):
             return "first"
 
         def route(self, arr, statuses):
-            seen = [st.outstanding_s for st in statuses]
-            assert all(o >= 0.0 for o in seen)
-            for st in statuses:
-                if st.fits(arr.app):
-                    return st.spec.name
-            raise ValueError("no node")
+            raise AssertionError("the legacy protocol must never be invoked")
 
     stream = poisson_stream(C.APP_ORDER, rate=1 / 900, n=8, seed=2)
-    res = hetero_cluster(PickFirst()).simulate(stream)
-    assert sorted(r.job for r in res.records) == sorted(a.name for a in stream)
+    with pytest.raises(TypeError, match="route_indexed"):
+        hetero_cluster(PickFirst()).simulate(stream)
 
 
 def test_cluster_state_outstanding_matches_scan():

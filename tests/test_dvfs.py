@@ -1,0 +1,323 @@
+"""DVFS third axis (ISSUE 7): joint (count × frequency) decision stack.
+
+Locks the tentpole invariants: the analytic sweet-spot frequency model
+(hw.py / calibration.py), single-frequency collapse (``freq_levels=1``
+systems are bit-identical to the count-only stack on every scoring
+engine), joint argmin == brute-force scan over the (g, f) candidate
+space, and the Pallas score-reduce kernel's frequency axis vs numpy.
+"""
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EcoSched,
+    Node,
+    ProfiledPerfModel,
+    simulate,
+)
+from repro.core import calibration as C
+from repro.core.actions import enumerate_actions
+from repro.core.engine import enumerate_scored
+from repro.core.events import ElasticConfig
+from repro.core.score import score
+from repro.core.types import JobSpec, ModeEstimate, NodeView
+from repro.kernels.score_reduce import score_reduce
+from repro.roofline.hw import A100, CHIPS, H100, V100
+
+LAM, TAU, NOISE, SEED = 0.35, 0.45, 0.02, 1
+
+
+def fp_records(records):
+    s = ";".join(
+        f"{r.job}|{r.g}|{r.start!r}|{r.end!r}|{r.node}|{r.domain}"
+        for r in records
+    )
+    return hashlib.md5(s.encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Sweet-spot frequency model (roofline/hw.py + calibration.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chip", [H100, A100, V100], ids=lambda c: c.name)
+def test_chip_frequency_ladder_sane(chip):
+    ratios = chip.freq_ratios
+    assert ratios[0] == 1.0
+    assert all(b < a for a, b in zip(ratios, ratios[1:]))  # monotone down
+    assert 0.0 < chip.power_floor < 1.0
+    # level 0 is the base clock exactly: both multipliers collapse to 1
+    assert chip.freq_time_multiplier(0, mu=0.5) == 1.0
+    assert chip.freq_power_multiplier(0) == 1.0
+    for f in range(1, len(ratios)):
+        # downclocking always costs time and saves power
+        assert chip.freq_time_multiplier(f, mu=0.5) > chip.freq_time_multiplier(f - 1, mu=0.5)
+        assert chip.freq_power_multiplier(f) < chip.freq_power_multiplier(f - 1)
+        # memory-bound work stretches less than compute-bound work
+        assert chip.freq_time_multiplier(f, mu=0.8) < chip.freq_time_multiplier(f, mu=0.1)
+
+
+def test_sweet_spot_edp_separates_memory_and_compute_bound():
+    """The model's point: a deep downclock EDP-wins for memory-bound work
+    and EDP-loses for compute-bound work (EDP multiplier = T²·P)."""
+    f = len(H100.freq_ratios) - 1
+
+    def edp_mult(mu):
+        t = H100.freq_time_multiplier(f, mu)
+        return t * t * H100.freq_power_multiplier(f)
+
+    assert edp_mult(0.75) < 1.0  # lbm-like: wins
+    assert edp_mult(0.10) > 1.0  # MonteCarlo-like: loses
+
+
+def test_freq_curves_clamped_to_ladder():
+    ft, fp = C.freq_curves("v100", "bert", levels=99)
+    assert sorted(ft) == sorted(fp) == list(range(len(V100.freq_ratios)))
+    assert ft[0] == fp[0] == 1.0
+
+
+def test_build_system_single_level_is_the_count_only_table():
+    base = C.build_system("h100")
+    one = C.build_system("h100", freq_levels=1)
+    for app in C.APP_ORDER:
+        b, o = base[app], one[app]
+        assert not b.freq_time and not o.freq_time
+        assert b.runtime == o.runtime and b.busy_power == o.busy_power
+        assert o.freq_levels == (0,)
+        for g in o.feasible_counts:
+            # the *_at(g, 0) helpers collapse exactly to the count curves
+            assert o.runtime_at(g, 0) == o.runtime[g]
+            assert o.power_at(g, 0) == o.busy_power[g]
+            assert o.energy_at(g, 0) == o.energy(g)
+
+
+def test_build_system_levels_attach_joint_curves():
+    sys3 = C.build_system("a100", freq_levels=3)
+    for app in C.APP_ORDER:
+        prof = sys3[app]
+        assert prof.freq_levels == (0, 1, 2)
+        mu = C.MEMORY_BOUND_MU[app]
+        for g in prof.feasible_counts:
+            assert prof.runtime_at(g, 0) == prof.runtime[g]
+            for f in (1, 2):
+                assert prof.runtime_at(g, f) == prof.runtime[g] * A100.freq_time_multiplier(f, mu)
+                assert prof.power_at(g, f) == prof.busy_power[g] * A100.freq_power_multiplier(f)
+                assert prof.runtime_at(g, f) > prof.runtime_at(g, f - 1)
+                assert prof.power_at(g, f) < prof.power_at(g, f - 1)
+
+
+# ---------------------------------------------------------------------------
+# Joint argmin == brute-force scan over (g, f)
+# ---------------------------------------------------------------------------
+
+
+def _random_specs(rng, n_jobs, n_levels):
+    specs = []
+    for j in range(n_jobs):
+        modes = []
+        for g in sorted(rng.choice([1, 2, 3, 4], size=rng.integers(1, 4), replace=False)):
+            t0 = float(rng.uniform(0.8, 2.0))
+            for f in range(n_levels):
+                modes.append(
+                    ModeEstimate(
+                        g=int(g),
+                        t_norm=t0 * (1.0 + 0.15 * f),
+                        p_bar=float(rng.uniform(80.0, 400.0)),
+                        e_norm=float(rng.uniform(0.9, 1.4)) * (1.0 - 0.08 * f),
+                        f=f,
+                    )
+                )
+        specs.append(JobSpec(f"j{j}", tuple(modes)))
+    return specs
+
+
+@pytest.mark.parametrize("lam_f", [0.0, 0.25])
+def test_joint_argmin_matches_brute_force_scan(lam_f):
+    """The engine's tie-broken argmin over the joint candidate space
+    equals an independent brute-force rescore-and-scan of the reference
+    action list (min score, then max Σg, then generation order)."""
+    rng = np.random.default_rng(7)
+    for trial in range(8):
+        n_levels = int(rng.integers(1, 4))
+        specs = _random_specs(rng, int(rng.integers(1, 4)), n_levels)
+        free = int(rng.integers(1, 5))
+        free_map = [True] * free + [False] * (4 - free)
+        view = NodeView(
+            t=0.0, total_units=4, domains=2, free_units=free,
+            running=[], free_map=free_map,
+        )
+        ref = enumerate_actions(specs, view, free_map, lam=LAM, lam_f=lam_f)
+        # brute force: rescore every action from its modes with Eq. (1)
+        rescored = [
+            score(tuple(m for _, m in a), g_free=free, M=4, lam=LAM, lam_f=lam_f)
+            for _, a in ref
+        ]
+        assert rescored == pytest.approx([s for s, _ in ref])
+        best_bf = min(
+            range(len(ref)),
+            key=lambda i: (rescored[i], -sum(m.g for _, m in ref[i][1]), i),
+        )
+        batch = enumerate_scored(specs, view, free_map, lam=LAM, lam_f=lam_f)
+        bi = batch.best_index()
+        key = lambda a: sorted((sp.name, m.g, m.f) for sp, m in a)
+        assert key(batch.action(bi)) == key(ref[best_bf][1])
+        assert batch.scores[bi] == pytest.approx(rescored[best_bf])
+
+
+def test_frequency_axis_multiplies_candidate_space():
+    """3 levels must enumerate strictly more candidates than 1, and
+    collapsing the frequency axis recovers the count-only set exactly."""
+    rng = np.random.default_rng(3)
+    specs3 = _random_specs(rng, 2, 3)
+    specs1 = [
+        JobSpec(s.name, tuple(m for m in s.modes if m.f == 0)) for s in specs3
+    ]
+    view = NodeView(
+        t=0.0, total_units=4, domains=2, free_units=4,
+        running=[], free_map=[True] * 4,
+    )
+    a3 = enumerate_actions(specs3, view, [True] * 4, lam=LAM)
+    a1 = enumerate_actions(specs1, view, [True] * 4, lam=LAM)
+    assert len(a3) > len(a1)
+    collapsed = {
+        tuple(sorted((sp.name, m.g) for sp, m in a)) for _, a in a3
+    }
+    assert {
+        tuple(sorted((sp.name, m.g) for sp, m in a)) for _, a in a1
+    } <= collapsed
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity with the frequency axis live
+# ---------------------------------------------------------------------------
+
+
+def _np_reference(dev, g, f, n, bias, mask, lam, g_free, M, lam_f):
+    n_eff = np.maximum(n, 1.0)
+    s = (
+        dev.sum(axis=1) / n_eff
+        + lam * (g_free - g.sum(axis=1)) / M
+        + lam_f * f.sum(axis=1) / n_eff
+        + bias
+    )
+    return np.where(mask > 0, s, np.inf)
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_kernel_frequency_axis_matches_numpy(mode):
+    rng = np.random.default_rng(11)
+    B, S = 37, 5
+    dev = rng.uniform(-0.5, 0.5, size=(B, S)).astype(np.float32)
+    g = rng.integers(0, 5, size=(B, S)).astype(np.float32)
+    f = rng.integers(0, 4, size=(B, S)).astype(np.float32)
+    n = rng.integers(1, S + 1, size=B).astype(np.float32)
+    bias = rng.uniform(0.0, 0.1, size=B).astype(np.float32)
+    mask = (rng.random(B) > 0.2).astype(np.float32)
+    kw = dict(lam=0.35, g_free=4, M=16, lam_f=0.4)
+    want = _np_reference(dev, g, f, n, bias, mask, **kw)
+    got, best = score_reduce(dev, g, n, f=f, bias=bias, mask=mask, mode=mode, **kw)
+    feas = mask > 0
+    assert np.allclose(got[feas], want[feas], atol=1e-6)
+    tot = g.sum(axis=1)
+    m = want.min()
+    tie = np.flatnonzero((want == m) & feas)
+    t_best = tot[tie].max()
+    assert best == int(tie[tot[tie] == t_best].min())
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_kernel_no_f_plane_equals_zero_levels(mode):
+    """``f=None`` must score bit-identically to an all-zero plane even at
+    ``lam_f > 0`` — the single-frequency collapse inside the kernel."""
+    rng = np.random.default_rng(13)
+    B, S = 16, 3
+    dev = rng.uniform(-0.5, 0.5, size=(B, S)).astype(np.float32)
+    g = rng.integers(0, 5, size=(B, S)).astype(np.float32)
+    n = rng.integers(1, S + 1, size=B).astype(np.float32)
+    kw = dict(lam=0.35, g_free=4, M=16, lam_f=0.7, mode=mode)
+    s0, b0 = score_reduce(dev, g, n, f=None, **kw)
+    sz, bz = score_reduce(dev, g, n, f=np.zeros_like(dev), **kw)
+    assert np.array_equal(s0, sz) and b0 == bz
+
+
+def test_kernel_all_infeasible_returns_minus_one():
+    dev = np.zeros((4, 2), dtype=np.float32)
+    g = np.ones((4, 2), dtype=np.float32)
+    f = np.ones((4, 2), dtype=np.float32)
+    n = np.full(4, 2.0, dtype=np.float32)
+    _, best = score_reduce(
+        dev, g, n, f=f, lam=0.5, g_free=4, M=4, lam_f=0.3,
+        mask=np.zeros(4, dtype=np.float32), mode="ref",
+    )
+    assert best == -1
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: engines agree on DVFS schedules; frequency-off collapses
+# ---------------------------------------------------------------------------
+
+
+def _run(truth, engine):
+    node = Node(4, 2, C.idle_power("h100"))
+    pol = EcoSched(
+        ProfiledPerfModel(truth, noise=NOISE, seed=SEED),
+        lam=LAM, tau=TAU, engine=engine,
+    )
+    return simulate(
+        pol, node, truth,
+        arrivals=[(120.0 * i, a) for i, a in enumerate(C.APP_ORDER)],
+        slowdown_model=C.cross_numa_slowdown,
+    )
+
+
+def test_three_engines_agree_on_dvfs_schedule():
+    truth = C.build_system("h100", freq_levels=3)
+    runs = {eng: _run(truth, eng) for eng in ("python", "vector", "jax")}
+    keys = {
+        eng: [(r.job, r.g, r.f, r.start, r.end) for r in res.records]
+        for eng, res in runs.items()
+    }
+    assert keys["python"] == keys["vector"] == keys["jax"]
+    assert runs["python"].total_energy == runs["vector"].total_energy
+    # the third axis is actually exercised (not a degenerate collapse)
+    assert any(r.f > 0 for r in runs["vector"].records)
+    levels = {a: truth[a].freq_levels for a in truth}
+    assert all(r.f in levels[r.job] for r in runs["vector"].records)
+
+
+@pytest.mark.parametrize("engine", ["python", "vector", "jax"])
+def test_single_frequency_bit_identical_to_count_only(engine):
+    """freq_levels=1 systems reproduce the count-only schedule (the PR 6
+    golden fingerprint) bit-identically on every engine, with f ≡ 0."""
+    base = _run(C.build_system("h100"), engine)
+    one = _run(C.build_system("h100", freq_levels=1), engine)
+    assert fp_records(one.records) == fp_records(base.records)
+    assert one.total_energy == base.total_energy
+    assert one.makespan == base.makespan
+    assert all(r.f == 0 for r in one.records)
+    # and the count-only schedule is still the PR 6 golden lock
+    assert fp_records(base.records) == "4e5acdeeb3914722311e6f77658684e6"
+
+
+def test_dvfs_elastic_run_retunes_frequency():
+    """Elastic DVFS: frequency retunes ride checkpoint/relaunch, land in
+    ``freq_history`` (not ``resize_history``), and the run still drains."""
+    truth = C.build_system("h100", freq_levels=3)
+    node = Node(4, 2, C.idle_power("h100"))
+    pol = EcoSched(
+        ProfiledPerfModel(truth, noise=NOISE, seed=SEED), lam=LAM, tau=TAU
+    )
+    res = simulate(
+        pol, node, truth,
+        arrivals=[(120.0 * i, a) for i, a in enumerate(C.APP_ORDER)],
+        slowdown_model=C.cross_numa_slowdown,
+        elastic=ElasticConfig(resize=True),
+    )
+    assert sorted({r.job for r in res.records}) == sorted(C.APP_ORDER)
+    assert res.retunes >= 0
+    for job, moves in res.freq_history.items():
+        for _, f_old, f_new in moves:
+            assert f_old != f_new
+            assert f_new in truth[job].freq_levels

@@ -418,45 +418,23 @@ def test_resumed_segment_wait_counts_requeue_time_only():
 
 
 # ---------------------------------------------------------------------------
-# Legacy route(arr, statuses) protocol on the substrate (satellite)
+# Legacy route(arr, statuses) protocol: graduated to a hard error (satellite)
 # ---------------------------------------------------------------------------
 
 
 class LegacyLeastLoaded:
-    """route()-only twin of LeastLoadedDispatcher (same tie-breaks)."""
+    """route()-only dispatcher — the pre-PR-4 protocol, now rejected."""
 
     def name(self):
         return "legacy-ll"
 
     def route(self, arr, statuses):
-        best = None
-        for i, st in enumerate(statuses):
-            if not st.fits(arr.app):
-                continue
-            key = (st.outstanding_s, i)
-            if best is None or key < best[0]:
-                best = (key, st.spec.name)
-        if best is None:
-            raise ValueError(f"no node can fit any feasible mode of {arr.app}")
-        return best[1]
+        raise AssertionError("the legacy protocol must never be invoked")
 
 
-def test_legacy_route_parity_with_route_indexed():
-    """A route()-only dispatcher mirroring LeastLoaded produces the exact
-    schedule of the vectorized route_indexed path on the new substrate."""
-    stream = poisson_stream(C.APP_ORDER, rate=1 / 700, n=18, seed=21)
-    fast = _hetero(LeastLoadedDispatcher()).simulate(stream)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        legacy = _hetero(LegacyLeastLoaded()).simulate(stream)
-    assert [(r.job, r.node, r.g, r.start) for r in fast.records] == [
-        (r.job, r.node, r.g, r.start) for r in legacy.records
-    ]
-    assert fast.total_energy == legacy.total_energy
-    assert fast.makespan == legacy.makespan
-
-
-def test_legacy_route_only_dispatcher_warns_deprecation():
+def test_legacy_route_only_dispatcher_is_rejected():
+    """A dispatcher without route_indexed fails fast at run construction
+    (the DeprecationWarning period ended; the list protocol is gone)."""
     stream = [Arrival(0.0, "L#0", "L")]
     cl = Cluster(
         [NodeSpec("n0", H100)],
@@ -464,7 +442,7 @@ def test_legacy_route_only_dispatcher_warns_deprecation():
         policy_for=lambda s, t: SequentialMax(t),
         dispatcher=LegacyLeastLoaded(),
     )
-    with pytest.warns(DeprecationWarning, match="route_indexed"):
+    with pytest.raises(TypeError, match="route_indexed"):
         cl.simulate(stream)
 
 

@@ -311,7 +311,7 @@ def test_service_matches_batch_simulate():
     res = svc.result()
     assert res["ok"]
     batch_keyed = sorted(
-        [r.job, r.node, r.g, r.start, r.end] for r in batch.records
+        [r.job, r.node, r.g, r.f, r.start, r.end] for r in batch.records
     )
     assert sorted(res["records"]) == batch_keyed
     assert res["makespan"] == batch.makespan
@@ -368,6 +368,55 @@ def test_crash_recovery_at_random_offsets(tmp_path):
         again = SchedulerService(_factory(), journal_path=path)
         assert _fingerprint(again) == golden
         again.close()
+
+
+def test_crash_recovery_replays_dvfs_bit_identically(tmp_path):
+    """DVFS satellite: with frequency ladders enabled, the journal
+    carries each transition's chosen (g, f) and crash recovery replays
+    the joint actions bit-identically at any truncation offset."""
+
+    def factory():
+        return ClusterBackend(
+            Cluster(
+                [NodeSpec("h100-0", H100), NodeSpec("a100-0", A100)],
+                truth_for=lambda s: C.build_system(
+                    s.chip.name, freq_levels=3
+                ),
+                policy_for=lambda s, t: EcoSched(
+                    ProfiledPerfModel(t, noise=NOISE, seed=SEED),
+                    lam=LAM, tau=TAU,
+                ),
+                dispatcher=EnergyAwareDispatcher(),
+                slowdown_for=lambda s: C.cross_numa_slowdown,
+                label="svc-dvfs",
+            )
+        )
+
+    golden_path = str(tmp_path / "golden.jnl")
+    svc = SchedulerService(factory, journal_path=golden_path)
+    _apply(svc)
+    golden = _fingerprint(svc)
+    svc.close()
+    recs = Journal.read(golden_path)
+    # the backend identity distinguishes DVFS systems, transitions carry f,
+    # and the workload actually exercised a non-base frequency level
+    assert "/f3" in recs[0]["backend"]
+    evts = [r for r in recs if r["k"] == "evt"]
+    assert all("f" in r for r in evts)
+    assert any(r["f"] > 0 for r in evts if r["e"] == "launch")
+    assert any(r[3] > 0 for r in golden[0])  # records journal f too
+
+    blob = open(golden_path, "rb").read()
+    rng = np.random.default_rng(99)
+    for off in sorted({int(o) for o in rng.integers(1, len(blob), size=6)}):
+        path = str(tmp_path / f"crash{off}.jnl")
+        with open(path, "wb") as f:
+            f.write(blob[:off])
+        back = SchedulerService(factory, journal_path=path)  # recovers
+        _apply(back)  # the client re-drives; submits are idempotent
+        assert _fingerprint(back) == golden, f"diverged at offset {off}"
+        assert back.replay_divergences == 0
+        back.close()
 
 
 def test_tampered_event_raises_recovery_error(tmp_path):

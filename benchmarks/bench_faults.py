@@ -1,0 +1,252 @@
+"""Graceful degradation under node failures (ISSUE 8).
+
+A scheduler's fault story only matters under load: when nodes die
+mid-run, a static FIFO-max scheduler (SequentialMax + round-robin,
+no elasticity) strands work — jobs pinned to a failing node burn their
+retry budget waiting out repairs and are eventually dropped — while the
+elastic EcoSched stack (resize + migrate) reroutes both waiting and
+killed jobs to live nodes and finishes everything.
+
+This bench replays one bursty heterogeneous stream (H100/A100/V100,
+18 jobs) under three calibrated node-failure rates (MTBF 40000 / 15000
+/ 6000 s against a ~17-25 ks fault-free makespan, MTTR 1500 s) with the
+same seeded ``FaultConfig`` for both schedulers, so the fault process
+is identical — only the response differs.
+
+Gates (full mode):
+
+  * faults-off parity — a disabled ``FaultConfig()`` is bit-identical
+    to ``faults=None`` for both schedulers (the fault plane is inert
+    when off),
+  * zero lost jobs for elastic EcoSched at every calibrated rate,
+  * static FIFO-max strands at least one job at the harshest rate,
+  * elastic EDP <= static EDP on >= 2 of the 3 rates,
+  * bounded degradation — the harshest rate costs elastic at most 3x
+    fault-free makespan and 6x fault-free EDP (the graceful envelope).
+
+``--smoke`` (CI): the parity check plus one small faulty row asserting
+determinism (two runs bit-identical) and zero elastic losses.
+
+Full mode writes ``benchmarks/results/faults.csv`` and returns the
+trajectory snapshot committed to ``benchmarks/BENCH_faults.json``.
+Runs in seconds on CPU.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import LAM, NOISE, SEED, TAU, RESULTS_DIR, Csv, hetero_specs
+from repro.core import (
+    Cluster,
+    EcoSched,
+    ElasticConfig,
+    EnergyAwareDispatcher,
+    FaultConfig,
+    ProfiledPerfModel,
+    RoundRobinDispatcher,
+    SequentialMax,
+    bursty_stream,
+)
+from repro.core import calibration as C
+
+# node MTBFs calibrated against the stream's fault-free makespan:
+# rare -> recurring -> harsh (where static FIFO-max strands work)
+MTBF_ROWS = (40000.0, 15000.0, 6000.0)
+MTTR_S = 1500.0
+FAULT_SEED = 2
+
+ELASTIC = ElasticConfig(
+    resize=True,
+    migrate=True,
+    ckpt_time=30.0,
+    restart_time=15.0,
+    migration_delay=10.0,
+    min_gain_s=120.0,
+    max_preempts=2,
+    switch_cost=0.05,
+)
+
+
+def _stream(n: int = 18, seed: int = 7):
+    return bursty_stream(C.APP_ORDER, rate=1 / 900, n=n, burst=4, seed=seed)
+
+
+def static_cluster() -> Cluster:
+    return Cluster(
+        hetero_specs(),
+        truth_for=lambda s: C.build_system(s.chip.name),
+        policy_for=lambda s, t: SequentialMax(t),
+        dispatcher=RoundRobinDispatcher(),
+        label="static-fifo-max",
+    )
+
+
+def elastic_cluster() -> Cluster:
+    return Cluster(
+        hetero_specs(),
+        truth_for=lambda s: C.build_system(s.chip.name),
+        policy_for=lambda s, t: EcoSched(
+            ProfiledPerfModel(t, noise=NOISE, seed=SEED), lam=LAM, tau=TAU
+        ),
+        dispatcher=EnergyAwareDispatcher(),
+        slowdown_for=lambda s: C.cross_numa_slowdown,
+        label="elastic-eco",
+    )
+
+
+def _fingerprint(res):
+    return [
+        (r.job, r.node, r.g, r.kind, r.start, r.end) for r in res.records
+    ]
+
+
+def _assert_parity(stream) -> None:
+    """A disabled FaultConfig must ride the identical code path."""
+    off = FaultConfig()
+    assert not off.enabled
+    for make, elastic in (
+        (static_cluster, None),
+        (elastic_cluster, ELASTIC),
+    ):
+        base = make().simulate(stream, elastic=elastic)
+        gated = make().simulate(stream, elastic=elastic, faults=off)
+        assert _fingerprint(base) == _fingerprint(gated), (
+            f"{base.policy}: disabled faults must be bit-identical to none"
+        )
+        assert base.total_energy == gated.total_energy
+
+
+def run(csv: Csv, verbose: bool = True, smoke: bool = False):
+    if smoke:
+        return _smoke(csv, verbose)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    stream = _stream()
+    _assert_parity(stream)
+    s_free = static_cluster().simulate(stream)
+    e_free = elastic_cluster().simulate(stream, elastic=ELASTIC)
+    rows = [
+        "node_mtbf_s,policy,total_energy_J,makespan_s,edp_Js,node_failures,"
+        "fault_kills,fault_retries,migrations,lost_jobs"
+    ]
+    for r, tag in ((s_free, "inf"), (e_free, "inf")):
+        rows.append(
+            f"{tag},{r.policy},{r.total_energy:.1f},{r.makespan:.1f},"
+            f"{r.edp:.6e},0,0,0,{r.migrations},0"
+        )
+    snapshot = {"rows": []}
+    edp_wins = 0
+    for mtbf in MTBF_ROWS:
+        fc = FaultConfig(
+            seed=FAULT_SEED, node_mtbf_s=mtbf, node_mttr_s=MTTR_S
+        )
+        t0 = time.perf_counter()
+        s = static_cluster().simulate(stream, faults=fc)
+        e = elastic_cluster().simulate(stream, elastic=ELASTIC, faults=fc)
+        us = (time.perf_counter() - t0) * 1e6
+        for r in (s, e):
+            rows.append(
+                f"{mtbf:.0f},{r.policy},{r.total_energy:.1f},{r.makespan:.1f},"
+                f"{r.edp:.6e},{r.node_failures},{r.fault_kills},"
+                f"{r.fault_retries},{r.migrations},{len(r.lost_jobs)}"
+            )
+        win = e.edp <= s.edp
+        edp_wins += win
+        snapshot["rows"].append(
+            {
+                "node_mtbf_s": mtbf,
+                "static_edp": s.edp,
+                "static_makespan_s": s.makespan,
+                "static_lost": len(s.lost_jobs),
+                "elastic_edp": e.edp,
+                "elastic_makespan_s": e.makespan,
+                "elastic_lost": len(e.lost_jobs),
+                "node_failures": e.node_failures,
+                "migrations": e.migrations,
+                "edp_win": bool(win),
+            }
+        )
+        if verbose:
+            print(
+                f"faults mtbf={mtbf:.0f}s: "
+                f"static T={s.makespan:.0f}s EDP={s.edp:.3e} "
+                f"lost={len(s.lost_jobs)} | "
+                f"elastic T={e.makespan:.0f}s EDP={e.edp:.3e} "
+                f"lost={len(e.lost_jobs)} "
+                f"(nf={e.node_failures} mig={e.migrations}) | "
+                f"{'WIN' if win else 'no win'}"
+            )
+        csv.add(
+            f"faults_mtbf_{mtbf:.0f}", us,
+            f"elastic_lost={len(e.lost_jobs)};static_lost={len(s.lost_jobs)}",
+        )
+        # graceful-degradation gates
+        assert not e.lost_jobs, (
+            f"elastic EcoSched lost jobs at mtbf={mtbf}: {e.lost_jobs}"
+        )
+        if mtbf == min(MTBF_ROWS):
+            assert s.lost_jobs, (
+                "calibration drift: static FIFO-max no longer strands work "
+                f"at mtbf={mtbf}"
+            )
+            assert e.makespan <= 3.0 * e_free.makespan, (
+                f"unbounded makespan degradation: {e.makespan:.0f}s vs "
+                f"{e_free.makespan:.0f}s fault-free"
+            )
+            assert e.edp <= 6.0 * e_free.edp, (
+                f"unbounded EDP degradation: {e.edp:.3e} vs "
+                f"{e_free.edp:.3e} fault-free"
+            )
+    assert edp_wins >= 2, (
+        f"elastic EcoSched must match-or-beat static EDP on >=2/3 fault "
+        f"rates, got {edp_wins}"
+    )
+    out_path = os.path.join(RESULTS_DIR, "faults.csv")
+    with open(out_path, "w") as f:
+        f.write("\n".join(rows) + "\n")
+    if verbose:
+        print(f"faults CSV -> {out_path}")
+    return snapshot
+
+
+def write_json(path: str, snapshot: dict) -> None:
+    """Committed fault-trajectory snapshot (run.py, full runs only)."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(snapshot, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def _smoke(csv: Csv, verbose: bool) -> int:
+    """CI tripwire: faults-off parity + one deterministic faulty row."""
+    stream = _stream(n=10, seed=13)
+    t0 = time.perf_counter()
+    _assert_parity(stream)
+    fc = FaultConfig(seed=0, node_mtbf_s=8000.0, node_mttr_s=MTTR_S)
+    a = elastic_cluster().simulate(stream, elastic=ELASTIC, faults=fc)
+    b = elastic_cluster().simulate(stream, elastic=ELASTIC, faults=fc)
+    assert _fingerprint(a) == _fingerprint(b), (
+        "seeded fault trace must be deterministic"
+    )
+    assert a.node_failures >= 1, "the smoke row must actually inject faults"
+    assert not a.lost_jobs, f"elastic EcoSched lost jobs: {a.lost_jobs}"
+    us = (time.perf_counter() - t0) * 1e6
+    if verbose:
+        print(
+            f"faults --smoke: parity OK, {a.node_failures} failures, "
+            f"{a.migrations} migrations, 0 lost"
+        )
+    csv.add("faults_smoke", us, "parity+deterministic+0 lost OK")
+    return 0
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    c = Csv()
+    run(c, smoke=args.smoke)
+    c.emit()

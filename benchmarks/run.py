@@ -22,6 +22,7 @@ def main() -> None:
         bench_decision_overhead,
         bench_dvfs,
         bench_elastic,
+        bench_faults,
         bench_forecast,
         bench_fig1_scaling,
         bench_fig2_tradeoff,
@@ -52,6 +53,7 @@ def main() -> None:
     bench_sensitivity.run(csv, verbose=verbose)
     bench_cluster.run(csv, verbose=verbose)
     bench_elastic.run(csv, verbose=verbose, smoke=args.quick)
+    faults = bench_faults.run(csv, verbose=verbose, smoke=args.quick)
     forecast = bench_forecast.run(csv, verbose=verbose, smoke=args.quick)
     dvfs = bench_dvfs.run(csv, verbose=verbose, smoke=args.quick)
     throughput = bench_cluster_throughput.run(csv, verbose=verbose, smoke=args.quick)
@@ -72,9 +74,14 @@ def main() -> None:
         bench_forecast.write_json(forecast_path, forecast)
         dvfs_path = os.path.join(os.path.dirname(__file__), "BENCH_dvfs.json")
         bench_dvfs.write_json(dvfs_path, dvfs)
+        faults_path = os.path.join(
+            os.path.dirname(__file__), "BENCH_faults.json"
+        )
+        bench_faults.write_json(faults_path, faults)
         if verbose:
             print(
-                f"perf baselines -> {json_path}, {forecast_path}, {dvfs_path}"
+                f"perf baselines -> {json_path}, {forecast_path}, "
+                f"{dvfs_path}, {faults_path}"
             )
 
     print("\nname,us_per_call,derived")

@@ -41,6 +41,7 @@ from repro.core.cluster import (
 )
 from repro.core.ecosched import EcoSched
 from repro.core.events import ElasticConfig
+from repro.core.faults import FaultConfig
 from repro.core.forecast import ForecastConfig
 from repro.core.perfmodel import ProfiledPerfModel
 from repro.core.service import (
@@ -48,6 +49,7 @@ from repro.core.service import (
     ClusterBackend,
     SchedulerService,
     request,
+    request_retry,
     serve,
 )
 from repro.roofline.hw import CHIPS
@@ -75,6 +77,7 @@ def make_backend_factory(
     elastic: bool = False,
     forecast: bool = False,
     freq_levels: int = 1,
+    faults: "FaultConfig | None" = None,
 ):
     """A fresh-backend factory for ``SchedulerService``: every call
     rebuilds the calibrated cluster from scratch (deterministically),
@@ -114,13 +117,20 @@ def make_backend_factory(
                 else None
             ),
             forecast=ForecastConfig() if forecast else None,
+            faults=faults,
         )
 
     return make
 
 
 def _client(args: argparse.Namespace, req: dict) -> int:
-    resp = request(args.socket, req)
+    # transient connect failures (daemon still booting / recovering) are
+    # retried with exponential backoff unless --no-retry asks for the
+    # old fail-fast behavior
+    if getattr(args, "no_retry", False):
+        resp = request(args.socket, req)
+    else:
+        resp = request_retry(args.socket, req)
     print(json.dumps(resp, sort_keys=True, indent=2))
     return 0 if resp.get("ok") else 1
 
@@ -132,6 +142,11 @@ def main(argv=None) -> int:
     def add(name, **kw):
         sp = sub.add_parser(name, **kw)
         sp.add_argument("--socket", required=True, help="unix socket path")
+        sp.add_argument(
+            "--no-retry",
+            action="store_true",
+            help="fail fast instead of retrying transient connect errors",
+        )
         return sp
 
     d = add("daemon", help="boot the scheduler daemon")
@@ -152,6 +167,32 @@ def main(argv=None) -> int:
     d.add_argument("--max-pending", type=int, default=256)
     d.add_argument("--burst-limit", type=float, default=3.0)
     d.add_argument("--burst-pending", type=int, default=16)
+    d.add_argument(
+        "--fault-seed", type=int, default=0, help="fault-injection RNG seed"
+    )
+    d.add_argument(
+        "--node-mtbf",
+        type=float,
+        default=0.0,
+        help="mean seconds between node failures (0 = no node faults)",
+    )
+    d.add_argument(
+        "--node-mttr", type=float, default=600.0, help="mean repair seconds"
+    )
+    d.add_argument(
+        "--degrade-frac",
+        type=float,
+        default=0.0,
+        help="probability a node failure is partial (loses --degrade-units)",
+    )
+    d.add_argument("--degrade-units", type=int, default=1)
+    d.add_argument(
+        "--job-mtbf",
+        type=float,
+        default=0.0,
+        help="mean running seconds between job crashes (0 = no job faults)",
+    )
+    d.add_argument("--max-retries", type=int, default=3)
 
     s = add("submit", help="submit one job")
     s.add_argument("--name", required=True)
@@ -169,6 +210,7 @@ def main(argv=None) -> int:
     a.add_argument("--until", type=float, default=None)
     add("drain", help="run until every queued job has finished")
     add("stats", help="daemon statistics")
+    add("compact", help="fold journaled transitions into a snapshot")
     add("result", help="final schedule fingerprint (after drain)")
     add("ping", help="liveness check")
     add("shutdown", help="stop the daemon cleanly")
@@ -176,6 +218,15 @@ def main(argv=None) -> int:
     args = p.parse_args(argv)
 
     if args.cmd == "daemon":
+        faults = FaultConfig(
+            seed=args.fault_seed,
+            node_mtbf_s=args.node_mtbf,
+            node_mttr_s=args.node_mttr,
+            degrade_frac=args.degrade_frac,
+            degrade_units=args.degrade_units,
+            job_mtbf_s=args.job_mtbf,
+            max_retries=args.max_retries,
+        )
         service = SchedulerService(
             make_backend_factory(
                 args.preset,
@@ -183,6 +234,7 @@ def main(argv=None) -> int:
                 elastic=args.elastic,
                 forecast=args.forecast,
                 freq_levels=args.freq_levels,
+                faults=faults if faults.enabled else None,
             ),
             journal_path=args.journal,
             admission=AdmissionConfig(

@@ -40,6 +40,7 @@ from repro.core.engine import (
     enumerate_scored,
 )
 from repro.core.events import ElasticConfig, EventLoop, EventQueue
+from repro.core.faults import FaultConfig, FaultInjector
 from repro.core.metrics import (
     edp_saving,
     elastic_summary,
@@ -95,6 +96,8 @@ __all__ = [
     "EnergyAwareDispatcher",
     "EventLoop",
     "EventQueue",
+    "FaultConfig",
+    "FaultInjector",
     "ForecastConfig",
     "ForecastPlane",
     "IllegalTransition",

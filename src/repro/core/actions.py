@@ -80,7 +80,7 @@ def enumerate_actions(
     """Returns scored actions [(S(a), ((spec, mode), ...)), ...] incl. empty."""
     k_avail = view.domains - view.occupied_domains
     g_free = view.free_units
-    M = view.total_units
+    M = view.alive_units  # degraded nodes score over their alive capacity
     domain_jobs = list(view.domain_jobs) or [0] * view.domains
     if k_avail <= 0 or not specs:
         return [(score((), g_free=g_free, M=M, lam=lam, lam_f=lam_f), ())]

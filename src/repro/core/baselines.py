@@ -45,8 +45,10 @@ class SequentialMax(NonElasticPolicy):
         if view.running or not waiting:
             return []
         job = waiting[0]
-        fits = [g for g in self.truth[job].feasible_counts if g <= view.total_units]
+        fits = [g for g in self.truth[job].feasible_counts if g <= view.alive_units]
         if not fits:
+            if view.dead_units:
+                return []  # degraded node: wait for repair
             raise ValueError(f"{job}: no feasible mode fits {view.total_units} units")
         return [Launch(job=job, g=max(fits))]
 
@@ -62,7 +64,11 @@ class SequentialOptimal(NonElasticPolicy):
         if view.running or not waiting:
             return []
         job = waiting[0]
-        return [Launch(job=job, g=self.truth[job].optimal_count(view.total_units))]
+        if view.dead_units and not any(
+            g <= view.alive_units for g in self.truth[job].feasible_counts
+        ):
+            return []  # degraded node: wait for repair
+        return [Launch(job=job, g=self.truth[job].optimal_count(view.alive_units))]
 
 
 class Marble(NonElasticPolicy):
@@ -88,7 +94,11 @@ class Marble(NonElasticPolicy):
         for job in waiting:
             if slots - len(out) <= 0:
                 break
-            g = self.truth[job].optimal_count(view.total_units)
+            if not any(
+                g <= view.alive_units for g in self.truth[job].feasible_counts
+            ):
+                continue  # no mode fits the (possibly degraded) capacity
+            g = self.truth[job].optimal_count(view.alive_units)
             if g <= free and st.can_allocate(g):
                 st.allocate(g)
                 out.append(Launch(job=job, g=g))

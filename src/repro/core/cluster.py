@@ -58,7 +58,8 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.arrivals import Arrival
-from repro.core.events import EVT_ARRIVAL, ElasticConfig, EventLoop
+from repro.core.events import EVT_ARRIVAL, EVT_MIGRATE, ElasticConfig, EventLoop
+from repro.core.faults import FaultConfig, FaultInjector
 from repro.core.forecast import ForecastConfig, ForecastPlane
 from repro.core.simulator import Node, NodeSim, _auto_max_events
 from repro.core.types import ClusterResult, JobProfile, RunningJob
@@ -108,30 +109,11 @@ class ClusterState:
         self.min_unit_s = np.zeros((N, A))  # cheapest busy unit-seconds
         self.e_best = np.ones((N, A))  # min-energy mode: energy (J)
         self.t_best = np.ones((N, A))  # min-energy mode: runtime (s)
+        # kept for the fault plane's capacity refits (set_alive_units)
+        self._specs = list(specs)
+        self._app_truth = app_truth
         for i, s in enumerate(specs):
-            truth = app_truth[s.name]
-            for a, j in self.app_index.items():
-                prof = truth.get(a)
-                if prof is None:
-                    continue
-                counts = [g for g in prof.feasible_counts if g <= s.units]
-                if not counts:
-                    continue
-                self.fits[i, j] = True
-                # best modes over the joint (count, frequency) set; a
-                # single-level profile reduces every *_at(g, 0) to the
-                # count-only curves, so these cells are bit-identical to
-                # the pre-DVFS tables there
-                levels = prof.freq_levels
-                self.min_unit_s[i, j] = min(
-                    prof.runtime_at(g, f) * g for g in counts for f in levels
-                )
-                e, t = min(
-                    (prof.energy_at(g, f), prof.runtime_at(g, f))
-                    for g in counts
-                    for f in levels
-                )
-                self.e_best[i, j], self.t_best[i, j] = e, t
+            self._fill_node(i, app_truth[s.name], s.units)
         # in-place accumulators (launch/complete update these, not scans);
         # the counts let drained accumulators snap back to exactly 0.0 —
         # equal empty nodes must compare *equal*, not within float drift,
@@ -141,6 +123,50 @@ class ClusterState:
         self.wait_units_s = np.zeros(N)  # Σ min-work over waiting jobs
         self.n_running = np.zeros(N, dtype=np.int64)
         self.n_waiting = np.zeros(N, dtype=np.int64)
+
+    def _fill_node(self, i: int, truth: Dict[str, JobProfile], limit: int) -> None:
+        """(Re)build node ``i``'s feasibility/best-mode row for a unit
+        budget of ``limit`` (its physical size at construction; its alive
+        capacity after a fault-plane refit)."""
+        for a, j in self.app_index.items():
+            self.fits[i, j] = False
+            self.min_unit_s[i, j] = 0.0
+            self.e_best[i, j] = 1.0
+            self.t_best[i, j] = 1.0
+            prof = truth.get(a)
+            if prof is None:
+                continue
+            counts = [g for g in prof.feasible_counts if g <= limit]
+            if not counts:
+                continue
+            self.fits[i, j] = True
+            # best modes over the joint (count, frequency) set; a
+            # single-level profile reduces every *_at(g, 0) to the
+            # count-only curves, so these cells are bit-identical to
+            # the pre-DVFS tables there
+            levels = prof.freq_levels
+            self.min_unit_s[i, j] = min(
+                prof.runtime_at(g, f) * g for g in counts for f in levels
+            )
+            e, t = min(
+                (prof.energy_at(g, f), prof.runtime_at(g, f))
+                for g in counts
+                for f in levels
+            )
+            self.e_best[i, j], self.t_best[i, j] = e, t
+
+    def set_alive_units(self, ni: int, alive: int) -> None:
+        """Refit node ``ni`` to a degraded (or repaired) capacity: the
+        feasibility/best-mode tables shrink to modes that fit the alive
+        units, so dispatchers stop routing work a failed node can no
+        longer host.  ``alive == spec.units`` restores the physical
+        tables bit-identically (same deterministic rebuild)."""
+        spec = self._specs[ni]
+        self._fill_node(ni, self._app_truth[spec.name], alive)
+        # drain-proxy divisor: a degraded node spreads its backlog over
+        # fewer units (max(1) keeps a fully-dead node's arithmetic finite
+        # — its all-False fits row already blocks routing there)
+        self.units[ni] = float(max(alive, 1))
 
     def on_arrive(self, ni: int, ai: int) -> None:
         self.wait_units_s[ni] += self.min_unit_s[ni, ai]
@@ -344,6 +370,7 @@ class Cluster:
         jobs: Sequence[Tuple[str, str]] = (),
         elastic: Optional[ElasticConfig] = None,
         forecast: Optional[ForecastConfig] = None,
+        faults: Optional[FaultConfig] = None,
         max_events: Optional[int] = None,
         fast_status: bool = True,
         on_transition: Optional[Callable] = None,
@@ -360,6 +387,7 @@ class Cluster:
             jobs=jobs,
             elastic=elastic,
             forecast=forecast,
+            faults=faults,
             max_events=max_events,
             fast_status=fast_status,
             on_transition=on_transition,
@@ -374,6 +402,7 @@ class Cluster:
         fast_status: bool = True,
         elastic: Optional[ElasticConfig] = None,
         forecast: Optional[ForecastConfig] = None,
+        faults: Optional[FaultConfig] = None,
     ) -> ClusterResult:
         # stable on t only: same-instant arrivals keep submission order
         stream = sorted(stream, key=lambda a: a.t)
@@ -390,6 +419,7 @@ class Cluster:
             jobs=[(a.name, a.app) for a in stream],
             elastic=elastic,
             forecast=forecast,
+            faults=faults,
             max_events=max_events,
             fast_status=fast_status,
         )
@@ -428,10 +458,13 @@ class _ReferenceStateView:
             # a node's local sim.t lags until its next event, which
             # would inflate its load
             mins = run.min_unit_s[s.name]
+            # .get(): a degraded node's refit may have dropped an app a
+            # stranded waiter still belongs to — it contributes no
+            # schedulable work until the repair restores the entry
             out[i] = (
                 sum(max(r.end - now, 0.0) * r.g for r in sim.running)
-                + sum(mins[run.app_of[j]] for j in sim.waiting)
-            ) / s.units
+                + sum(mins.get(run.app_of[j], 0.0) for j in sim.waiting)
+            ) / run.state.units[i]
         return out
 
 
@@ -463,6 +496,7 @@ class ClusterRun:
         jobs: Sequence[Tuple[str, str]] = (),
         elastic: Optional[ElasticConfig] = None,
         forecast: Optional[ForecastConfig] = None,
+        faults: Optional[FaultConfig] = None,
         max_events: Optional[int] = None,
         fast_status: bool = True,
         on_transition: Optional[Callable] = None,
@@ -477,6 +511,10 @@ class ClusterRun:
                 "statuses) protocol (deprecated since PR 4) has been removed"
             )
         self.elastic = elastic
+        self.faults = faults if (faults and faults.enabled) else None
+        self.fault_injector = (
+            FaultInjector(self.faults) if self.faults is not None else None
+        )
         self.fast_status = fast_status
         self.on_transition = on_transition
 
@@ -486,6 +524,9 @@ class ClusterRun:
         self.spec_of = {s.name: s for s in self.specs}
         self.apps = list(apps)
         state = self.state = ClusterState(self.specs, self.app_truth, self.apps)
+        # admission decisions must be time-independent: a job that fits a
+        # *healthy* node is admittable even while that node is down
+        self._fits_healthy = state.fits.copy()
         # per-node per-app minimum busy unit-seconds (legacy-scan form of
         # ClusterState.min_unit_s, for the PR-2 baseline status path)
         self.min_unit_s: Dict[str, Dict[str, float]] = {
@@ -538,6 +579,8 @@ class ClusterRun:
                 ),
                 name=s.name,
                 elastic=elastic,
+                faults=faults,
+                fault_injector=self.fault_injector,
             )
 
         # fast_status=False swaps in the reference-scan drain proxy; the
@@ -555,12 +598,19 @@ class ClusterRun:
             max_events=max_events,
             cap_msg="cluster event cap exceeded (policy deadlock?)",
             elastic=elastic,
+            faults=faults,
+            fault_injector=self.fault_injector,
             on_launch=self._on_launch,
             on_complete=self._on_complete,
             on_requeue=self._on_requeue,
             on_dequeue=self._on_dequeue,
             on_retime=self._on_retime,
+            on_fail=self._on_fail,
+            on_retry=self._on_retry,
+            on_lost=self._on_lost,
+            on_capacity=self._on_capacity,
             migrate_candidate=self._migrate_candidate,
+            reroute_waiting=self._reroute_waiting,
         )
 
     # -- job registry --------------------------------------------------------
@@ -586,7 +636,7 @@ class ClusterRun:
             raise ValueError(
                 f"unknown application {app!r} (universe: {self.apps})"
             )
-        if not bool(self.state.fits[:, ai].any()):
+        if not bool(self._fits_healthy[:, ai].any()):
             raise ValueError(f"no node can fit any feasible mode of {app}")
         self._register(name, app)
         self.n_jobs += 1
@@ -658,6 +708,15 @@ class ClusterRun:
         ai = state.app_index[arr.app]
         ni = self.dispatcher.route_indexed(ai, self._dispatch_state, t)
         if ni < 0:
+            if self.faults is not None and bool(self._fits_healthy[:, ai].any()):
+                # every node that can host this app is currently failed or
+                # degraded below its smallest mode: hold the job at the
+                # cluster edge and retry after the backoff base — repairs
+                # are always scheduled, so this terminates
+                self.loop.queue.push(
+                    t + self.faults.retry_base_s, EVT_ARRIVAL, arr
+                )
+                return None
             raise ValueError(
                 f"no node can fit any feasible mode of {arr.app}"
             )
@@ -713,6 +772,64 @@ class ClusterRun:
 
     def _on_retime(self, nm: str, rj: RunningJob, old_end: float) -> None:
         self.state.on_retime(self.state.index[nm], old_end, rj.end, rj.g)
+
+    # fault-plane hooks (repro.core.faults; never fired with faults=None)
+
+    def _on_fail(self, nm: str, rj: RunningJob, old_end: float) -> None:
+        """A crash/node failure killed ``rj``: un-book its running term
+        with the end the launch (or last retime) booked.  Deliberately NOT
+        fed to the forecast plane — a crashed segment's duration says
+        nothing about the app's runtime, and posteriors learning from it
+        would corrupt every later estimate."""
+        self.state.on_complete(self.state.index[nm], old_end, rj.g)
+        self._emit("fail", rj.end, rj.job, nm, rj.g, rj.end, rj.f)
+
+    def _on_retry(self, nm: str, job: str) -> None:
+        state = self.state
+        state.on_arrive(state.index[nm], state.app_index[self.app_of[job]])
+        self._emit("retry", self.loop.now, job, nm, 0, self.loop.now)
+
+    def _on_lost(self, nm: str, job: str) -> None:
+        self._emit("lost", self.loop.now, job, nm, 0, self.loop.now)
+
+    def _on_capacity(self, nm: str) -> None:
+        """Node ``nm``'s alive capacity changed (failure or repair):
+        refit the routing tables and recompute its waiting-work
+        accumulator under the new per-app min-work costs."""
+        state = self.state
+        ni = state.index[nm]
+        sim = self.sims[nm]
+        state.set_alive_units(ni, sim.placement.alive_units())
+        state.wait_units_s[ni] = sum(
+            state.min_unit_s[ni, state.app_index[self.app_of[j]]]
+            for j in sim.waiting
+        )
+        # legacy-scan table (the fast_status=False reference path)
+        self.min_unit_s[nm] = {
+            app: state.min_unit_s[ni, state.app_index[app]]
+            for app in self.apps
+            if state.fits[ni, state.app_index[app]]
+        }
+
+    def _reroute_waiting(self, nm: str, t: float) -> None:
+        """Node ``nm`` went fully dead: move its waiting jobs to live
+        nodes through the migration machinery (transit delay charged).
+        Without migration enabled the jobs wait out the repair."""
+        if self.elastic is None or not self.elastic.migrate:
+            return
+        sim = self.sims[nm]
+        state = self.state
+        for job in list(sim.waiting):
+            ai = state.app_index[self.app_of[job]]
+            ni = self.dispatcher.route_indexed(ai, self._dispatch_state, t)
+            if ni < 0 or state.names[ni] == nm:
+                continue  # nowhere alive to go; wait for the repair
+            dest = state.names[ni]
+            mstate = sim.evict(job)
+            self._on_dequeue(nm, job)
+            self.loop.queue.push(
+                t + self.elastic.migration_delay, EVT_MIGRATE, (dest, job, mstate)
+            )
 
     def _migrate_candidate(self, nm: str, t: float):
         """Pull one waiting job from the most backlogged node onto the

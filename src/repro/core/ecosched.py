@@ -179,6 +179,7 @@ class EcoSched:
                 tuple(view.domain_jobs),
                 bool(view.running),  # the deadlock guard reads this
                 view.total_units,
+                view.dead_units,  # degraded capacity changes the argmin
                 view.domains,
             )
             hit = self._launch_memo.get(key)
@@ -263,7 +264,7 @@ class EcoSched:
         bias = (self.lookahead * batch.spread) if self.lookahead else None
         _, i = score_reduce(
             dev, g, n,
-            lam=self.lam, g_free=view.free_units, M=view.total_units,
+            lam=self.lam, g_free=view.free_units, M=view.alive_units,
             f=fcol, lam_f=self.lam_f, bias=bias,
         )
         if i < 0:  # unreachable: the empty action is always feasible
@@ -271,7 +272,7 @@ class EcoSched:
         if i == 0 and not view.running:  # row 0 is the empty action
             _, j = score_reduce(
                 dev, g, n,
-                lam=self.lam, g_free=view.free_units, M=view.total_units,
+                lam=self.lam, g_free=view.free_units, M=view.alive_units,
                 f=fcol, lam_f=self.lam_f, bias=bias, mask=batch.n_jobs > 0,
             )
             if j >= 0:
@@ -375,6 +376,7 @@ class EcoSched:
             running=[r for r in view.running if r is not rj],
             free_map=free_map,
             domain_jobs=occ,
+            dead_units=view.dead_units,
         )
 
     def _best_resize_mode(
@@ -423,7 +425,7 @@ class EcoSched:
             fcol = batch.padded_f() if self.lam_f else None
             _, i = score_reduce(
                 dev, g, n,
-                lam=self.lam, g_free=hypo.free_units, M=hypo.total_units,
+                lam=self.lam, g_free=hypo.free_units, M=hypo.alive_units,
                 f=fcol, lam_f=self.lam_f, bias=bias, mask=batch.n_jobs > 0,
             )
             if i < 0:

@@ -657,7 +657,9 @@ def enumerate_scored(
     specs = list(specs)
     k_avail = view.domains - view.occupied_domains
     g_free = view.free_units
-    M = view.total_units
+    # degraded nodes (fault plane) score over alive capacity; M is part of
+    # the decision key below, so healthy and degraded states never collide
+    M = view.alive_units
     if k_avail <= 0 or not specs:
         return ScoredBatch(
             specs,

@@ -18,7 +18,11 @@ Event kinds, in tie-break order at one instant:
              and the job re-enters a queue with its remaining work,
   RESUME   — a preempted job re-enters its node's waiting queue,
   MIGRATE  — a waiting (possibly preempted) job lands on another node
-             after the migration delay.
+             after the migration delay,
+  NODE_FAIL / NODE_RECOVER / JOB_FAIL / RETRY — the fault plane
+             (ISSUE 8): a node loses k of its GPUs (or all of them) and
+             is repaired later; a running job crashes; a killed job
+             re-enters a waiting queue after capped exponential backoff.
 
 The ARRIVAL < COMPLETE ordering is exactly the pre-refactor contract, so
 with the elastic machinery disabled (``elastic=None``) the substrate pops
@@ -47,6 +51,25 @@ Elastic capabilities (all default-off, ``ElasticConfig``):
 Every elastic action is bounded: at most one resize and one migration per
 COMPLETE event, ``max_preempts`` checkpoints per job, and a job within
 ``ckpt_time + restart_time`` of finishing is never preempted.
+
+The fault plane (``FaultConfig``, default-off — ``faults=None`` rides
+the exact pre-fault path) threads failures through the same heap:
+
+  * a seeded per-node timeline pushes NODE_FAIL/NODE_RECOVER cycles;
+    a failure kills every overlapping job (work since its last
+    checkpoint is lost and re-done, the unrun energy refunded, the
+    burned segment stays charged), marks the lost units dead so
+    placement, idle-energy integration, and the Eq. (1) scorers all see
+    the degraded capacity, and repairs them at recovery;
+  * a per-(job, segment) exponential hazard pushes JOB_FAIL crashes;
+  * every kill retries through RETRY events with capped exponential
+    backoff (``max_retries``, then the job is *lost* — dropped with an
+    ``on_lost`` notification rather than requeued forever).
+
+NODE_FAIL/NODE_RECOVER regenerate forever (the timeline never ends), so
+the batch ``run()`` stops when no *work* events or waiting jobs remain;
+the heap keeps the timeline, which is exactly what the incremental
+control-plane drivers need to resume.
 """
 from __future__ import annotations
 
@@ -54,13 +77,20 @@ import heapq
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core.faults import FaultConfig, FaultInjector
+
 # Event kinds.  ARRIVAL/COMPLETE keep the pre-refactor numeric order
-# (arrivals sort before same-time completions); the elastic kinds follow.
+# (arrivals sort before same-time completions); the elastic kinds follow,
+# then the fault plane's.
 EVT_ARRIVAL = 0
 EVT_COMPLETE = 1
 EVT_PREEMPT = 2
 EVT_RESUME = 3
 EVT_MIGRATE = 4
+EVT_NODE_FAIL = 5
+EVT_NODE_RECOVER = 6
+EVT_JOB_FAIL = 7
+EVT_RETRY = 8
 
 EVENT_NAMES = {
     EVT_ARRIVAL: "ARRIVAL",
@@ -68,7 +98,15 @@ EVENT_NAMES = {
     EVT_PREEMPT: "PREEMPT",
     EVT_RESUME: "RESUME",
     EVT_MIGRATE: "MIGRATE",
+    EVT_NODE_FAIL: "NODE_FAIL",
+    EVT_NODE_RECOVER: "NODE_RECOVER",
+    EVT_JOB_FAIL: "JOB_FAIL",
+    EVT_RETRY: "RETRY",
 }
+
+# the self-regenerating fault timeline: not "work", so an otherwise-idle
+# batch run can stop while the heap still carries the next failure cycle
+_TIMELINE_KINDS = frozenset((EVT_NODE_FAIL, EVT_NODE_RECOVER))
 
 
 @dataclass(frozen=True)
@@ -107,13 +145,19 @@ class ElasticConfig:
 class EventQueue:
     """The single heap.  Entries are ``(t, kind, seq, payload)`` — the
     exact tuple shape of the pre-refactor loops, so pop order (time, then
-    kind, then push order) is unchanged."""
+    kind, then push order) is unchanged.
 
-    __slots__ = ("_heap", "_seq")
+    ``work`` counts the pending non-timeline events (everything except
+    NODE_FAIL/NODE_RECOVER, which regenerate forever): the fault-aware
+    batch loop stops on ``work == 0`` instead of an empty heap.
+    """
+
+    __slots__ = ("_heap", "_seq", "work")
 
     def __init__(self):
         self._heap: List[Tuple[float, int, int, object]] = []
         self._seq = 0
+        self.work = 0
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -121,9 +165,13 @@ class EventQueue:
     def push(self, t: float, kind: int, payload: object) -> None:
         heapq.heappush(self._heap, (t, kind, self._seq, payload))
         self._seq += 1
+        if kind not in _TIMELINE_KINDS:
+            self.work += 1
 
     def pop(self) -> Tuple[float, int, object]:
         t, kind, _, payload = heapq.heappop(self._heap)
+        if kind not in _TIMELINE_KINDS:
+            self.work -= 1
         return t, kind, payload
 
     def next_is(self, t: float, kind: int) -> bool:
@@ -150,11 +198,23 @@ class EventLoop:
       max_events — deadlock-guard cap, counted per popped head event,
       cap_msg    — the RuntimeError message when the cap trips,
       elastic    — ``ElasticConfig`` or None (None = pre-refactor behavior),
+      faults     — ``FaultConfig`` or None (None = pre-fault behavior);
+                   ``fault_injector`` supplies the shared deterministic
+                   draw streams (owners build one so NodeSim stragglers
+                   and the loop's timelines share it),
       on_launch / on_complete / on_requeue / on_dequeue / on_retime —
                    optional array-state bookkeeping hooks (ClusterState),
+      on_fail / on_retry / on_lost / on_capacity — optional fault hooks:
+                   a job was killed (crash or node failure; receives the
+                   pre-kill end time for array-state un-booking), a killed
+                   job re-entered a waiting queue, a job exhausted its
+                   retries, a node's alive capacity changed,
       migrate_candidate — optional (node, t) -> (donor, job) | None: pick a
                    waiting job to pull onto ``node`` (the cluster
-                   dispatcher's migration hook).
+                   dispatcher's migration hook),
+      reroute_waiting — optional (node, t) hook: a node went fully dead —
+                   move its waiting jobs somewhere alive (the cluster
+                   implements this through the migration machinery).
     """
 
     def __init__(
@@ -165,12 +225,19 @@ class EventLoop:
         max_events: int,
         cap_msg: str,
         elastic: Optional[ElasticConfig] = None,
+        faults: Optional[FaultConfig] = None,
+        fault_injector: Optional[FaultInjector] = None,
         on_launch: Optional[Callable] = None,
         on_complete: Optional[Callable] = None,
         on_requeue: Optional[Callable] = None,
         on_dequeue: Optional[Callable] = None,
         on_retime: Optional[Callable] = None,
+        on_fail: Optional[Callable] = None,
+        on_retry: Optional[Callable] = None,
+        on_lost: Optional[Callable] = None,
+        on_capacity: Optional[Callable] = None,
         migrate_candidate: Optional[Callable] = None,
+        reroute_waiting: Optional[Callable] = None,
     ):
         self.sims = sims
         self.queue = EventQueue()
@@ -178,12 +245,24 @@ class EventLoop:
         self.max_events = max_events
         self.cap_msg = cap_msg
         self.elastic = elastic if (elastic and elastic.any_enabled) else None
+        self.faults = faults if (faults and faults.enabled) else None
+        if self.faults is not None and fault_injector is None:
+            fault_injector = FaultInjector(self.faults)
+        self.injector = fault_injector if self.faults is not None else None
         self.on_launch = on_launch
         self.on_complete = on_complete
         self.on_requeue = on_requeue
         self.on_dequeue = on_dequeue
         self.on_retime = on_retime
+        self.on_fail = on_fail
+        self.on_retry = on_retry
+        self.on_lost = on_lost
+        self.on_capacity = on_capacity
         self.migrate_candidate = migrate_candidate
+        self.reroute_waiting = reroute_waiting
+        # global per-job retry counts: a job killed on node A and rerouted
+        # to node B keeps burning the same budget
+        self._fault_retry: Dict[str, int] = {}
         # stepping state (control-plane incremental driving, ISSUE 6):
         # ``now`` advances to each popped head-event time, ``events`` is the
         # per-head-event cap counter, ``started`` guards the t=0 pass.
@@ -195,12 +274,23 @@ class EventLoop:
 
     def _schedule(self, nm: str) -> None:
         """One policy invocation on node ``nm``; launched jobs get their
-        COMPLETE events pushed."""
+        COMPLETE events pushed (and, with faults, their crash draws)."""
         sim = self.sims[nm]
+        if self.faults is not None and sim.placement.free_count() == 0:
+            # a fully-dead (or fully-occupied) node has nothing to offer;
+            # policies written against the pre-fault invariant
+            # "idle => all units free" must not be consulted here
+            return
         for rj in sim.invoke_policy():
             if self.on_launch is not None:
                 self.on_launch(nm, rj)
             self.queue.push(rj.end, EVT_COMPLETE, (nm, rj))
+            if self.faults is not None:
+                t_c = rj.start + self.injector.crash_offset(
+                    rj.job, rj.record.segment
+                )
+                if t_c < rj.end:
+                    self.queue.push(t_c, EVT_JOB_FAIL, (nm, rj))
 
     # -- main loop ----------------------------------------------------------
 
@@ -212,6 +302,10 @@ class EventLoop:
         self.started = True
         for nm in self.sims:
             self._schedule(nm)
+        if self.faults is not None and self.faults.node_mtbf_s > 0:
+            for nm, sim in self.sims.items():
+                up, down, k = self.injector.next_cycle(nm, sim.node.units)
+                self.queue.push(up, EVT_NODE_FAIL, (nm, k, down))
 
     def step(self) -> bool:
         """Pop and process one head event (plus its same-instant arrival
@@ -238,9 +332,19 @@ class EventLoop:
                 return
             self.step()
 
+    def idle(self) -> bool:
+        """True when only the self-regenerating fault timeline remains:
+        no pending work events, no waiting jobs anywhere.  Without faults
+        the heap simply drains, so this is never consulted."""
+        if self.faults is None:
+            return False
+        return self.queue.work == 0 and not any(
+            sim.waiting for sim in self.sims.values()
+        )
+
     def run(self) -> None:
         self.start()
-        while self.step():
+        while not self.idle() and self.step():
             pass
 
     def _dispatch(self, t: float, kind: int, payload: object) -> None:
@@ -256,8 +360,8 @@ class EventLoop:
                     self._schedule(nm)
         elif kind == EVT_COMPLETE:
             nm, rj = payload
-            if rj.preempted:
-                return  # superseded by a PREEMPT event at ckpt end
+            if rj.preempted or rj.failed:
+                return  # superseded by a PREEMPT event / killed by a fault
             sim = self.sims[nm]
             sim.complete(rj)
             if self.on_complete is not None:
@@ -269,6 +373,8 @@ class EventLoop:
                 self._post_complete(nm, t)
         elif kind == EVT_PREEMPT:
             nm, rj = payload
+            if rj.failed:
+                return  # the node died mid-checkpoint-write
             self.sims[nm].finish_preempt(rj, t)
             if self.on_complete is not None:
                 self.on_complete(nm, rj)  # rj.end == t after retiming
@@ -285,8 +391,94 @@ class EventLoop:
             if self.on_requeue is not None:
                 self.on_requeue(to, job)
             self._schedule(to)
+        elif kind == EVT_JOB_FAIL:
+            nm, rj = payload
+            sim = self.sims[nm]
+            if rj.preempted or rj.failed or rj not in sim.running:
+                return  # stale draw: resized/checkpointed/done before it hit
+            sim.job_crashes += 1
+            self._kill(nm, rj, t)
+            if sim.waiting and sim.placement.free_count() > 0:
+                self._schedule(nm)  # the freed units can serve the queue
+        elif kind == EVT_NODE_FAIL:
+            nm, k, down = payload
+            self._node_fail(nm, k, down, t)
+        elif kind == EVT_NODE_RECOVER:
+            nm, ids = payload
+            self._node_recover(nm, ids, t)
+        elif kind == EVT_RETRY:
+            nm, job = payload
+            sim = self.sims[nm]
+            sim.requeue(job, t)
+            if self.on_retry is not None:
+                self.on_retry(nm, job)
+            if (
+                self.reroute_waiting is not None
+                and sim.placement.dead_count() >= sim.node.units
+            ):
+                # retried onto a node that is still fully down: move it
+                self.reroute_waiting(nm, t)
+            if job in sim.waiting and sim.placement.free_count() > 0:
+                self._schedule(nm)
         else:  # pragma: no cover - defensive
             raise RuntimeError(f"unknown event kind {kind}")
+
+    # -- fault plane --------------------------------------------------------
+
+    def _kill(self, nm: str, rj, t: float) -> None:
+        """One job dies at ``t`` (crash or node failure): the node refunds
+        the unrun energy and rolls the job back to its last checkpoint,
+        then the job either retries (backoff) or is lost."""
+        sim = self.sims[nm]
+        old_end = rj.end
+        sim.fail_running(rj, t)
+        if self.on_fail is not None:
+            self.on_fail(nm, rj, old_end)
+        self._fault_requeue(nm, rj.job, t)
+
+    def _fault_requeue(self, nm: str, job: str, t: float) -> None:
+        cfg = self.faults
+        count = self._fault_retry.get(job, 0)
+        sim = self.sims[nm]
+        if count >= cfg.max_retries:
+            sim.drop_lost(job)
+            if self.on_lost is not None:
+                self.on_lost(nm, job)
+            return
+        self._fault_retry[job] = count + 1
+        sim.fault_retries += 1
+        self.queue.push(t + self.injector.retry_delay(count), EVT_RETRY, (nm, job))
+
+    def _node_fail(self, nm: str, k: int, down: float, t: float) -> None:
+        sim = self.sims[nm]
+        sim.advance(t)
+        sim.node_failures += 1
+        alive = [u for u in range(sim.node.units) if not sim.placement.dead[u]]
+        victims = set(alive[-k:]) if k < len(alive) else set(alive)
+        for rj in [r for r in sim.running if set(r.units) & victims]:
+            self._kill(nm, rj, t)
+        sim.placement.mark_dead(sorted(victims))
+        if self.on_capacity is not None:
+            self.on_capacity(nm)
+        if (
+            self.reroute_waiting is not None
+            and sim.placement.dead_count() >= sim.node.units
+        ):
+            self.reroute_waiting(nm, t)
+        if sim.waiting and sim.placement.free_count() > 0:
+            self._schedule(nm)  # partial failure: survivors may backfill
+        self.queue.push(t + down, EVT_NODE_RECOVER, (nm, sorted(victims)))
+
+    def _node_recover(self, nm: str, ids: List[int], t: float) -> None:
+        sim = self.sims[nm]
+        sim.advance(t)
+        sim.placement.revive(ids)
+        if self.on_capacity is not None:
+            self.on_capacity(nm)
+        if sim.waiting:
+            self._schedule(nm)
+        up, down, k = self.injector.next_cycle(nm, sim.node.units)
+        self.queue.push(t + up, EVT_NODE_FAIL, (nm, k, down))
 
     # -- elastic hooks (resize + migration), bounded per COMPLETE event -----
 

@@ -20,24 +20,49 @@ whole-machine-crash durability, at a large cost per append.
 Record kinds (the ``"k"`` field):
 
   hdr — journal header: format version, backend label, admission config.
+  snap — compaction marker (immediately after ``hdr``): ``n`` transition
+        events have been folded away; ``sha`` is the chained hash over
+        them (see ``chain_hash``).  Replay regenerates those events from
+        the inputs and verifies the chain instead of comparing records.
   sub — a submit attempt: ``t, name, app, ok, reason`` (write-ahead).
   cxl — a cancel attempt: ``name, ok`` (write-ahead).
   adv — an advance request: ``until`` (float, or None = drain) (write-ahead).
   evt — one lifecycle transition from the event substrate:
-        ``e`` in {queued, launch, done, ckpt, requeue, migrate}, plus
-        ``t, job, node, g, end, f`` (write-behind).
+        ``e`` in {queued, launch, done, ckpt, requeue, migrate, fail,
+        retry, lost}, plus ``t, job, node, g, end, f`` (write-behind).
 
 Version history: v1 journaled transitions without the DVFS frequency
 level; v2 adds the ``f`` field to ``evt`` records so crash recovery
-replays chosen (count, frequency) actions bit-identically.
+replays chosen (count, frequency) actions bit-identically; v3 adds the
+fault-plane transition kinds (``fail``/``retry``/``lost``) and ``snap``
+compaction records.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 from typing import Dict, List, Optional
 
-JOURNAL_VERSION = 2
+JOURNAL_VERSION = 3
+
+
+def _canon(rec: Dict) -> str:
+    """The canonical serialization every journal byte goes through."""
+    return json.dumps(rec, separators=(",", ":"), sort_keys=True)
+
+
+def chain_hash(records: List[Dict], prev: str = "") -> str:
+    """Chained sha256 over canonical record serializations:
+    ``h_i = sha256(h_{i-1} + canon(rec_i))``, seeded by ``prev`` (empty
+    for a chain starting at the journal's origin).  Sequential chaining
+    makes compaction associative: a second snapshot continues the first
+    snapshot's chain over the events journaled since, and the result is
+    identical to one chain over the full event stream."""
+    h = prev
+    for rec in records:
+        h = hashlib.sha256((h + _canon(rec)).encode()).hexdigest()
+    return h
 
 
 class JournalError(RuntimeError):
@@ -56,11 +81,48 @@ class Journal:
         self._f = open(path, "a", encoding="utf-8")
 
     def append(self, rec: Dict) -> None:
-        self._f.write(json.dumps(rec, separators=(",", ":"), sort_keys=True))
+        self._f.write(_canon(rec))
         self._f.write("\n")
         self._f.flush()
         if self.fsync:
             os.fsync(self._f.fileno())
+
+    def snapshot(self) -> int:
+        """Compact the journal in place: fold every ``evt`` record into a
+        ``snap`` marker (count + chained hash), keeping the header and all
+        input records verbatim.  Replay still regenerates the folded
+        events deterministically from the inputs; the chain lets recovery
+        verify them without storing them.  Crash-safe: the compacted file
+        is written beside the journal, fsynced, and atomically renamed
+        over it — a kill at any point leaves either the old or the new
+        journal, never a mix.  Returns the number of events folded."""
+        self.close()
+        records = Journal.read(self.path)
+        if not records or records[0].get("k") != "hdr":
+            raise JournalError(f"{self.path}: cannot snapshot without a header")
+        hdr, body = records[0], records[1:]
+        prev_n, prev_sha = 0, ""
+        if body and body[0].get("k") == "snap":
+            prev_n = int(body[0]["n"])
+            prev_sha = str(body[0]["sha"])
+            body = body[1:]
+        evts = [r for r in body if r.get("k") == "evt"]
+        keep = [r for r in body if r.get("k") != "evt"]
+        snap = {
+            "k": "snap",
+            "n": prev_n + len(evts),
+            "sha": chain_hash(evts, prev_sha),
+        }
+        tmp = self.path + ".tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            for rec in [hdr, snap] + keep:
+                f.write(_canon(rec))
+                f.write("\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)
+        self._f = open(self.path, "a", encoding="utf-8")
+        return len(evts)
 
     def close(self) -> None:
         if not self._f.closed:

@@ -45,9 +45,39 @@ class PlacementState:
         self.domains = domains
         self.free = [True] * units
         self.domain_jobs = [0] * domains  # jobs homed in each domain
+        # fault plane (ISSUE 8): units lost to a node failure.  A dead
+        # unit reads as occupied (free[u] = False), so allocation, the
+        # contiguity scan, free_count() and therefore the idle-energy
+        # integral all exclude it without touching any other code path.
+        self.dead = [False] * units
+        self._dead_n = 0
 
     def free_count(self) -> int:
         return sum(self.free)
+
+    def dead_count(self) -> int:
+        return self._dead_n
+
+    def alive_units(self) -> int:
+        return self.units - self._dead_n
+
+    def mark_dead(self, ids) -> None:
+        """Take failed units out of service.  The caller kills (and
+        thereby frees) any job occupying them first."""
+        for u in ids:
+            assert self.free[u], f"unit {u} still occupied at failure"
+            assert not self.dead[u], f"unit {u} already dead"
+            self.free[u] = False
+            self.dead[u] = True
+            self._dead_n += 1
+
+    def revive(self, ids) -> None:
+        """Repaired units return to the free pool."""
+        for u in ids:
+            assert self.dead[u], f"unit {u} was not dead"
+            self.dead[u] = False
+            self.free[u] = True
+            self._dead_n -= 1
 
     def occupied_domains(self) -> int:
         return sum(1 for c in self.domain_jobs if c)

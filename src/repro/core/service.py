@@ -12,8 +12,10 @@ Layers:
 
   * **state machine** — ``SUBMITTED → {ADMITTED, FAILED}``, ``ADMITTED →
     {QUEUED, CANCELLED}``, ``QUEUED → {RUNNING, MIGRATING, CANCELLED}``,
-    ``RUNNING → {DONE, PREEMPTED, FAILED}``, ``PREEMPTED/MIGRATING →
-    QUEUED``; ``DONE``/``CANCELLED``/``FAILED`` are terminal.  Any other
+    ``RUNNING → {DONE, PREEMPTED, FAILED, FAILED_RETRYING}``,
+    ``PREEMPTED/MIGRATING → QUEUED``, ``FAILED_RETRYING → {QUEUED,
+    FAILED}`` (the fault plane's crash-retry leg, repro.core.faults);
+    ``DONE``/``CANCELLED``/``FAILED`` are terminal.  Any other
     transition raises ``IllegalTransition`` — a lifecycle bug must never
     be absorbed silently.
   * **admission control** — ``AdmissionGate`` observes every submit
@@ -56,8 +58,14 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.arrivals import ArrivalRateEWMA
 from repro.core.cluster import Cluster, ClusterRun
 from repro.core.events import ElasticConfig
+from repro.core.faults import FaultConfig
 from repro.core.forecast import ForecastConfig
-from repro.core.journal import JOURNAL_VERSION, Journal, JournalError
+from repro.core.journal import (
+    JOURNAL_VERSION,
+    Journal,
+    JournalError,
+    chain_hash,
+)
 
 # --------------------------------------------------------------------------
 # Job lifecycle state machine
@@ -69,22 +77,24 @@ QUEUED = "QUEUED"
 RUNNING = "RUNNING"
 PREEMPTED = "PREEMPTED"
 MIGRATING = "MIGRATING"
+FAILED_RETRYING = "FAILED_RETRYING"
 DONE = "DONE"
 CANCELLED = "CANCELLED"
 FAILED = "FAILED"
 
 JOB_STATES = (
     SUBMITTED, ADMITTED, QUEUED, RUNNING, PREEMPTED, MIGRATING,
-    DONE, CANCELLED, FAILED,
+    FAILED_RETRYING, DONE, CANCELLED, FAILED,
 )
 
 TRANSITIONS: Dict[str, frozenset] = {
     SUBMITTED: frozenset({ADMITTED, FAILED}),
     ADMITTED: frozenset({QUEUED, CANCELLED}),
     QUEUED: frozenset({RUNNING, MIGRATING, CANCELLED}),
-    RUNNING: frozenset({DONE, PREEMPTED, FAILED}),
+    RUNNING: frozenset({DONE, PREEMPTED, FAILED, FAILED_RETRYING}),
     PREEMPTED: frozenset({QUEUED}),
     MIGRATING: frozenset({QUEUED}),
+    FAILED_RETRYING: frozenset({QUEUED, FAILED}),
     DONE: frozenset(),
     CANCELLED: frozenset(),
     FAILED: frozenset(),
@@ -98,10 +108,13 @@ _EVENT_STATE = {
     "ckpt": PREEMPTED,
     "requeue": QUEUED,
     "migrate": MIGRATING,
+    "fail": FAILED_RETRYING,
+    "retry": QUEUED,
+    "lost": FAILED,
 }
 
 # states that count against the pending-queue admission cap
-_PENDING = frozenset({ADMITTED, QUEUED, PREEMPTED, MIGRATING})
+_PENDING = frozenset({ADMITTED, QUEUED, PREEMPTED, MIGRATING, FAILED_RETRYING})
 
 
 class IllegalTransition(ValueError):
@@ -230,6 +243,7 @@ class ClusterBackend:
         apps: Optional[Sequence[str]] = None,
         elastic: Optional[ElasticConfig] = None,
         forecast: Optional[ForecastConfig] = None,
+        faults: Optional[FaultConfig] = None,
         fast_status: bool = True,
     ):
         if apps is None:
@@ -237,10 +251,12 @@ class ClusterBackend:
                 {app for s in cluster.specs for app in cluster.truth_for(s)}
             )
         self._cb: Optional[Callable] = None
+        self.faults = faults if (faults is not None and faults.enabled) else None
         self.run: ClusterRun = cluster.open_run(
             apps=apps,
             elastic=elastic,
             forecast=forecast,
+            faults=faults,
             fast_status=fast_status,
             on_transition=self._emit,
         )
@@ -281,11 +297,19 @@ class ClusterBackend:
             default=1,
         )
         suffix = f"/f{levels}" if levels > 1 else ""
-        return f"cluster[{nodes}]/{self.run.dispatcher.name()}{suffix}"
+        # the fault timeline is part of the backend identity: a journal
+        # written with failures injected must not replay fault-free
+        fsuffix = (
+            f"/faults:{self.faults.signature()}" if self.faults is not None else ""
+        )
+        return f"cluster[{nodes}]/{self.run.dispatcher.name()}{suffix}{fsuffix}"
 
     def can_run(self, app: str) -> bool:
+        # admission consults *healthy* capacity: whether an app is
+        # schedulable at all must not flap with transient node failures
+        # (and replayed submit decisions must be time-independent)
         ai = self.run.state.app_index.get(app)
-        return ai is not None and bool(self.run.state.fits[:, ai].any())
+        return ai is not None and bool(self.run._fits_healthy[:, ai].any())
 
     def submit(self, name: str, app: str, t: float) -> None:
         self.run.submit(name, app, t)
@@ -396,6 +420,8 @@ class SchedulerService:
             info.node = node
         if event == "launch":
             info.launches += 1
+        elif event == "lost":
+            info.reason = "retries exhausted"
 
     # -- operations (each journals write-ahead, then applies) ----------------
 
@@ -511,6 +537,17 @@ class SchedulerService:
             "journal": self.journal.path if self.journal else "",
         }
 
+    def compact(self) -> Dict:
+        """Fold the journaled transition events into a snapshot record
+        (``Journal.snapshot``): bounds journal growth for long-running
+        daemons while keeping crash recovery bit-identical — replay still
+        regenerates every folded event and verifies the snapshot's chained
+        hash."""
+        if self.journal is None:
+            return {"ok": False, "error": "no journal configured"}
+        folded = self.journal.snapshot()
+        return {"ok": True, "folded": folded, "journal": self.journal.path}
+
     def result(self) -> Dict:
         """Final schedule fingerprint; only meaningful after a full drain
         (``advance`` with no bound).  The keyed record list is the
@@ -550,13 +587,20 @@ class SchedulerService:
                 f"{hdr.get('backend')!r}, this daemon runs "
                 f"{self.backend.describe()!r}"
             )
+        # a snap record (journal compaction) folds the first ``n``
+        # transition events into a chained hash; replay regenerates them
+        # and verifies the chain instead of comparing records
+        snap_n, snap_sha = 0, ""
+        if len(records) > 1 and records[1].get("k") == "snap":
+            snap_n = int(records[1]["n"])
+            snap_sha = str(records[1]["sha"])
         journaled = [r for r in records if r.get("k") == "evt"]
         self._replaying = True
         self._regen = []
         try:
             for rec in records[1:]:
                 k = rec.get("k")
-                if k == "evt":
+                if k in ("evt", "snap"):
                     continue
                 elif k == "sub":
                     t = float(rec["t"])
@@ -589,18 +633,26 @@ class SchedulerService:
             self._replaying = False
         regen = self._regen
         self._regen = []
-        if len(journaled) > len(regen) or regen[: len(journaled)] != journaled:
+        seen = snap_n + len(journaled)
+        if len(regen) < snap_n or chain_hash(regen[:snap_n]) != snap_sha:
+            raise RecoveryError(
+                f"{journal_path}: replay diverged from the snapshot chain "
+                f"({snap_n} compacted transitions)"
+            )
+        if len(journaled) > len(regen) - snap_n or (
+            regen[snap_n:seen] != journaled
+        ):
             raise RecoveryError(
                 f"{journal_path}: replay diverged from the journaled "
                 f"transitions ({len(journaled)} journaled, "
-                f"{len(regen)} regenerated)"
+                f"{len(regen) - snap_n} regenerated past the snapshot)"
             )
         # the journal verified: amputate any torn tail, reopen for append,
         # and complete the redo — transitions the crash lost are
         # regenerated deterministically
         Journal.repair(journal_path, records)
         self.journal = Journal(journal_path)
-        for rec in regen[len(journaled):]:
+        for rec in regen[seen:]:
             self.journal.append(rec)
 
     # -- request dispatch (the wire protocol) --------------------------------
@@ -628,6 +680,8 @@ class SchedulerService:
                 return self.advance(None)
             if op == "stats":
                 return self.stats()
+            if op == "compact":
+                return self.compact()
             if op == "result":
                 return self.result()
             if op == "ping":
@@ -648,11 +702,24 @@ class SchedulerService:
 # --------------------------------------------------------------------------
 
 
-def serve(service: SchedulerService, sock_path: str) -> None:
+# longest request line the daemon will parse; anything beyond is
+# answered with an error and drained, never buffered without bound
+MAX_LINE = 1 << 20
+
+
+def serve(
+    service: SchedulerService, sock_path: str, *, read_timeout: float = 30.0
+) -> None:
     """Serve ``service`` over a unix-domain socket until a ``shutdown``
     request (or KeyboardInterrupt).  One request line -> one response
     line; connections are handled strictly sequentially, which is what
-    keeps the journal a total order of inputs."""
+    keeps the journal a total order of inputs.
+
+    Hardened against misbehaving clients: malformed JSON and oversized
+    lines (> ``MAX_LINE`` bytes) get an error response instead of killing
+    the connection loop, and a client that connects but never sends a
+    full line is dropped after ``read_timeout`` seconds — a stuck client
+    must not wedge the (sequential) daemon forever."""
     import json
 
     if os.path.exists(sock_path):
@@ -664,24 +731,44 @@ def serve(service: SchedulerService, sock_path: str) -> None:
         stop = False
         while not stop:
             conn, _ = srv.accept()
-            with conn:
-                rfile = conn.makefile("r", encoding="utf-8")
-                for line in rfile:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    try:
-                        req = json.loads(line)
-                    except ValueError:
-                        resp = {"ok": False, "error": "malformed JSON request"}
-                    else:
-                        resp = service.handle(req)
-                    conn.sendall(
-                        (json.dumps(resp, sort_keys=True) + "\n").encode()
-                    )
-                    if resp.get("shutdown"):
-                        stop = True
-                        break
+            try:
+                with conn:
+                    conn.settimeout(read_timeout)
+                    rfile = conn.makefile("r", encoding="utf-8")
+                    while True:
+                        line = rfile.readline(MAX_LINE + 1)
+                        if not line:
+                            break
+                        if len(line) > MAX_LINE:
+                            # drain the rest of the oversized line so the
+                            # stream stays framed, then reject it
+                            while line and not line.endswith("\n"):
+                                line = rfile.readline(MAX_LINE + 1)
+                            resp = {"ok": False, "error": "request too large"}
+                            conn.sendall(
+                                (json.dumps(resp, sort_keys=True) + "\n").encode()
+                            )
+                            continue
+                        line = line.strip()
+                        if not line:
+                            continue
+                        try:
+                            req = json.loads(line)
+                        except ValueError:
+                            resp = {"ok": False, "error": "malformed JSON request"}
+                        else:
+                            resp = service.handle(req)
+                        conn.sendall(
+                            (json.dumps(resp, sort_keys=True) + "\n").encode()
+                        )
+                        if resp.get("shutdown"):
+                            stop = True
+                            break
+            except OSError:
+                # read timeout, reset, broken pipe: drop this client and
+                # keep accepting — one bad connection must not take the
+                # daemon down
+                continue
     except KeyboardInterrupt:
         pass
     finally:
@@ -709,3 +796,31 @@ def request(sock_path: str, req: Dict, *, timeout: float = 30.0) -> Dict:
     if not buf:
         raise ConnectionError(f"no response from daemon at {sock_path}")
     return json.loads(buf.decode())
+
+
+def request_retry(
+    sock_path: str,
+    req: Dict,
+    *,
+    retries: int = 5,
+    base: float = 0.1,
+    timeout: float = 30.0,
+) -> Dict:
+    """``request`` with capped exponential backoff + jitter on the
+    transient failure modes of a daemon that is starting up, recovering
+    from a crash, or briefly wedged: connection refused, socket file not
+    there yet, read timeout.  Application-level errors (an ``ok: False``
+    response) are returned, not retried — the daemon answered.  The last
+    attempt re-raises."""
+    import random
+    import time
+
+    for attempt in range(retries + 1):
+        try:
+            return request(sock_path, req, timeout=timeout)
+        except (ConnectionRefusedError, FileNotFoundError, TimeoutError):
+            if attempt == retries:
+                raise
+            delay = base * (2.0 ** attempt)
+            time.sleep(delay * (0.5 + random.random() / 2.0))
+    raise AssertionError("unreachable")  # pragma: no cover

@@ -31,6 +31,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.events import EVT_ARRIVAL, ElasticConfig, EventLoop
+from repro.core.faults import FaultConfig, FaultInjector
 from repro.core.placement import PlacementState
 from repro.core.types import (
     JobProfile,
@@ -91,6 +92,8 @@ class NodeSim:
         slowdown_model=None,
         name: str = "",
         elastic: Optional[ElasticConfig] = None,
+        faults: Optional[FaultConfig] = None,
+        fault_injector: Optional[FaultInjector] = None,
     ):
         self.node = node
         self.truth = truth
@@ -98,6 +101,18 @@ class NodeSim:
         self.slowdown_model = slowdown_model
         self.name = name
         self.elastic = elastic
+        self.faults = faults if (faults and faults.enabled) else None
+        self.fault_injector = (
+            fault_injector if self.faults is not None else None
+        )
+        # segment/progress tracking is needed by both planes; the restart
+        # overhead after a kill comes from whichever config supplies one
+        self._track = elastic is not None or self.faults is not None
+        self._restart_time = (
+            elastic.restart_time
+            if elastic is not None
+            else (self.faults.restart_time if self.faults is not None else 0.0)
+        )
         self.placement = PlacementState(node.units, node.domains)
         self.waiting: List[str] = []
         self.running: List[RunningJob] = []
@@ -122,6 +137,12 @@ class NodeSim:
         self._last_f: Dict[str, int] = {}
         self._segments: Dict[str, int] = {}
         self._queued_at: Dict[str, float] = {}  # last (re-)enqueue time
+        # fault-plane accounting (inert unless the substrate drives it)
+        self.job_crashes = 0
+        self.node_failures = 0
+        self.fault_kills = 0
+        self.fault_retries = 0
+        self.lost: List[str] = []
 
     def node_view(self) -> NodeView:
         return NodeView(
@@ -132,6 +153,7 @@ class NodeSim:
             running=list(self.running),
             free_map=list(self.placement.free),
             domain_jobs=list(self.placement.domain_jobs),
+            dead_units=self.placement.dead_count(),
         )
 
     def advance(self, t: float) -> None:
@@ -199,11 +221,11 @@ class NodeSim:
             frac0 = 0.0
             restart = 0.0
             segment = 0
-            if self.elastic is not None:
+            if self._track:
                 frac0 = self.progress.pop(ln.job, 0.0)
                 if ln.job in self.needs_restart:
                     self.needs_restart.discard(ln.job)
-                    restart = self.elastic.restart_time
+                    restart = self._restart_time
                 segment = self._segments.get(ln.job, 0)
                 self._segments[ln.job] = segment + 1
                 last = self._last_g.get(ln.job)
@@ -220,6 +242,9 @@ class NodeSim:
                     )
                 self._last_g[ln.job] = ln.g
                 self._last_f[ln.job] = ln.f
+            if self.fault_injector is not None:
+                # seeded per-(job, segment) straggler slowdown (>= 1.0)
+                factor *= self.fault_injector.straggler(ln.job, segment)
             solo = prof.runtime_at(ln.g, ln.f)
             if frac0 == 0.0 and restart == 0.0:
                 dur = solo * factor
@@ -292,6 +317,46 @@ class NodeSim:
         self.advance(t)
         self._queued_at[job] = t
         self.waiting.append(job)
+
+    # -- fault plane (repro.core.events / repro.core.faults) ----------------
+
+    def fail_running(self, rj: RunningJob, t: float) -> None:
+        """A crash or node failure kills a job mid-flight at ``t``: the
+        pre-charged energy of the unrun tail is refunded (the burned
+        segment stays charged — that work *was* done, then lost), its
+        units free immediately, and the job rolls back to its last
+        checkpoint (``frac0``) with a restart obligation.  The caller
+        decides retry-or-lost and owns the clock advance ordering."""
+        assert rj in self.running
+        self.advance(t)
+        rec = rj.record
+        if rj.preempted:
+            # killed mid-checkpoint-write: the partial write is useless,
+            # so refund its unwritten tail and fall back to the fraction
+            # at the segment start (the write's snapshot never landed)
+            scale = self.elastic.ckpt_power_scale if self.elastic else 1.0
+            refund = rj.power * scale * (rj.end - t)
+            self.ckpt_energy -= refund
+            rec.ckpt_energy -= refund
+        else:
+            refund = rj.power * (rj.end - t)
+        self.busy_energy -= refund
+        rec.busy_energy -= refund
+        rec.end = t
+        rec.kind = "fail"
+        rj.failed = True
+        rj.end = t
+        self.running.remove(rj)
+        self.placement.release(rj.units, rj.domain)
+        self.progress[rj.job] = rj.frac0
+        self.needs_restart.add(rj.job)
+        self.fault_kills += 1
+
+    def drop_lost(self, job: str) -> None:
+        """Retries exhausted: the job leaves the system for good."""
+        self.progress.pop(job, None)
+        self.needs_restart.discard(job)
+        self.lost.append(job)
 
     def cancel_waiting(self, job: str) -> None:
         """Drop a waiting job that has never launched (control-plane
@@ -379,6 +444,11 @@ class NodeSim:
             ckpt_energy=self.ckpt_energy,
             resize_history=self.resize_history,
             freq_history=self.freq_history,
+            job_crashes=self.job_crashes,
+            node_failures=self.node_failures,
+            fault_kills=self.fault_kills,
+            fault_retries=self.fault_retries,
+            lost_jobs=list(self.lost),
         )
 
 
@@ -402,6 +472,7 @@ def simulate(
     max_events: Optional[int] = None,
     elastic: Optional[ElasticConfig] = None,
     forecast=None,
+    faults: Optional[FaultConfig] = None,
 ) -> ScheduleResult:
     """Run ``policy`` over the workload; returns exact energy/makespan.
 
@@ -427,6 +498,11 @@ def simulate(
     and migration are cluster-level and stay inert here.  ``None`` (or an
     all-off config) never builds a plane — bit-identical schedules.
 
+    ``faults`` — optional ``FaultConfig`` (repro.core.faults): seeded
+    node failures, job crashes, and stragglers with checkpoint-rollback
+    recovery and capped-backoff retries; ``None`` (or an all-off config)
+    rides the exact pre-fault loop bit-identically.
+
     ``max_events`` defaults to ``max(100_000, 50·|stream|)`` so large
     sweeps never false-trip the deadlock guard.
     """
@@ -442,8 +518,11 @@ def simulate(
     if max_events is None:
         max_events = _auto_max_events(len(stream))
 
+    injector = (
+        FaultInjector(faults) if faults is not None and faults.enabled else None
+    )
     sim = NodeSim(node, truth, policy, slowdown_model=slowdown_model,
-                  elastic=elastic)
+                  elastic=elastic, faults=faults, fault_injector=injector)
 
     # forecast plane (ISSUE 5): never built on the default path, so
     # forecast=None rides the exact pre-forecast loop
@@ -467,6 +546,8 @@ def simulate(
         max_events=max_events,
         cap_msg="simulator event cap exceeded (policy deadlock?)",
         elastic=elastic,
+        faults=faults,
+        fault_injector=injector,
         on_launch=(plane.on_launch if plane is not None else None),
         on_complete=(plane.on_complete if plane is not None else None),
     )

@@ -130,6 +130,7 @@ class RunningJob:
     frac0: float = 0.0  # work fraction completed before this segment
     restart: float = 0.0  # restart overhead charged at this segment's start
     preempted: bool = False  # a PREEMPT event supersedes this job's COMPLETE
+    failed: bool = False  # killed by a fault; COMPLETE/PREEMPT become stale
     frac_ckpt: float = 0.0  # work fraction frozen at the checkpoint decision
     record: Optional["JobRecord"] = field(default=None, compare=False, repr=False)
 
@@ -154,6 +155,12 @@ class NodeView:
     running: List[RunningJob]
     free_map: List[bool] = field(default_factory=list)  # per-unit freedom
     domain_jobs: List[int] = field(default_factory=list)  # per-domain occupancy
+    dead_units: int = 0  # units lost to a node failure (fault plane)
+
+    @property
+    def alive_units(self) -> int:
+        """Schedulable capacity: Eq. (1)'s M on a degraded node."""
+        return self.total_units - self.dead_units
 
     @property
     def occupied_domains(self) -> int:
@@ -180,7 +187,7 @@ class JobRecord:
     node: str = ""  # cluster node id; "" for single-node simulate()
     domain: int = -1  # isolation domain the job was homed in (-1 = unknown)
     segment: int = 0  # run segment index (a preempted job has several)
-    kind: str = "run"  # "run" = ran to completion, "ckpt" = checkpointed
+    kind: str = "run"  # "run" = completed, "ckpt" = checkpointed, "fail" = killed
     ckpt_energy: float = 0.0  # checkpoint-write energy inside busy_energy
     queued: float = 0.0  # when this segment entered a waiting queue
     f: int = 0  # DVFS frequency level the segment ran at
@@ -219,6 +226,12 @@ class ScheduleResult:
     # run had no plane): final rate estimates, burst-gate state/flips,
     # migrations vetoed by the risk penalty, posterior feed counts
     forecast: Dict[str, float] = field(default_factory=dict)
+    # fault-plane accounting (repro.core.faults; all zero without faults)
+    job_crashes: int = 0  # JOB_FAIL kills on this node
+    node_failures: int = 0  # NODE_FAIL events this node suffered
+    fault_kills: int = 0  # jobs killed mid-flight (crashes + node failures)
+    fault_retries: int = 0  # backoff retries queued from this node
+    lost_jobs: List[str] = field(default_factory=list)  # retries exhausted
 
     @property
     def total_energy(self) -> float:
@@ -306,6 +319,28 @@ class ClusterResult:
     @property
     def ckpt_energy(self) -> float:
         return sum(r.ckpt_energy for r in self.per_node.values())
+
+    @property
+    def job_crashes(self) -> int:
+        return sum(r.job_crashes for r in self.per_node.values())
+
+    @property
+    def node_failures(self) -> int:
+        return sum(r.node_failures for r in self.per_node.values())
+
+    @property
+    def fault_kills(self) -> int:
+        return sum(r.fault_kills for r in self.per_node.values())
+
+    @property
+    def fault_retries(self) -> int:
+        return sum(r.fault_retries for r in self.per_node.values())
+
+    @property
+    def lost_jobs(self) -> List[str]:
+        return sorted(
+            j for r in self.per_node.values() for j in r.lost_jobs
+        )
 
     @property
     def records(self) -> List[JobRecord]:

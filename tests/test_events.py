@@ -450,3 +450,66 @@ def test_route_indexed_dispatcher_does_not_warn():
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         _mig_cluster().simulate(MIG_STREAM)  # must not raise
+
+
+# ---------------------------------------------------------------------------
+# Cancel races against in-flight elastic transitions (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_during_migration_transit_is_refused():
+    """Between the donor's evict and the receiver's absorb the job exists
+    only as an in-flight MIGRATE event; a cancel there must be refused
+    and the migration must land untouched."""
+    cfg = ElasticConfig(migrate=True, migration_delay=10.0, min_gain_s=60.0)
+
+    def drive(cancel_at=None):
+        run = _mig_cluster().open_run(apps=["L", "S"], elastic=cfg)
+        for a in MIG_STREAM:
+            run.submit(a.name, a.app, a.t)
+        if cancel_at is not None:
+            run.run_until(cancel_at)
+            assert run.cancel("L#2") is False  # mid-transit: refused
+        run.run_to_completion()
+        return run.finalize()
+
+    res = drive(cancel_at=405.0)  # n1 drains at 400, L#2 lands at 410
+    ctrl = drive()
+    assert res.migrations == 1
+    moved = next(r for r in res.records if r.job == "L#2")
+    assert moved.node == "n1" and moved.start == pytest.approx(410.0)
+    assert [(r.job, r.node, r.start, r.end) for r in res.records] == [
+        (r.job, r.node, r.start, r.end) for r in ctrl.records
+    ]
+
+
+def test_cancel_during_checkpoint_write_is_refused():
+    """While a resize checkpoint is being written the job is neither
+    waiting nor done; cancel must refuse, and the relaunch must proceed
+    exactly as if nobody had asked."""
+    cfg = ElasticConfig(resize=True, ckpt_time=30.0, restart_time=15.0,
+                        min_gain_s=60.0)
+
+    def cluster():
+        return Cluster(
+            [NodeSpec("n0", H100)],
+            truth_for=lambda s: AB_TRUTH,
+            policy_for=lambda s, t: _eco_ab(),
+            dispatcher=RoundRobinDispatcher(),
+        )
+
+    def drive(cancel_at=None):
+        run = cluster().open_run(apps=["A", "B"], elastic=cfg)
+        run.submit("A", "A", 0.0)
+        run.submit("B", "B", 0.0)
+        if cancel_at is not None:
+            run.run_until(cancel_at)
+            assert run.cancel("A") is False  # mid-ckpt-write: refused
+        run.run_to_completion()
+        return run.finalize()
+
+    res = drive(cancel_at=615.0)  # ckpt write spans 600 -> 630
+    ctrl = drive()
+    segs = [(r.job, r.g, r.kind, r.start, r.end) for r in res.records]
+    assert ("A", 2, "ckpt", 0.0, 630.0) in segs
+    assert segs == [(r.job, r.g, r.kind, r.start, r.end) for r in ctrl.records]

@@ -57,7 +57,7 @@ def fp_records(records) -> str:
     return hashlib.md5(s.encode()).hexdigest()
 
 
-def _run(system: str, freq_levels: int | None = None):
+def _run(system: str, freq_levels: int | None = None, lam_f: float = 0.0):
     """The golden single-node workload on one calibrated system."""
     truth = (
         C.build_system(system)
@@ -66,7 +66,8 @@ def _run(system: str, freq_levels: int | None = None):
     )
     node = Node(4, 2, C.idle_power(system))
     pol = EcoSched(
-        ProfiledPerfModel(truth, noise=NOISE, seed=SEED), lam=LAM, tau=TAU
+        ProfiledPerfModel(truth, noise=NOISE, seed=SEED),
+        lam=LAM, tau=TAU, lam_f=lam_f,
     )
     return simulate(
         pol,
@@ -95,6 +96,57 @@ def _parity(csv: Csv, verbose: bool) -> None:
     if verbose:
         print("dvfs parity: freq_levels=1 == count-only == PR 6 golden")
     csv.add("dvfs_parity", us, "freq-off bit-identical to PR 6")
+
+
+# λ_f sensitivity sweep (ISSUE 9 satellite): how hard the DVFS
+# conservatism weight pushes the joint argmin back toward base clock.
+# 0.0 is the purely energy-driven default the gates above run at.
+LAM_F_VALUES = (0.0, 0.1, 0.3)
+
+
+def lam_f_sweep(csv: Csv, verbose: bool = True, values=LAM_F_VALUES):
+    """EDP/energy deltas vs the ``lam_f=0.0`` joint baseline, per system.
+
+    A positive λ_f penalizes the mean frequency level of an action, so
+    rising values monotonically shrink the downclocked-launch count; the
+    sweep records what that conservatism costs (or buys) in EDP."""
+    rows = []
+    for system in SYSTEMS:
+        levels = len(CHIPS[system].freq_ratios)
+        t0 = time.perf_counter()
+        runs = {v: _run(system, freq_levels=levels, lam_f=v) for v in values}
+        us = (time.perf_counter() - t0) * 1e6
+        base = runs[values[0]]
+        for v in values:
+            r = runs[v]
+            down = int(sum(rec.f > 0 for rec in r.records))
+            rows.append(
+                {
+                    "system": system,
+                    "lam_f": v,
+                    "edp": r.edp,
+                    "edp_delta_pct": 100.0 * (r.edp / base.edp - 1.0),
+                    "energy": r.total_energy,
+                    "energy_delta_pct": 100.0
+                    * (r.total_energy / base.total_energy - 1.0),
+                    "downclocked_launches": down,
+                }
+            )
+        if verbose:
+            parts = ", ".join(
+                f"lam_f={v}: EDP{100 * (runs[v].edp / base.edp - 1):+.2f}% "
+                f"down={int(sum(rec.f > 0 for rec in runs[v].records))}"
+                for v in values
+            )
+            print(f"dvfs lam_f sweep {system}: {parts}")
+        csv.add(
+            f"dvfs_lamf_{system}", us,
+            ";".join(
+                f"lamf{v}={100 * (runs[v].edp / base.edp - 1):+.2f}%"
+                for v in values
+            ),
+        )
+    return rows
 
 
 def run(csv: Csv, verbose: bool = True, smoke: bool = False):
@@ -160,6 +212,7 @@ def run(csv: Csv, verbose: bool = True, smoke: bool = False):
         f"joint (count, frequency) EcoSched must match or beat count-only "
         f"EDP on >= 2/3 calibrated systems, got {wins}"
     )
+    snapshot["lam_f_sweep"] = lam_f_sweep(csv, verbose)
     return snapshot
 
 
@@ -200,9 +253,17 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument(
+        "--lam-f-sweep", action="store_true",
+        help="run only the λ_f sensitivity sweep",
+    )
     ap.add_argument("--json", help="also write the BENCH_dvfs.json snapshot")
     args = ap.parse_args()
     c = Csv()
+    if args.lam_f_sweep:
+        lam_f_sweep(c)
+        c.emit()
+        raise SystemExit(0)
     snap = run(c, smoke=args.smoke)
     if args.json and not args.smoke:
         write_json(args.json, snap)

@@ -23,6 +23,7 @@ def main() -> None:
         bench_dvfs,
         bench_elastic,
         bench_faults,
+        bench_fleet,
         bench_forecast,
         bench_fig1_scaling,
         bench_fig2_tradeoff,
@@ -57,6 +58,7 @@ def main() -> None:
     forecast = bench_forecast.run(csv, verbose=verbose, smoke=args.quick)
     dvfs = bench_dvfs.run(csv, verbose=verbose, smoke=args.quick)
     throughput = bench_cluster_throughput.run(csv, verbose=verbose, smoke=args.quick)
+    fleet = bench_fleet.run(csv, verbose=verbose, smoke=args.quick)
     bench_service.run(csv, verbose=verbose, smoke=args.quick)
 
     # perf-trajectory snapshots (ISSUE 3/5): decision overhead + throughput,
@@ -78,10 +80,12 @@ def main() -> None:
             os.path.dirname(__file__), "BENCH_faults.json"
         )
         bench_faults.write_json(faults_path, faults)
+        fleet_path = os.path.join(os.path.dirname(__file__), "BENCH_fleet.json")
+        bench_fleet.write_json(fleet_path, fleet)
         if verbose:
             print(
                 f"perf baselines -> {json_path}, {forecast_path}, "
-                f"{dvfs_path}, {faults_path}"
+                f"{dvfs_path}, {faults_path}, {fleet_path}"
             )
 
     print("\nname,us_per_call,derived")

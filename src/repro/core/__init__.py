@@ -26,6 +26,8 @@ from repro.core.cluster import (
     ClusterRun,
     ClusterState,
     EnergyAwareDispatcher,
+    FleetIndex,
+    HierarchicalDispatcher,
     LeastLoadedDispatcher,
     NodeSpec,
     PredictiveDispatcher,
@@ -94,6 +96,8 @@ __all__ = [
     "EcoSched",
     "ElasticConfig",
     "EnergyAwareDispatcher",
+    "FleetIndex",
+    "HierarchicalDispatcher",
     "EventLoop",
     "EventQueue",
     "FaultConfig",

@@ -53,7 +53,7 @@ tests/test_decision_cache.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -105,19 +105,42 @@ class ClusterState:
         self.app_index = {a: i for i, a in enumerate(apps)}
         N, A = len(specs), len(apps)
         self.units = np.array([float(s.units) for s in specs])
+        # deterministic tie-break domain (ISSUE 9 satellite): dispatchers
+        # resolve score ties by *name rank*, not construction index, so a
+        # shuffled spec list yields the identical schedule.  order[r] is
+        # the node index at rank r; rank[i] inverts it.
+        self.order = np.array(
+            sorted(range(N), key=self.names.__getitem__), dtype=np.int64
+        )
+        self.rank = np.empty(N, dtype=np.int64)
+        self.rank[self.order] = np.arange(N, dtype=np.int64)
         self.fits = np.zeros((N, A), dtype=bool)
         self.min_unit_s = np.zeros((N, A))  # cheapest busy unit-seconds
         self.e_best = np.ones((N, A))  # min-energy mode: energy (J)
         self.t_best = np.ones((N, A))  # min-energy mode: runtime (s)
+        # fragmentation gauge (ISSUE 9, à la Lettich et al.): per-node
+        # free units, per-app largest-fitting-mode lookup over every
+        # possible free level, and the running Σ_i unusable_i(a) column —
+        # all updated incrementally so frag_now() is O(A) per event
+        self._cap = max((s.units for s in specs), default=1)
+        self.free = np.array([s.units for s in specs], dtype=np.int64)
+        self.usable = np.zeros((N, self._cap + 1, A), dtype=np.int64)
+        self.unusable = np.zeros(A)
+        self.wait_by_app = np.zeros(A, dtype=np.int64)
+        self.free_total = int(self.free.sum())
+        self._fleet: Optional["FleetIndex"] = None
         # kept for the fault plane's capacity refits (set_alive_units)
         self._specs = list(specs)
         self._app_truth = app_truth
         for i, s in enumerate(specs):
             self._fill_node(i, app_truth[s.name], s.units)
+        self.unusable[:] = (
+            self.free[:, None] - self.usable[np.arange(N), self.free]
+        ).sum(axis=0) if N else 0.0
         # in-place accumulators (launch/complete update these, not scans);
         # the counts let drained accumulators snap back to exactly 0.0 —
         # equal empty nodes must compare *equal*, not within float drift,
-        # or dispatcher index tie-breaks would depend on churn history
+        # or dispatcher name-rank tie-breaks would depend on churn history
         self.sum_end_g = np.zeros(N)  # Σ end·g over running jobs
         self.sum_g = np.zeros(N)  # Σ g over running jobs
         self.wait_units_s = np.zeros(N)  # Σ min-work over waiting jobs
@@ -133,6 +156,7 @@ class ClusterState:
             self.min_unit_s[i, j] = 0.0
             self.e_best[i, j] = 1.0
             self.t_best[i, j] = 1.0
+            self.usable[i, :, j] = 0
             prof = truth.get(a)
             if prof is None:
                 continue
@@ -140,6 +164,12 @@ class ClusterState:
             if not counts:
                 continue
             self.fits[i, j] = True
+            # largest feasible mode ≤ f, for every free level f — the
+            # fragmentation gauge's "usable GPUs" lookup (free − usable
+            # is what this app's pending jobs cannot occupy)
+            carr = np.asarray(sorted(counts))
+            idx = np.searchsorted(carr, np.arange(self._cap + 1), side="right")
+            self.usable[i, :, j] = np.where(idx > 0, carr[idx - 1], 0)
             # best modes over the joint (count, frequency) set; a
             # single-level profile reduces every *_at(g, 0) to the
             # count-only curves, so these cells are bit-identical to
@@ -162,15 +192,57 @@ class ClusterState:
         longer host.  ``alive == spec.units`` restores the physical
         tables bit-identically (same deterministic rebuild)."""
         spec = self._specs[ni]
+        # the usable table is about to be rebuilt under the new budget:
+        # retract this node's stale unusable contribution first, re-add
+        # it after (sync_free then corrects the free level itself once
+        # the caller reads the placement)
+        f = int(self.free[ni])
+        self.unusable -= f - self.usable[ni, f]
         self._fill_node(ni, self._app_truth[spec.name], alive)
+        self.unusable += f - self.usable[ni, f]
         # drain-proxy divisor: a degraded node spreads its backlog over
         # fewer units (max(1) keeps a fully-dead node's arithmetic finite
         # — its all-False fits row already blocks routing there)
         self.units[ni] = float(max(alive, 1))
+        if self._fleet is not None:
+            self._fleet.touch_caps(ni)
+
+    def attach_fleet(self, fleet: "FleetIndex") -> None:
+        """Hook a pod summary index into the bookkeeping updates: every
+        per-node mutation marks its pod dirty for a lazy re-aggregate."""
+        self._fleet = fleet
+
+    def sync_free(self, ni: int, free: int) -> None:
+        """Move node ``ni``'s free-unit level to ``free``, updating the
+        per-app Σ unusable column with one O(A) row delta.  Clamped to
+        [0, cap]: the gauge is observational, and synthetic drivers may
+        push the accumulators past physical capacity."""
+        f0 = int(self.free[ni])
+        f1 = min(max(int(free), 0), self._cap)
+        if f1 == f0:
+            return
+        self.unusable += (f1 - self.usable[ni, f1]) - (f0 - self.usable[ni, f0])
+        self.free_total += f1 - f0
+        self.free[ni] = f1
+
+    def frag_now(self) -> float:
+        """Unusable-GPU fraction given the pending mix (Lettich-style):
+        over pending jobs, the mean fraction of the fleet's free GPUs no
+        feasible mode of that job's app can occupy.  0.0 when nothing is
+        pending or nothing is free; 1.0 when every free GPU is stranded."""
+        wt = int(self.wait_by_app.sum())
+        if wt == 0 or self.free_total <= 0:
+            return 0.0
+        return float(self.wait_by_app @ self.unusable) / (
+            wt * self.free_total
+        )
 
     def on_arrive(self, ni: int, ai: int) -> None:
         self.wait_units_s[ni] += self.min_unit_s[ni, ai]
         self.n_waiting[ni] += 1
+        self.wait_by_app[ai] += 1
+        if self._fleet is not None:
+            self._fleet.touch(ni)
 
     def on_launch(self, ni: int, ai: int, end: float, g: int) -> None:
         self.wait_units_s[ni] -= self.min_unit_s[ni, ai]
@@ -180,6 +252,10 @@ class ClusterState:
         self.sum_end_g[ni] += end * g
         self.sum_g[ni] += g
         self.n_running[ni] += 1
+        self.wait_by_app[ai] -= 1
+        self.sync_free(ni, int(self.free[ni]) - g)
+        if self._fleet is not None:
+            self._fleet.touch(ni)
 
     def on_complete(self, ni: int, end: float, g: int) -> None:
         self.sum_end_g[ni] -= end * g
@@ -188,11 +264,16 @@ class ClusterState:
         if self.n_running[ni] == 0:
             self.sum_end_g[ni] = 0.0
             self.sum_g[ni] = 0.0
+        self.sync_free(ni, int(self.free[ni]) + g)
+        if self._fleet is not None:
+            self._fleet.touch(ni)
 
     def on_retime(self, ni: int, old_end: float, new_end: float, g: int) -> None:
         """A preemption moved a running job's end (checkpoint supersedes the
         original completion); keep Σ end·g consistent with the new end."""
         self.sum_end_g[ni] += (new_end - old_end) * g
+        if self._fleet is not None:
+            self._fleet.touch(ni)
 
     def on_migrate_out(self, ni: int, ai: int) -> None:
         """A waiting job left this node's queue (migration); inverse of
@@ -201,6 +282,9 @@ class ClusterState:
         self.n_waiting[ni] -= 1
         if self.n_waiting[ni] == 0:
             self.wait_units_s[ni] = 0.0
+        self.wait_by_app[ai] -= 1
+        if self._fleet is not None:
+            self._fleet.touch(ni)
 
     def outstanding(self, now: float) -> np.ndarray:
         """Per-node committed busy unit-seconds / units (drain proxy)."""
@@ -213,11 +297,32 @@ class ClusterState:
 # ``route_indexed(ai, state, now) -> node index`` is the single dispatch
 # protocol (returns -1 when no node fits).  The legacy ``route(arr,
 # statuses)`` list protocol was removed after its PR-4 deprecation cycle.
+#
+# Score ties break by *name rank* (ISSUE 9 satellite), never construction
+# index: two Cluster() calls over the same specs in different list orders
+# produce the identical schedule (tests/test_fleet.py locks this for every
+# built-in dispatcher).
 # ---------------------------------------------------------------------------
 
 
+def _node_order(state) -> np.ndarray:
+    """Name-rank node ordering; identity for bare states without one."""
+    order = getattr(state, "order", None)
+    if order is None:
+        order = np.arange(len(state.names))
+    return order
+
+
+def _rank_argmin(values: np.ndarray, state) -> int:
+    """Argmin over per-node values with ties broken by name rank."""
+    order = _node_order(state)
+    return int(order[int(np.argmin(values[order]))])
+
+
 class RoundRobinDispatcher:
-    """FIFO routing: cycle over nodes, skipping infeasible ones."""
+    """FIFO routing: cycle over nodes in name order, skipping infeasible
+    ones.  The pointer indexes *ranks*, so the cycle is independent of
+    spec construction order."""
 
     def __init__(self):
         self._i = 0
@@ -230,13 +335,14 @@ class RoundRobinDispatcher:
 
     def route_indexed(self, ai: int, state: ClusterState, now: float) -> int:
         n = len(state.names)
-        order = (self._i + np.arange(n)) % n
-        hits = np.flatnonzero(state.fits[order, ai])
+        order = _node_order(state)
+        seq = order[(self._i + np.arange(n)) % n]
+        hits = np.flatnonzero(state.fits[seq, ai])
         if hits.size == 0:
             return -1
         k = int(hits[0])
         self._i = (self._i + k + 1) % n
-        return int(order[k])
+        return int(seq[k])
 
 
 class LeastLoadedDispatcher:
@@ -247,7 +353,7 @@ class LeastLoadedDispatcher:
 
     def route_indexed(self, ai: int, state: ClusterState, now: float) -> int:
         load = np.where(state.fits[:, ai], state.outstanding(now), np.inf)
-        i = int(np.argmin(load))  # ties -> lowest index, like the list scan
+        i = _rank_argmin(load, state)  # ties -> lowest name rank
         return i if state.fits[i, ai] else -1
 
 
@@ -294,7 +400,7 @@ class EnergyAwareDispatcher:
         score = np.where(
             state.fits[:, ai], e_best[:, ai] * (out + t) / t, np.inf
         )
-        i = int(np.argmin(score))  # ties -> lowest index, like the list scan
+        i = _rank_argmin(score, state)  # ties -> lowest name rank
         return i if state.fits[i, ai] else -1
 
 
@@ -324,14 +430,280 @@ class PredictiveDispatcher(EnergyAwareDispatcher):
         score = np.where(
             state.fits[:, ai], e_best[:, ai] * (wait + t) / t, np.inf
         )
-        i = int(np.argmin(score))  # ties -> lowest index
+        i = _rank_argmin(score, state)  # ties -> lowest name rank
         return i if state.fits[i, ai] else -1
 
 
 # ---------------------------------------------------------------------------
-# Cluster event loop — the shared substrate (repro.core.events) with
-# dispatch, array-state bookkeeping and migration layered on top of NodeSim
+# Fleet hierarchy (ISSUE 9): region → pod → node routing at 100–1000+ nodes
 # ---------------------------------------------------------------------------
+
+
+class FleetIndex:
+    """Pod-level summary table over ``ClusterState`` (lazy, dirty-tracked).
+
+    Nodes are ordered by name rank and cut into contiguous pods of
+    ``pod_size``; pods group into regions of ``pods_per_region``.  Each
+    pod keeps the aggregates a router needs to *lower-bound* every
+    member's score without touching it:
+
+      - drain proxy pieces: min Σ end·g, max Σ g, min waiting min-work,
+        max alive units — combined into a valid per-pod lower bound on
+        ``outstanding(now)`` (min of sums ≥ sum of mins, and now ≥ 0);
+      - per-app feasibility (any member fits);
+      - per-app min best-mode energy E* and min E*/t* over fitting
+        members, giving  score_i = E*_i + (E*_i/t*_i)·out_i
+                                 ≥ Emin + EoTmin · out_lb.
+
+    ``ClusterState`` hooks mark the index dirty; ``refresh``
+    re-aggregates with a handful of vectorized ``reduceat`` passes over
+    the rank-ordered arrays (one memory sweep, no per-pod Python loop).
+    Load aggregates (Σ end·g, Σ g, waiting work) move on every
+    launch/complete and refresh often; the per-app capacity tables
+    (fits, E*, E*/t*, units) only move on capacity events
+    (``set_alive_units``) and refresh separately, so steady routing pays
+    three reduceats, not seven.
+    """
+
+    def __init__(self, state: ClusterState, pod_size: int = 16,
+                 pods_per_region: int = 8):
+        self.state = state
+        self.pod_size = int(pod_size)
+        N = len(state.names)
+        A = len(state.app_index)
+        P = max(1, -(-N // self.pod_size))
+        self.n_pods = P
+        self.pod_lo = np.arange(P, dtype=np.int64) * self.pod_size
+        self.pod_hi = np.minimum(self.pod_lo + self.pod_size, N)
+        self.pod_of = state.rank // self.pod_size  # node index -> pod
+        self.region_lo = np.arange(0, P, int(pods_per_region), dtype=np.int64)
+        self.amin = np.zeros(P)  # min Σ end·g
+        self.bmax = np.zeros(P)  # max Σ g
+        self.wmin = np.zeros(P)  # min waiting min-work
+        self.umax = np.ones(P)  # max alive units
+        self.pod_fits = np.zeros((P, A), dtype=bool)
+        self.emin = np.full((P, A), np.inf)
+        self.eot_min = np.full((P, A), np.inf)
+        self._load_dirty = True
+        self._caps_dirty = True
+
+    def touch(self, ni: int) -> None:
+        self._load_dirty = True
+
+    def touch_caps(self, ni: int) -> None:
+        """A capacity event (``set_alive_units``): fits/E*/units moved."""
+        self._load_dirty = True
+        self._caps_dirty = True
+
+    def refresh(self) -> None:
+        st = self.state
+        if len(st.order) == 0:
+            return
+        order, lo = st.order, self.pod_lo
+        if self._caps_dirty:
+            self.umax = np.maximum.reduceat(st.units[order], lo)
+            fit = st.fits[order]
+            self.pod_fits = np.logical_or.reduceat(fit, lo, axis=0)
+            self.emin = np.minimum.reduceat(
+                np.where(fit, st.e_best[order], np.inf), lo, axis=0
+            )
+            self.eot_min = np.minimum.reduceat(
+                np.where(fit, st.e_best[order] / st.t_best[order], np.inf),
+                lo, axis=0,
+            )
+            self._caps_dirty = False
+        if self._load_dirty:
+            self.amin = np.minimum.reduceat(st.sum_end_g[order], lo)
+            self.bmax = np.maximum.reduceat(st.sum_g[order], lo)
+            self.wmin = np.minimum.reduceat(st.wait_units_s[order], lo)
+            self._load_dirty = False
+
+    def out_lb(self, now: float) -> np.ndarray:
+        """Per-pod lower bound on every member's ``outstanding(now)``."""
+        return (
+            np.maximum(self.amin - now * self.bmax, 0.0) + self.wmin
+        ) / self.umax
+
+
+class HierarchicalDispatcher:
+    """Two-level routing wrapper: region → pod → node, schedule-exact.
+
+    Wraps a built-in dispatcher and reproduces its flat decision *bit for
+    bit* — the pod summaries only prune: regions and pods whose score
+    lower bound exceeds the best node found so far are skipped; surviving
+    pods are scanned with the inner dispatcher's own formula on array
+    slices (elementwise-identical IEEE ops), ties broken by name rank
+    exactly like the flat path.  Pruning is strict (a pod with
+    ``lb == best`` is still scanned), so equal-score ties can never be
+    lost to the hierarchy — bench_fleet.py locks flat-vs-hierarchical
+    schedule identity at 64/256/1024 nodes.
+
+    Falls back to the inner dispatcher's flat scan when the state is not
+    an array-backed ``ClusterState`` (the ``fast_status=False`` reference
+    view) or a forecast plane is attached (posterior tables mutate per
+    event; summaries would go stale).
+    """
+
+    def __init__(self, inner=None, *, pod_size: int = 16,
+                 pods_per_region: int = 8, flat_fallback: int = 4):
+        self.inner = inner if inner is not None else EnergyAwareDispatcher()
+        self.pod_size = int(pod_size)
+        self.pods_per_region = int(pods_per_region)
+        # surviving-pod count above which the scored path hands the
+        # arrival to the flat vectorized scan instead of per-pod Python
+        # scans (result is identical either way; this only bounds cost
+        # when the summaries fail to discriminate)
+        self.flat_fallback = int(flat_fallback)
+
+    def name(self) -> str:
+        return f"hier-{self.inner.name()}"
+
+    def reset(self) -> None:
+        if hasattr(self.inner, "reset"):
+            self.inner.reset()
+
+    def attach_forecast(self, plane: ForecastPlane) -> None:
+        if hasattr(self.inner, "attach_forecast"):
+            self.inner.attach_forecast(plane)
+
+    def _fleet(self, state: ClusterState) -> FleetIndex:
+        fleet = state._fleet
+        if (
+            fleet is None
+            or fleet.pod_size != self.pod_size
+            or fleet.state is not state
+        ):
+            fleet = FleetIndex(state, self.pod_size, self.pods_per_region)
+            state.attach_fleet(fleet)
+        return fleet
+
+    def route_indexed(self, ai: int, state, now: float) -> int:
+        inner = self.inner
+        if not isinstance(state, ClusterState) or (
+            getattr(inner, "_plane", None) is not None
+        ):
+            return inner.route_indexed(ai, state, now)
+        fleet = self._fleet(state)
+        fleet.refresh()
+        if isinstance(inner, RoundRobinDispatcher):
+            return self._route_rr(ai, state, fleet)
+        if isinstance(inner, (LeastLoadedDispatcher, EnergyAwareDispatcher)):
+            eco = isinstance(inner, EnergyAwareDispatcher)
+            return self._route_scored(ai, state, fleet, now, eco)
+        return inner.route_indexed(ai, state, now)
+
+    def _route_rr(self, ai: int, state: ClusterState, fleet: FleetIndex) -> int:
+        inner = self.inner
+        n = len(state.names)
+        if n == 0:
+            return -1
+        start = inner._i % n
+        P = fleet.n_pods
+        p0 = start // fleet.pod_size
+        # pods in cyclic order from the pointer's pod; the extra final
+        # step re-visits p0 for the ranks before the pointer (wrap)
+        for step in range(P + 1):
+            p = (p0 + step) % P
+            lo, hi = int(fleet.pod_lo[p]), int(fleet.pod_hi[p])
+            if step == 0:
+                lo = start
+            elif step == P:
+                hi = min(start, hi)
+            if lo >= hi or not fleet.pod_fits[p, ai]:
+                continue
+            nodes = state.order[lo:hi]
+            hits = np.flatnonzero(state.fits[nodes, ai])
+            if hits.size:
+                r = lo + int(hits[0])
+                inner._i = (r + 1) % n
+                return int(nodes[int(hits[0])])
+        return -1
+
+    def _route_scored(self, ai: int, state: ClusterState, fleet: FleetIndex,
+                      now: float, eco: bool) -> int:
+        out_lb = fleet.out_lb(now)
+        ok = fleet.pod_fits[:, ai]
+        lb = np.full(fleet.n_pods, np.inf)
+        if eco:
+            # inner._tables == state tables here (plane-attached runs
+            # already fell back to the flat scan); masked assignment keeps
+            # the no-fit pods' inf·0 bound from going NaN
+            e_best, t_best = self.inner._tables(state)
+            lb[ok] = (
+                fleet.emin[ok, ai] + fleet.eot_min[ok, ai] * out_lb[ok]
+            )
+        else:
+            lb[ok] = out_lb[ok]
+        order = state.order
+        sum_end_g, sum_g = state.sum_end_g, state.sum_g
+        wait, units, fits = state.wait_units_s, state.units, state.fits
+        best_val, best_rank, best_node = np.inf, -1, -1
+
+        def scan(p: int) -> None:
+            nonlocal best_val, best_rank, best_node
+            lo = int(fleet.pod_lo[p])
+            nodes = order[lo:int(fleet.pod_hi[p])]
+            out = (
+                np.maximum(sum_end_g[nodes] - now * sum_g[nodes], 0.0)
+                + wait[nodes]
+            ) / units[nodes]
+            if eco:
+                t = t_best[nodes, ai]
+                vals = np.where(
+                    fits[nodes, ai], e_best[nodes, ai] * (out + t) / t, np.inf
+                )
+            else:
+                vals = np.where(fits[nodes, ai], out, np.inf)
+            k = int(np.argmin(vals))
+            v = vals[k]
+            if np.isinf(v):
+                return
+            vr = lo + k  # nodes are rank-ordered: global rank of winner
+            if v < best_val or (v == best_val and vr < best_rank):
+                best_val, best_rank, best_node = float(v), vr, int(nodes[k])
+
+        # seed with the globally tightest pod (usually the winner: one pod
+        # scanned, everything else pruned), then sweep the survivors.  The
+        # scan order never affects the result — (best_val, best_rank) is a
+        # running min over every node visited, and only pods whose lower
+        # bound strictly exceeds best_val are skipped, so equal-score ties
+        # always get scanned and break on global name rank exactly like
+        # the flat pass.
+        p0 = int(np.argmin(lb))
+        if np.isinf(lb[p0]):
+            return -1
+        if int(np.count_nonzero(lb <= lb[p0])) > self.flat_fallback:
+            # already more pods tied at the minimum bound than the scan
+            # budget: every one of them survives any best_val, so skip
+            # straight to the flat pass
+            return self.inner.route_indexed(ai, state, now)
+        scan(p0)
+        surv = lb <= best_val
+        surv[p0] = False
+        n_surv = int(np.count_nonzero(surv))
+        if n_surv == 0:
+            return best_node
+        if n_surv > self.flat_fallback:
+            # the bounds don't discriminate (typical of a homogeneous or
+            # lightly loaded fleet, where every idle pod ties): per-pod
+            # Python scans would cost more than one vectorized pass, so
+            # delegate to the flat scan — bit-identical by the parity
+            # construction, and never slower than the flat dispatcher
+            return self.inner.route_indexed(ai, state, now)
+        rlb = np.minimum.reduceat(lb, fleet.region_lo)
+        n_regions = len(fleet.region_lo)
+        for r in np.flatnonzero(rlb <= best_val):
+            r = int(r)
+            plo = int(fleet.region_lo[r])
+            phi = (
+                int(fleet.region_lo[r + 1])
+                if r + 1 < n_regions else fleet.n_pods
+            )
+            for q in np.flatnonzero(lb[plo:phi] <= best_val):
+                p = plo + int(q)
+                if surv[p]:
+                    scan(p)
+        return best_node
 
 
 class Cluster:
@@ -468,6 +840,43 @@ class _ReferenceStateView:
         return out
 
 
+class _NodeTruth:
+    """Instance-keyed truth view on one node's hardware.
+
+    Resolves ``job -> JobProfile`` lazily through the run's shared
+    ``app_of`` registry instead of materializing an entry per
+    (node, instance) — registering a job is O(1) instead of O(nodes),
+    which dominated ``ClusterRun`` construction at fleet scale.  Apps
+    this hardware has no profile for are simply absent, exactly like the
+    eager per-node dicts it replaces (the dispatcher's ``fits`` refuses
+    to route them here).  Supports the mapping subset the simulator and
+    perf models actually use: ``[]``, ``in``, ``get``, iteration.
+    """
+
+    __slots__ = ("_apps", "_app_of")
+
+    def __init__(self, apps: Dict[str, JobProfile], app_of: Dict[str, str]):
+        self._apps = apps      # app -> JobProfile on this hardware
+        self._app_of = app_of  # shared instance -> app registry
+
+    def __getitem__(self, job: str) -> JobProfile:
+        return self._apps[self._app_of[job]]
+
+    def __contains__(self, job: str) -> bool:
+        app = self._app_of.get(job)
+        return app is not None and app in self._apps
+
+    def get(self, job: str, default=None):
+        app = self._app_of.get(job)
+        return self._apps.get(app, default) if app is not None else default
+
+    def __iter__(self):
+        return (j for j, a in self._app_of.items() if a in self._apps)
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self)
+
+
 class ClusterRun:
     """One live cluster simulation, exposed as a steppable backend.
 
@@ -552,10 +961,15 @@ class ClusterRun:
             # posterior-refined dispatch tables (ISSUE 6 satellite)
             self.plane.bind_dispatch(self.app_truth)
 
-        # instance-keyed state; grows in place as jobs are added
+        # instance-keyed state; grows in place as jobs are added.  Truth
+        # views resolve instance -> app profile through the shared
+        # ``app_of`` registry instead of copying one dict entry per
+        # (node, instance): registration is O(1), not O(nodes) — at 256+
+        # nodes the eager copies dominated ClusterRun construction.
         self.app_of: Dict[str, str] = {}
-        self._truth_n: Dict[str, Dict[str, JobProfile]] = {
-            s.name: {} for s in self.specs
+        self._truth_n: Dict[str, _NodeTruth] = {
+            s.name: _NodeTruth(self.app_truth[s.name], self.app_of)
+            for s in self.specs
         }
         for name, app in jobs:
             self._register(name, app)
@@ -590,6 +1004,12 @@ class ClusterRun:
         )
         self._cancelled: set = set()  # cancelled before their ARRIVAL popped
         self._routed: set = set()  # instances that reached a node queue
+        # fragmentation gauge rollup (ISSUE 9): time-weighted average of
+        # ClusterState.frag_now(), sampled at every state transition
+        self._frag_area = 0.0
+        self._frag_t = 0.0
+        self._frag_cur = 0.0
+        self._frag_peak = 0.0
         if max_events is None:
             max_events = _auto_max_events(self.n_jobs, floor=1_000_000)
         self.loop = EventLoop(
@@ -611,6 +1031,7 @@ class ClusterRun:
             on_capacity=self._on_capacity,
             migrate_candidate=self._migrate_candidate,
             reroute_waiting=self._reroute_waiting,
+            prepare_batch=self._prepare_batch,
         )
 
     # -- job registry --------------------------------------------------------
@@ -618,11 +1039,8 @@ class ClusterRun:
     def _register(self, name: str, app: str) -> None:
         if name in self.app_of:
             raise ValueError(f"duplicate job instance {name!r}")
+        # every node's _NodeTruth view sees the instance through app_of
         self.app_of[name] = app
-        for s in self.specs:
-            truth = self.app_truth[s.name]
-            if app in truth:
-                self._truth_n[s.name][name] = truth[app]
 
     @property
     def now(self) -> float:
@@ -701,6 +1119,64 @@ class ClusterRun:
         if self.on_transition is not None:
             self.on_transition(event, t, job, node, g, end, f)
 
+    def _frag_observe(self, t: float) -> None:
+        """Close the previous fragmentation interval at ``t`` and sample
+        the gauge after the state change that triggered this call."""
+        if t > self._frag_t:
+            self._frag_area += self._frag_cur * (t - self._frag_t)
+            self._frag_t = t
+        cur = self.state.frag_now()
+        self._frag_cur = cur
+        if cur > self._frag_peak:
+            self._frag_peak = cur
+
+    def _prepare_batch(self, names: Sequence[str], t: float) -> None:
+        """Fleet-batched decision staging (ISSUE 9): when a same-instant
+        event batch touches several nodes, run every pending Eq. (1)
+        reduction as ONE cross-node kernel launch
+        (``repro.kernels.score_reduce_batch``) and park each node's argmin
+        on its policy; the per-node ``_schedule`` pass then consumes the
+        staged result instead of launching its own kernel.  Pure staging:
+        the batched kernel is bitwise-locked to the solo kernel
+        (tests/test_score_reduce.py) and each policy re-checks its
+        decision-state signature at consumption time, so any drift between
+        staging and scheduling (e.g. a capacity change) falls back to the
+        solo recomputation — schedules are bit-identical either way."""
+        staged: List[Tuple[object, dict]] = []
+        seen = set()
+        for nm in names:
+            if nm in seen:
+                continue
+            seen.add(nm)
+            sim = self.sims[nm]
+            pol = sim.policy
+            if getattr(pol, "engine", None) != "jax":
+                continue
+            stage = getattr(pol, "stage_score", None)
+            if stage is None:
+                continue
+            if self.faults is not None and sim.placement.free_count() == 0:
+                continue  # _schedule skips fully-dead/occupied nodes
+            req = stage(sim.node_view(), list(sim.waiting))
+            if req is not None:
+                staged.append((pol, req))
+        if len(staged) < 2:
+            for pol, _ in staged:
+                pol.stage_drop()  # a lone decision gains nothing batched
+            return
+        from repro.kernels.score_reduce import score_reduce_batch
+
+        out = score_reduce_batch([req for _, req in staged])
+        second: List[Tuple[object, dict]] = []
+        for (pol, _), (_, best) in zip(staged, out):
+            req2 = pol.stage_round1(int(best))
+            if req2 is not None:
+                second.append((pol, req2))
+        if second:  # idle-node deadlock guards, themselves batched
+            out2 = score_reduce_batch([req for _, req in second])
+            for (pol, _), (_, best) in zip(second, out2):
+                pol.stage_round2(int(best))
+
     def route(self, arr: Arrival, t: float) -> Optional[str]:
         if arr.name in self._cancelled:
             return None  # cancelled between submit and its ARRIVAL pop
@@ -729,6 +1205,7 @@ class ClusterRun:
             )
         self.sims[nm].arrive(arr.name, t)
         state.on_arrive(ni, ai)
+        self._frag_observe(t)
         if self.plane is not None:
             self.plane.on_arrival(t, nm)
         self._routed.add(arr.name)
@@ -742,12 +1219,14 @@ class ClusterRun:
         state.on_launch(
             state.index[nm], state.app_index[self.app_of[rj.job]], rj.end, rj.g
         )
+        self._frag_observe(rj.start)
         if self.plane is not None:
             self.plane.on_launch(nm, rj)
         self._emit("launch", rj.start, rj.job, nm, rj.g, rj.end, rj.f)
 
     def _on_complete(self, nm: str, rj: RunningJob) -> None:
         self.state.on_complete(self.state.index[nm], rj.end, rj.g)
+        self._frag_observe(rj.end)
         if self.plane is not None:
             self.plane.on_complete(nm, rj)
         self._emit(
@@ -763,11 +1242,13 @@ class ClusterRun:
     def _on_requeue(self, nm: str, job: str) -> None:
         state = self.state
         state.on_arrive(state.index[nm], state.app_index[self.app_of[job]])
+        self._frag_observe(self.loop.now)
         self._emit("requeue", self.loop.now, job, nm, 0, self.loop.now)
 
     def _on_dequeue(self, nm: str, job: str) -> None:
         state = self.state
         state.on_migrate_out(state.index[nm], state.app_index[self.app_of[job]])
+        self._frag_observe(self.loop.now)
         self._emit("migrate", self.loop.now, job, nm, 0, self.loop.now)
 
     def _on_retime(self, nm: str, rj: RunningJob, old_end: float) -> None:
@@ -782,11 +1263,13 @@ class ClusterRun:
         nothing about the app's runtime, and posteriors learning from it
         would corrupt every later estimate."""
         self.state.on_complete(self.state.index[nm], old_end, rj.g)
+        self._frag_observe(rj.end)
         self._emit("fail", rj.end, rj.job, nm, rj.g, rj.end, rj.f)
 
     def _on_retry(self, nm: str, job: str) -> None:
         state = self.state
         state.on_arrive(state.index[nm], state.app_index[self.app_of[job]])
+        self._frag_observe(self.loop.now)
         self._emit("retry", self.loop.now, job, nm, 0, self.loop.now)
 
     def _on_lost(self, nm: str, job: str) -> None:
@@ -800,10 +1283,12 @@ class ClusterRun:
         ni = state.index[nm]
         sim = self.sims[nm]
         state.set_alive_units(ni, sim.placement.alive_units())
+        state.sync_free(ni, sim.placement.free_count())
         state.wait_units_s[ni] = sum(
             state.min_unit_s[ni, state.app_index[self.app_of[j]]]
             for j in sim.waiting
         )
+        self._frag_observe(self.loop.now)
         # legacy-scan table (the fast_status=False reference path)
         self.min_unit_s[nm] = {
             app: state.min_unit_s[ni, state.app_index[app]]
@@ -932,10 +1417,19 @@ class ClusterRun:
             f"{self.dispatcher.name()}:"
             f"{per_node[self.specs[0].name].policy if self.specs else ''}"
         )
+        self._frag_observe(makespan)
+        frag = {
+            "time_avg": (
+                self._frag_area / makespan if makespan > 0.0 else 0.0
+            ),
+            "peak": self._frag_peak,
+            "final": self._frag_cur,
+        }
         return ClusterResult(
             policy=label,
             per_node=per_node,
             makespan=makespan,
             tail_idle_energy=tail_idle,
             forecast=self.plane.summary() if self.plane is not None else {},
+            fragmentation=frag,
         )

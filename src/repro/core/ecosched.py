@@ -101,6 +101,14 @@ class EcoSched:
         self._launch_memo: "OrderedDict[Tuple, Tuple]" = OrderedDict()
         self._launch_epoch = 0
         self.launch_hits = 0
+        # fleet-batched decision staging (ISSUE 9): a coordinator
+        # (repro.core.cluster.ClusterRun) may pre-run this node's Eq. (1)
+        # reduction inside one cross-node kernel launch and park the
+        # result here; ``_best_jax`` consumes it when the decision state
+        # still matches, else recomputes solo.  ``stage_served`` counts
+        # consumed stagings (observability + test hook).
+        self._staged: Optional[dict] = None
+        self.stage_served = 0
         # forecast plane (repro.core.forecast): attached by the simulation
         # entry points when a ForecastConfig is enabled; None otherwise
         self._plane = None
@@ -250,7 +258,113 @@ class EcoSched:
                 i = j
         return batch.action(i)
 
+    # -- fleet-batched decisions (ISSUE 9) ---------------------------------
+
+    def _stage_sig(self, view: NodeView, specs) -> Tuple:
+        """Everything the jax decision is a pure function of.  A staged
+        result is only consumed when this matches at ``on_event`` time, so
+        any drift between staging and consumption (a capacity event, a
+        perf-model refinement, a reordered queue) falls back to the solo
+        recomputation instead of serving a stale argmin."""
+        return (
+            tuple(s.name for s in specs),
+            _mask_of(view.free_map),
+            tuple(view.domain_jobs),
+            bool(view.running),
+            view.total_units,
+            view.dead_units,
+            view.domains,
+            view.free_units,
+            view.t,
+            getattr(self.perf_model, "version", 0),
+        )
+
+    def stage_score(self, view: NodeView, waiting: Sequence[str]):
+        """Phase 1 of a fleet-coordinated decision: replicate
+        ``on_event``'s window/enumeration prefix (same caches, same spec
+        tokens — so the imminent solo invocation behaves bit-identically
+        whether or not staging happened) and return the kernel request
+        dict for ``score_reduce_batch``.  Returns None when this event
+        would not launch a solo kernel anyway (non-jax engine, empty or
+        un-placeable window, launch-memo hit, overflow fallback)."""
+        self._staged = None
+        if self.engine != "jax":
+            return None
+        window_jobs = list(waiting[: self.window] if self.window else waiting)
+        if not window_jobs or view.free_domains <= 0 or view.free_units <= 0:
+            return None
+        specs = [self._spec(j) for j in window_jobs]
+        specs = [s for s in specs if s.modes]
+        if not specs:
+            return None
+        if self._cache is not None and view.domain_jobs:
+            if self._launch_epoch != self._cache.epoch:
+                self._launch_memo.clear()
+                self._launch_epoch = self._cache.epoch
+            toks = tuple(self._cache.spec_token(s) for s in specs)
+            order = DecisionCache.canonical_order(toks)
+            ctoks = toks if order is None else tuple(toks[i] for i in order)
+            key = (
+                ctoks,
+                _mask_of(view.free_map),
+                tuple(view.domain_jobs),
+                bool(view.running),
+                view.total_units,
+                view.dead_units,
+                view.domains,
+            )
+            if key in self._launch_memo:
+                return None  # on_event replays the memo; no kernel runs
+        try:
+            batch = self._enumerate(specs, view)
+        except OverflowError:
+            return None  # on_event falls back to the python reference
+        dev, g, n = batch.padded_cols()
+        fcol = batch.padded_f() if self.lam_f else None
+        bias = (self.lookahead * batch.spread) if self.lookahead else None
+        req = dict(
+            dev=dev, g=g, n=n, lam=self.lam, g_free=view.free_units,
+            M=view.alive_units, f=fcol, lam_f=self.lam_f, bias=bias,
+        )
+        self._staged = {
+            "sig": self._stage_sig(view, specs),
+            "batch": batch,
+            "req": req,
+            "guard": not view.running,
+            "best": None,
+        }
+        return req
+
+    def stage_round1(self, best: int):
+        """Phase 2: record the batched round-1 argmin.  Returns the
+        round-2 masked request when the idle-node deadlock guard needs one
+        (the coordinator batches those too), else None."""
+        st = self._staged
+        if st is None:
+            return None
+        st["best"] = int(best)
+        if best == 0 and st["guard"]:
+            return dict(st["req"], mask=st["batch"].n_jobs > 0)
+        return None
+
+    def stage_round2(self, best: int) -> None:
+        st = self._staged
+        if st is not None and best >= 0:
+            st["best"] = int(best)
+
+    def stage_drop(self) -> None:
+        self._staged = None
+
     def _best_jax(self, specs, view: NodeView):
+        staged, self._staged = self._staged, None
+        if (
+            staged is not None
+            and staged["best"] is not None
+            and staged["sig"] == self._stage_sig(view, specs)
+        ):
+            self.stage_served += 1
+            i = staged["best"]
+            return staged["batch"].action(i) if i >= 0 else ()
         try:
             batch = self._enumerate(specs, view)
         except OverflowError:

@@ -214,7 +214,13 @@ class EventLoop:
                    dispatcher's migration hook),
       reroute_waiting — optional (node, t) hook: a node went fully dead —
                    move its waiting jobs somewhere alive (the cluster
-                   implements this through the migration machinery).
+                   implements this through the migration machinery),
+      prepare_batch — optional (names, t) hook fired right before a
+                   same-instant multi-node scheduling pass (the t=0 pass
+                   and arrival batches): owners stage every pending score
+                   reduction as one cross-node kernel launch (ISSUE 9);
+                   pure staging, ``_schedule`` behaves identically
+                   without it.
     """
 
     def __init__(
@@ -238,6 +244,7 @@ class EventLoop:
         on_capacity: Optional[Callable] = None,
         migrate_candidate: Optional[Callable] = None,
         reroute_waiting: Optional[Callable] = None,
+        prepare_batch: Optional[Callable[[List[str], float], None]] = None,
     ):
         self.sims = sims
         self.queue = EventQueue()
@@ -260,6 +267,12 @@ class EventLoop:
         self.on_capacity = on_capacity
         self.migrate_candidate = migrate_candidate
         self.reroute_waiting = reroute_waiting
+        # fleet-batched decision staging (ISSUE 9): invoked with the list
+        # of touched node names right before a same-instant multi-node
+        # scheduling pass, so an owner can run every pending score
+        # reduction as one cross-node kernel launch.  Pure staging — the
+        # per-node ``_schedule`` calls behave identically without it.
+        self.prepare_batch = prepare_batch
         # global per-job retry counts: a job killed on node A and rerouted
         # to node B keeps burning the same budget
         self._fault_retry: Dict[str, int] = {}
@@ -300,6 +313,8 @@ class EventLoop:
         if self.started:
             return
         self.started = True
+        if self.prepare_batch is not None and len(self.sims) > 1:
+            self.prepare_batch(list(self.sims), 0.0)
         for nm in self.sims:
             self._schedule(nm)
         if self.faults is not None and self.faults.node_mtbf_s > 0:
@@ -355,6 +370,8 @@ class EventLoop:
                 nm = self.arrive(q.pop()[2], t)
                 if nm not in touched:
                     touched.append(nm)
+            if self.prepare_batch is not None and len(touched) > 1:
+                self.prepare_batch([nm for nm in touched if nm is not None], t)
             for nm in touched:
                 if nm is not None:  # None = arrival dropped (cancelled job)
                     self._schedule(nm)

@@ -124,6 +124,12 @@ class Journal:
         self._f = open(self.path, "a", encoding="utf-8")
         return len(evts)
 
+    def size(self) -> int:
+        """Current journal size in bytes.  ``append`` flushes every
+        record, so the on-disk size is exact — this is what the service's
+        size-triggered auto-compaction polls."""
+        return os.path.getsize(self.path)
+
     def close(self) -> None:
         if not self._f.closed:
             self._f.close()

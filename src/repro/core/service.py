@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import os
 import socket
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -343,6 +344,15 @@ class SchedulerService:
     ``make_backend`` must build a *fresh, deterministic* backend each
     call — recovery replays the journal through a new instance, so any
     state smuggled in from outside the journal breaks crash parity.
+
+    ``compact_every_bytes`` / ``compact_max_age_s`` arm automatic journal
+    compaction (ISSUE 9 satellite): after each mutating operation, if the
+    journal has grown past the byte threshold, or the oldest un-compacted
+    transition is older than the age threshold (wall-clock), the folded
+    ``Journal.snapshot`` runs in place.  Compaction never changes what
+    replay reconstructs, so the wall-clock trigger does not break
+    determinism — it only bounds how much of the event tail a recovery
+    has to re-verify record-by-record.  0 disables either trigger.
     """
 
     def __init__(
@@ -352,8 +362,15 @@ class SchedulerService:
         journal_path: Optional[str] = None,
         admission: Optional[AdmissionConfig] = None,
         fsync: bool = False,
+        compact_every_bytes: int = 0,
+        compact_max_age_s: float = 0.0,
     ):
         self.make_backend = make_backend
+        self.compact_every_bytes = int(compact_every_bytes)
+        self.compact_max_age_s = float(compact_max_age_s)
+        self.auto_compactions = 0
+        self._evts_since_snap = 0
+        self._snap_age_t = time.monotonic()
         self.admission = admission or AdmissionConfig()
         self.gate = AdmissionGate(self.admission)
         self.jobs: Dict[str, JobInfo] = {}
@@ -393,6 +410,29 @@ class SchedulerService:
     def _append(self, rec: Dict) -> None:
         if self.journal is not None:
             self.journal.append(rec)
+            if rec.get("k") == "evt":
+                if self._evts_since_snap == 0:
+                    self._snap_age_t = time.monotonic()  # oldest un-compacted
+                self._evts_since_snap += 1
+
+    def _maybe_compact(self) -> None:
+        """Run the folded snapshot when either auto-compaction trigger is
+        due.  Called after each mutating operation completes — never
+        mid-operation, so the journal is quiescent (every write-ahead
+        input has its write-behind transitions flushed behind it)."""
+        if self.journal is None or self._evts_since_snap == 0:
+            return
+        due = bool(
+            self.compact_every_bytes
+            and self.journal.size() >= self.compact_every_bytes
+        ) or bool(
+            self.compact_max_age_s
+            and time.monotonic() - self._snap_age_t >= self.compact_max_age_s
+        )
+        if due:
+            self.journal.snapshot()
+            self.auto_compactions += 1
+            self._evts_since_snap = 0
 
     # -- lifecycle transitions (substrate feed) ------------------------------
 
@@ -454,6 +494,7 @@ class SchedulerService:
             }
         )
         self._apply_submit(t_eff, name, app, ok, reason)
+        self._maybe_compact()
         return {"ok": ok, "reason": reason, "job": self.jobs[name].to_dict()}
 
     def _apply_submit(
@@ -481,6 +522,7 @@ class SchedulerService:
             raise RecoveryError(
                 f"{name}: backend refused a cancel the state machine allowed"
             )
+        self._maybe_compact()
         return {
             "ok": ok,
             "reason": "" if ok else f"not cancellable in state {info.state}",
@@ -499,6 +541,7 @@ class SchedulerService:
         until_eff = None if until is None else self._clamp(until)
         self._append({"k": "adv", "until": until_eff})
         self.backend.advance(until_eff)
+        self._maybe_compact()
         return {"ok": True, "now": self.backend.now, "stats": self._counts()}
 
     # -- read-only operations ------------------------------------------------
@@ -535,6 +578,10 @@ class SchedulerService:
             "rate_baseline": self.gate.rate.baseline_rate(),
             "replay_divergences": self.replay_divergences,
             "journal": self.journal.path if self.journal else "",
+            "journal_bytes": self.journal.size() if self.journal else 0,
+            "auto_compactions": self.auto_compactions,
+            "compact_every_bytes": self.compact_every_bytes,
+            "compact_max_age_s": self.compact_max_age_s,
         }
 
     def compact(self) -> Dict:
@@ -546,6 +593,7 @@ class SchedulerService:
         if self.journal is None:
             return {"ok": False, "error": "no journal configured"}
         folded = self.journal.snapshot()
+        self._evts_since_snap = 0  # auto-compaction restarts from here
         return {"ok": True, "folded": folded, "journal": self.journal.path}
 
     def result(self) -> Dict:
@@ -653,7 +701,7 @@ class SchedulerService:
         Journal.repair(journal_path, records)
         self.journal = Journal(journal_path)
         for rec in regen[seen:]:
-            self.journal.append(rec)
+            self._append(rec)  # counts toward the auto-compaction triggers
 
     # -- request dispatch (the wire protocol) --------------------------------
 

@@ -267,6 +267,9 @@ class ClusterResult:
     tail_idle_energy: float = 0.0
     # forecast-plane observability (repro.core.forecast); empty without one
     forecast: Dict[str, float] = field(default_factory=dict)
+    # fleet fragmentation gauge (ISSUE 9): time_avg / peak / final
+    # unusable-GPU fraction given the pending mix, à la Lettich et al.
+    fragmentation: Dict[str, float] = field(default_factory=dict)
 
     @property
     def busy_energy(self) -> float:

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -111,18 +111,26 @@ def _combine(scores, bmin, btot, bidx, b_pad):
     return scores[:, 0], best
 
 
+def _node_reduce(params, dev, g, f, n, bias, mask):
+    """Single-node Eq. (1) reduction in pure jnp.  ``params`` is one (4,)
+    [λ, G_free, M, λ_f] row; vmapping this over a leading node axis is the
+    batched ref path, so per-node results are the same elementwise ops as
+    the solo ref path."""
+    b_pad = dev.shape[0]
+    scores, tot = _row_scores(
+        dev, g, f, n, bias, mask, params[0], params[1], params[2], params[3]
+    )
+    ridx = jax.lax.broadcasted_iota(jnp.int32, (b_pad, 1), 0)
+    m, t_best, i = _pick(scores, tot, ridx, jnp.int32(b_pad))
+    best = jnp.where(jnp.isinf(m), jnp.int32(-1), i)
+    return scores[:, 0], best
+
+
 @functools.partial(jax.jit, static_argnames=("mode",))
 def _reduce_jit(params, dev, g, f, n, bias, mask, *, mode: str):
     b_pad, s_pad = dev.shape
     if mode == "ref":
-        scores, tot = _row_scores(
-            dev, g, f, n, bias, mask,
-            params[0, 0], params[0, 1], params[0, 2], params[0, 3],
-        )
-        ridx = jax.lax.broadcasted_iota(jnp.int32, (b_pad, 1), 0)
-        m, t_best, i = _pick(scores, tot, ridx, jnp.int32(b_pad))
-        best = jnp.where(jnp.isinf(m), jnp.int32(-1), i)
-        return scores[:, 0], best
+        return _node_reduce(params[0], dev, g, f, n, bias, mask)
     nb = b_pad // _BLOCK_B
     col = pl.BlockSpec((_BLOCK_B, 1), lambda i: (i, 0))
     blk = pl.BlockSpec((1, 1), lambda i: (i, 0))
@@ -205,3 +213,122 @@ def score_reduce(
         mode=mode or _backend_mode(),
     )
     return np.asarray(scores)[:B], int(best)
+
+
+# ---------------------------------------------------------------------------
+# Cross-node batched reduction: one launch serves a pod's worth of
+# simultaneous per-node decisions (ISSUE 9 tentpole).
+# ---------------------------------------------------------------------------
+
+
+def _kernel_batch(params_ref, dev_ref, g_ref, f_ref, n_ref, bias_ref,
+                  mask_ref, scores_ref, bmin_ref, btot_ref, bidx_ref):
+    """Grid step (d, i): row-block i of node d.  Each node's [λ, G_free,
+    M, λ_f] row rides in SMEM, selected by the node grid axis — per-node
+    free-unit/alive-unit scalars without recompiles or plane broadcasts."""
+    lam = params_ref[0, 0]
+    g_free = params_ref[0, 1]
+    M = params_ref[0, 2]
+    lam_f = params_ref[0, 3]
+    scores, tot = _row_scores(
+        dev_ref[0], g_ref[0], f_ref[0], n_ref[0], bias_ref[0], mask_ref[0],
+        lam, g_free, M, lam_f,
+    )
+    scores_ref[0] = scores
+    bb = scores.shape[0]
+    ridx = jax.lax.broadcasted_iota(jnp.int32, (bb, 1), 0)
+    m, t_best, r = _pick(scores, tot, ridx, jnp.int32(bb))
+    bmin_ref[0, 0, 0] = m
+    btot_ref[0, 0, 0] = t_best
+    bidx_ref[0, 0, 0] = pl.program_id(1) * bb + r
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _reduce_batch_jit(params, dev, g, f, n, bias, mask, *, mode: str):
+    d_pad, b_pad, s_pad = dev.shape
+    if mode == "ref":
+        return jax.vmap(_node_reduce)(params, dev, g, f, n, bias, mask)
+    nb = b_pad // _BLOCK_B
+    col = pl.BlockSpec((1, _BLOCK_B, 1), lambda d, i: (d, i, 0))
+    blk = pl.BlockSpec((1, 1, 1), lambda d, i: (d, i, 0))
+    plane = pl.BlockSpec((1, _BLOCK_B, s_pad), lambda d, i: (d, i, 0))
+    scores, bmin, btot, bidx = pl.pallas_call(
+        _kernel_batch,
+        grid=(d_pad, nb),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda d, i: (d, 0),
+                         memory_space=pltpu.SMEM),
+            plane, plane, plane,
+            col, col, col,
+        ],
+        out_specs=[col, blk, blk, blk],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_pad, b_pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((d_pad, nb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((d_pad, nb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((d_pad, nb, 1), jnp.int32),
+        ],
+        interpret=(mode == "interpret"),
+    )(params, dev, g, f, n, bias, mask)
+    combine = jax.vmap(lambda s, m, t, i: _combine(s, m, t, i, b_pad))
+    return combine(scores, bmin, btot, bidx)
+
+
+def score_reduce_batch(
+    reqs: Sequence[Dict[str, Any]],
+    *,
+    mode: Optional[str] = None,
+) -> List[Tuple[np.ndarray, int]]:
+    """Reduce many nodes' candidate blocks in one kernel launch.
+
+    Each request is a dict with the per-node arguments of
+    :func:`score_reduce`: required ``dev``/``g``/``n`` (the (B, S) padded
+    columns and per-row action sizes) and ``lam``/``g_free``/``M``
+    scalars; optional ``f``/``lam_f``/``bias``/``mask``.  Blocks are
+    zero-padded to the common (b_pad, s_pad) and stacked on a leading
+    node axis (itself padded to a power of two with fully-masked rows),
+    so appended zeros contribute exactly +0.0 at every reduction combine
+    and per-node results match the solo path.  Returns one
+    (scores (B_k,), best index) pair per request, in order; ``best`` is
+    -1 when that node has no feasible candidate (including B_k == 0).
+    """
+    if not reqs:
+        return []
+    sizes = [r["dev"].shape for r in reqs]
+    b_max = max(b for b, _ in sizes)
+    s_max = max(s for _, s in sizes)
+    b_pad = max(_BLOCK_B, 1 << max(b_max - 1, 0).bit_length())
+    s_pad = max(_SLOT_PAD, -(-s_max // _SLOT_PAD) * _SLOT_PAD)
+    D = len(reqs)
+    d_pad = 1 << max(D - 1, 0).bit_length()
+    dev = np.zeros((d_pad, b_pad, s_pad), dtype=np.float32)
+    g = np.zeros((d_pad, b_pad, s_pad), dtype=np.float32)
+    f = np.zeros((d_pad, b_pad, s_pad), dtype=np.float32)
+    n = np.zeros((d_pad, b_pad, 1), dtype=np.float32)
+    bias = np.zeros((d_pad, b_pad, 1), dtype=np.float32)
+    mask = np.zeros((d_pad, b_pad, 1), dtype=np.float32)
+    params = np.zeros((d_pad, 4), dtype=np.float32)
+    params[:, 2] = 1.0  # benign M for the masked pad nodes (no 0/0)
+    for k, r in enumerate(reqs):
+        B, S = sizes[k]
+        dev[k, :B, :S] = r["dev"]
+        g[k, :B, :S] = r["g"]
+        rf = r.get("f")
+        if rf is not None:
+            f[k, :B, :S] = rf
+        n[k, :B, 0] = np.asarray(r["n"], dtype=np.float32).reshape(B)
+        rb = r.get("bias")
+        if rb is not None:
+            bias[k, :B, 0] = np.asarray(rb, dtype=np.float32).reshape(B)
+        rm = r.get("mask")
+        if rm is None:
+            mask[k, :B, 0] = 1.0
+        else:
+            mask[k, :B, 0] = np.asarray(rm, dtype=np.float32).reshape(B)
+        params[k] = [r["lam"], r["g_free"], r["M"], r.get("lam_f", 0.0)]
+    scores, best = _reduce_batch_jit(
+        params, dev, g, f, n, bias, mask, mode=mode or _backend_mode()
+    )
+    scores = np.asarray(scores)
+    best = np.asarray(best)
+    return [(scores[k, : sizes[k][0]], int(best[k])) for k in range(D)]

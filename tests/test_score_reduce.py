@@ -9,7 +9,7 @@ from repro.core import EcoSched, JobProfile, Node, ProfiledPerfModel, simulate
 from repro.core.engine import enumerate_scored
 from repro.core.perfmodel import _mk_spec
 from repro.core.types import NodeView
-from repro.kernels.score_reduce import score_reduce
+from repro.kernels.score_reduce import score_reduce, score_reduce_batch
 
 LAM = 0.35
 TOL = 1e-6  # float32 kernel vs float64 numpy engine (ISSUE 3 acceptance)
@@ -127,6 +127,94 @@ def test_bias_shifts_scores():
     s1, _ = score_reduce(dev, g, n, lam=LAM, g_free=view.free_units,
                          M=view.total_units, bias=bias, mode="ref")
     assert np.max(np.abs((s1 - s0) - bias.astype(np.float32))) <= TOL
+
+
+# ---------------------------------------------------------------------------
+# Cross-node batched reduction (ISSUE 9): one launch, many nodes
+# ---------------------------------------------------------------------------
+
+
+def batch_cases(seeds):
+    """Per-node requests + the solo-path reference results."""
+    reqs, refs = [], []
+    for seed in seeds:
+        specs, view = rand_window(seed)
+        batch = enumerate_scored(specs, view, list(view.free_map), lam=LAM)
+        dev, g, n = batch.padded_cols()
+        reqs.append(dict(dev=dev, g=g, n=n, lam=LAM,
+                         g_free=view.free_units, M=view.total_units))
+        refs.append((dev, g, n, view))
+    return reqs, refs
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_batch_matches_per_node_kernel(mode):
+    """The batched kernel reproduces the solo path per node, bitwise —
+    common (b_pad, s_pad) zero-padding adds exactly +0.0 per combine."""
+    reqs, refs = batch_cases(range(9))
+    out = score_reduce_batch(reqs, mode=mode)
+    assert len(out) == len(reqs)
+    for (scores, best), (dev, g, n, view) in zip(out, refs):
+        s_solo, b_solo = score_reduce(
+            dev, g, n, lam=LAM, g_free=view.free_units,
+            M=view.total_units, mode=mode,
+        )
+        assert best == b_solo
+        finite = np.isfinite(s_solo)
+        assert np.array_equal(scores[finite], s_solo[finite])
+        assert np.all(np.isinf(scores[~finite]))
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_batch_mixed_edges(mode):
+    """All-infeasible and empty-window nodes ride in the same launch as
+    healthy ones without perturbing them."""
+    reqs, refs = batch_cases(range(3))
+    dead_mask = np.zeros(len(reqs[1]["dev"]), dtype=bool)
+    reqs.insert(1, dict(reqs[1], mask=dead_mask))  # all-infeasible clone
+    view = NodeView(t=0.0, total_units=8, domains=2, free_units=8,
+                    running=[], free_map=[True] * 8, domain_jobs=[0, 0])
+    empty = enumerate_scored([], view, list(view.free_map), lam=LAM)
+    dev_e, g_e, n_e = empty.padded_cols()
+    reqs.append(dict(dev=dev_e, g=g_e, n=n_e, lam=LAM, g_free=8, M=8))
+    out = score_reduce_batch(reqs, mode=mode)
+    assert out[1][1] == -1 and np.all(np.isinf(out[1][0]))
+    assert out[-1][1] == 0  # only the empty action exists
+    assert out[-1][0][0] == pytest.approx(empty.scores[0], abs=TOL)
+    for (scores, best), (dev, g, n, v) in zip(
+        [out[0]] + list(out[2:-1]), refs
+    ):
+        s_solo, b_solo = score_reduce(
+            dev, g, n, lam=LAM, g_free=v.free_units, M=v.total_units,
+            mode=mode,
+        )
+        assert best == b_solo
+        finite = np.isfinite(s_solo)
+        assert np.array_equal(scores[finite], s_solo[finite])
+
+
+def test_batch_empty_request_list():
+    assert score_reduce_batch([]) == []
+
+
+def test_batch_per_node_params_ride_in_smem():
+    """Heterogeneous λ/G_free/M/λ_f rows per node in one launch: each
+    node's result matches a solo call with its own scalars."""
+    specs, view = rand_window(11)
+    batch = enumerate_scored(specs, view, list(view.free_map), lam=LAM)
+    dev, g, n = batch.padded_cols()
+    f = np.ones_like(dev)
+    cfgs = [
+        dict(lam=0.1, g_free=2, M=4, lam_f=0.0),
+        dict(lam=0.9, g_free=16, M=16, lam_f=0.25),
+        dict(lam=0.35, g_free=8, M=8, lam_f=0.5),
+    ]
+    reqs = [dict(dev=dev, g=g, n=n, f=f, **c) for c in cfgs]
+    out = score_reduce_batch(reqs, mode="ref")
+    for (scores, best), c in zip(out, cfgs):
+        s_solo, b_solo = score_reduce(dev, g, n, f=f, mode="ref", **c)
+        assert best == b_solo
+        assert np.array_equal(scores, s_solo)
 
 
 def test_engine_jax_end_to_end_matches_vector():

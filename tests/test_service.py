@@ -478,6 +478,164 @@ def test_wrong_backend_raises_recovery_error(tmp_path):
 
 
 # --------------------------------------------------------------------------
+# auto journal compaction (ISSUE 9 satellite)
+# --------------------------------------------------------------------------
+
+
+def test_auto_compaction_by_size(tmp_path):
+    """Once the journal outgrows ``compact_every_bytes``, the folded
+    snapshot runs by itself — and the compacted journal still recovers
+    the exact same schedule."""
+    path = str(tmp_path / "j.jnl")
+    svc = SchedulerService(
+        _factory(), journal_path=path, compact_every_bytes=1500
+    )
+    _apply(svc)
+    golden = _fingerprint(svc)
+    assert svc.auto_compactions >= 1
+    assert svc.stats()["auto_compactions"] == svc.auto_compactions
+    svc.close()
+    recs = Journal.read(path)
+    assert recs[1]["k"] == "snap" and recs[1]["n"] > 0
+    back = SchedulerService(_factory(), journal_path=path)
+    assert _fingerprint(back) == golden
+    assert back.replay_divergences == 0
+    back.close()
+
+
+def test_auto_compaction_by_age(tmp_path):
+    """The age trigger fires once the oldest un-compacted transition is
+    older than ``compact_max_age_s`` — a mostly-idle daemon compacts on
+    its next operation instead of never."""
+    path = str(tmp_path / "j.jnl")
+    svc = SchedulerService(
+        _factory(), journal_path=path, compact_max_age_s=1e-6
+    )
+    _apply(svc)
+    golden = _fingerprint(svc)
+    assert svc.auto_compactions >= 1
+    svc.close()
+    back = SchedulerService(_factory(), journal_path=path)
+    assert _fingerprint(back) == golden
+    back.close()
+
+
+def test_auto_compaction_disabled_by_default(tmp_path):
+    path = str(tmp_path / "j.jnl")
+    svc = SchedulerService(_factory(), journal_path=path)
+    _apply(svc)
+    assert svc.auto_compactions == 0
+    svc.close()
+    assert all(r["k"] != "snap" for r in Journal.read(path))
+
+
+def test_stale_compaction_tmp_ignored(tmp_path):
+    """A crash during the snapshot's tmp write leaves ``<journal>.tmp``
+    beside an untouched journal; recovery must ignore it and the next
+    compaction must overwrite it."""
+    path = str(tmp_path / "j.jnl")
+    svc = SchedulerService(_factory(), journal_path=path)
+    _apply(svc)
+    golden = _fingerprint(svc)
+    svc.close()
+    with open(path + ".tmp", "w") as f:
+        f.write('{"k":"hdr","v":3')  # torn mid-write
+    back = SchedulerService(_factory(), journal_path=path)
+    assert _fingerprint(back) == golden
+    assert back.compact()["ok"]
+    again = SchedulerService(_factory(), journal_path=path)
+    assert _fingerprint(again) == golden
+    again.close()
+    back.close()
+
+
+_COMPACT_KILL_CHILD = """\
+import os
+import signal
+import sys
+
+sys.path.insert(0, {src!r})
+from repro.core import (
+    Cluster, ClusterBackend, EcoSched, EnergyAwareDispatcher, NodeSpec,
+    ProfiledPerfModel, SchedulerService,
+)
+from repro.core import calibration as C
+from repro.roofline.hw import A100, H100
+
+
+def factory():
+    return ClusterBackend(Cluster(
+        [NodeSpec("h100-0", H100), NodeSpec("a100-0", A100)],
+        truth_for=lambda s: C.build_system(s.chip.name),
+        policy_for=lambda s, t: EcoSched(
+            ProfiledPerfModel(t, noise=0.02, seed=1), lam=0.35, tau=0.45
+        ),
+        dispatcher=EnergyAwareDispatcher(),
+        slowdown_for=lambda s: C.cross_numa_slowdown,
+        label="svc-test",
+    ))
+
+
+svc = SchedulerService(factory, journal_path=sys.argv[1])
+svc.submit("j0", "bert", 10.0)
+svc.submit("j1", "lbm", 10.0)
+svc.submit("j2", "resnet50", 40.0)
+svc.advance(60.0)
+svc.advance(800.0)
+
+stage = sys.argv[2]
+real_replace = os.replace
+
+
+def kill_replace(src_p, dst_p):
+    if stage == "after_replace":
+        real_replace(src_p, dst_p)
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+os.replace = kill_replace
+svc.compact()  # never returns
+"""
+
+
+@pytest.mark.parametrize("stage", ["before_replace", "after_replace"])
+def test_mid_compaction_sigkill_crash_safe(tmp_path, stage):
+    """SIGKILL landing inside ``Journal.snapshot`` — right before or
+    right after the atomic rename — leaves either the old journal (plus
+    a stale tmp) or the compacted one, never a mix; restart recovers and
+    the re-driven workload finishes bit-identical to an uninterrupted
+    run."""
+    # the uninterrupted reference (same workload prefix + the full OPS)
+    ref = SchedulerService(_factory())
+    _apply(ref)
+    golden = _fingerprint(ref)
+
+    path = str(tmp_path / "j.jnl")
+    script = tmp_path / "child.py"
+    script.write_text(_COMPACT_KILL_CHILD.format(src=SRC))
+    proc = subprocess.run(
+        [sys.executable, str(script), path, stage],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, timeout=120,
+    )
+    assert proc.returncode == -signal.SIGKILL, proc.stdout.decode()
+    if stage == "before_replace":
+        assert os.path.exists(path + ".tmp")  # the torn compaction
+        assert all(r["k"] != "snap" for r in Journal.read(path))
+    else:
+        assert Journal.read(path)[1]["k"] == "snap"
+
+    back = SchedulerService(_factory(), journal_path=path)
+    assert back.replay_divergences == 0
+    _apply(back)  # re-drive everything; submits are idempotent
+    assert _fingerprint(back) == golden
+    back.close()
+    # and the repaired journal recovers once more, untouched
+    again = SchedulerService(_factory(), journal_path=path)
+    assert _fingerprint(again) == golden
+    again.close()
+
+
+# --------------------------------------------------------------------------
 # the real thing: SIGKILL a live daemon subprocess, restart, compare
 # --------------------------------------------------------------------------
 

@@ -23,10 +23,31 @@ fleet where same-instant bursts are scored in one ``score_reduce_batch``
 launch (``stage_served > 0`` asserted) against the staging-disabled solo
 path — schedules must match bitwise.
 
+ISSUE 10 adds the COMPLETE-path sweep: an anchor+grow elastic workload
+(short rigid 4-unit anchors whose completions free half a node next to a
+long strong-scaling {4,8} job — every anchor completion is a resize
+opportunity, and burst arrivals align those completions into same-instant
+COMPLETE bursts across nodes) run on a jax-engine fleet twice:
+
+  * ``batched`` — the full fast COMPLETE path: one
+    ``score_reduce_multi`` launch per resize table, cross-node
+    COMPLETE-burst staging, and a fleet-shared ``DecisionCache``,
+  * ``solo``    — the pre-batching reference exactly as it shipped:
+    ``resize_batch=False`` (one kernel launch per running job per
+    completion), the ``prepare_complete`` hook detached, and private
+    per-node caches.
+
+Schedules must match bit for bit (records, energy); the batched leg
+must beat the solo leg by ``MIN_ELASTIC_SPEEDUP`` in events/s at the
+gate scale.  Per-phase decision-time breakdowns
+(dispatch/launch/resize/migrate/stage) are reported for both legs.
+
     PYTHONPATH=src python -m benchmarks.bench_fleet [--smoke]
 
-Acceptance gate (full mode): >= 10k events/s at 256 nodes on the best
-dispatcher, with flat/hier schedule parity at every scale.
+Acceptance gates (full mode): >= 10k events/s at 256 nodes on the best
+dispatcher with flat/hier schedule parity at every scale, and >= 2x
+batched-vs-solo events/s on the elastic-on case at 256 nodes with
+batched/solo schedule parity at every elastic scale.
 """
 from __future__ import annotations
 
@@ -41,7 +62,9 @@ import numpy as np
 from benchmarks.common import Csv
 from repro.core import (
     Cluster,
+    DecisionCache,
     EcoSched,
+    ElasticConfig,
     EnergyAwareDispatcher,
     HierarchicalDispatcher,
     JobProfile,
@@ -73,6 +96,14 @@ FULL_SWEEP = [
 SMOKE_SWEEP = [(40, 1.2, 160)]  # 2.5 pods: exercises ragged geometry
 GATE_NODES = 256
 MIN_EVENTS_PER_S = 10_000.0  # full-mode gate at GATE_NODES
+
+# COMPLETE-path sweep (ISSUE 10): rate scales with fleet size like the
+# arrival sweep, but slower apps (hours, not minutes) so mid-flight
+# resizes clear the min-gain guard
+ELASTIC_APP_SEED = 5
+ELASTIC_SWEEP = [(64, 0.6, 512), (256, 2.4, 2048)]
+ELASTIC_SMOKE = [(40, 0.6, 160)]
+MIN_ELASTIC_SPEEDUP = 2.0  # batched vs pre-PR per-job events/s at gate
 
 
 def synth_apps(chip, n_apps: int = N_APPS, seed: int = APP_SEED) -> Dict[str, JobProfile]:
@@ -183,6 +214,177 @@ def measure_case(
     return out
 
 
+def synth_elastic_apps(
+    chip, n_apps: int = N_APPS, seed: int = ELASTIC_APP_SEED
+) -> Dict[str, JobProfile]:
+    """Anchor+grow mix for the COMPLETE-path sweep: even apps are long
+    strong-scaling {4,8} jobs worth preempt-resizing to the full node
+    mid-flight; odd apps are short rigid 4-unit anchors.  An anchor
+    completion frees the other half of a node hosting a grow job — every
+    such completion is a resize opportunity, and burst arrivals align
+    anchor completions into same-instant COMPLETE bursts across nodes."""
+    s = CHIP_SLOW[chip.name]
+    rng = np.random.default_rng(seed)
+    out = {}
+    for i in range(n_apps):
+        if i % 2 == 0:  # grow app: near-linear scaling, cheap extra units
+            counts = (4, 8)
+            t1 = float(rng.uniform(3600.0, 10800.0))
+            alpha = float(rng.uniform(0.42, 0.52))
+            beta = alpha - float(rng.uniform(0.10, 0.20))
+            p0 = float(rng.uniform(250.0, 400.0))
+            rt = {g: s * t1 / g ** alpha for g in counts}
+            bp = {g: (p0 / s ** 0.5) * g ** beta for g in counts}
+        else:  # anchor app: short, rigid half-node filler
+            t4 = float(rng.uniform(600.0, 1800.0))
+            p0 = float(rng.uniform(250.0, 400.0))
+            rt = {4: s * t4}
+            bp = {4: (p0 / s ** 0.5) * 4 ** 0.7}
+        out[f"app{i}"] = JobProfile(name=f"app{i}", runtime=rt, busy_power=bp)
+    return out
+
+
+ELASTIC_TRUTH = {chip.name: synth_elastic_apps(chip) for chip in CHIP_CYCLE}
+
+
+def elastic_fleet(
+    n_nodes: int,
+    dispatcher,
+    *,
+    resize_batch: bool = True,
+    shared_cache: bool = True,
+    launch_share: bool = True,
+) -> Cluster:
+    """jax-engine fleet over the anchor+grow mix — the engine whose
+    per-job resize loop pays one kernel launch per candidate, i.e. the
+    path the batched plane exists to collapse.  By default all policies
+    pool one ``DecisionCache``: keys are name-free, so
+    identically-shaped nodes serve each other's first-sight
+    enumerations (a private cache never warms when each node only hosts
+    a handful of jobs).  ``shared_cache=False`` reverts to private
+    per-node caches and ``launch_share=False`` disables the tie-frontier
+    launch memo — together the pre-PR configuration the solo leg
+    measures."""
+    cache = DecisionCache() if shared_cache else True
+
+    def policy_for(spec, truth):
+        return EcoSched(
+            ProfiledPerfModel(truth, noise=0.0, seed=1),
+            lam=LAM, tau=TAU, window=8, engine="jax", cache=cache,
+            resize_batch=resize_batch, launch_share=launch_share,
+        )
+
+    return Cluster(
+        [
+            NodeSpec(
+                f"n{i:04d}",
+                CHIP_CYCLE[(i // POD_SIZE) % len(CHIP_CYCLE)],
+                units=M,
+                domains=K,
+            )
+            for i in range(n_nodes)
+        ],
+        truth_for=lambda spec: ELASTIC_TRUTH[spec.chip.name],
+        policy_for=policy_for,
+        dispatcher=dispatcher,
+    )
+
+
+def _elastic_schedule_of(res) -> List[Tuple]:
+    return [
+        (r.job, r.node, r.g, r.f, r.start, r.end, r.kind, r.segment)
+        for r in res.records
+    ]
+
+
+def _run_elastic(
+    n_nodes: int,
+    rate: float,
+    n_jobs: int,
+    *,
+    resize_batch: bool,
+    staged: bool,
+    shared_cache: bool,
+    launch_share: bool = True,
+):
+    """One elastic leg; returns (result, elapsed_s, resize_stage_served)."""
+    from repro.core.events import EVT_ARRIVAL
+
+    arrivals = sorted(_stream(rate, n_jobs), key=lambda a: a.t)
+    cl = elastic_fleet(
+        n_nodes,
+        _dispatchers()["hier"],
+        resize_batch=resize_batch,
+        shared_cache=shared_cache,
+        launch_share=launch_share,
+    )
+    run = cl.open_run(
+        apps=[f"app{i}" for i in range(N_APPS)],
+        jobs=[(a.name, a.app) for a in arrivals],
+        elastic=ElasticConfig(resize=True, resize_before_backfill=True),
+    )
+    if not staged:
+        run.loop.prepare_complete = None
+    t0 = time.perf_counter()
+    for a in arrivals:
+        if a.t <= 0.0:
+            run.route(a, 0.0)
+        else:
+            run.loop.queue.push(a.t, EVT_ARRIVAL, a)
+    run.loop.run()
+    res = run.finalize()
+    elapsed = time.perf_counter() - t0
+    served = sum(
+        getattr(s.policy, "resize_stage_served", 0)
+        for s in run.sims.values()
+    )
+    return res, elapsed, served
+
+
+def elastic_case(
+    n_nodes: int, rate: float, n_jobs: int, *, repeats: int = 2
+) -> Dict[str, float]:
+    """Batched vs per-job COMPLETE path on the same workload: hard
+    schedule parity, then the end-to-end events/s speedup.  The solo
+    leg is the pre-PR configuration in full (per-job resize loop, no
+    COMPLETE staging, private caches, no tie-frontier launch sharing);
+    the batched leg is everything this PR's fast path adds.  None of
+    those knobs can move a schedule (every key is name-free and each
+    decision is a pure function of its key), and the parity asserts
+    below re-prove that on this workload."""
+    out: Dict[str, float] = {"nodes": n_nodes, "rate": rate, "jobs": n_jobs}
+    legs = {
+        "batched": dict(resize_batch=True, staged=True, shared_cache=True),
+        "solo": dict(
+            resize_batch=False, staged=False, shared_cache=False,
+            launch_share=False,
+        ),
+    }
+    best = {name: (float("inf"), None, 0) for name in legs}
+    for _ in range(repeats):
+        for name, kw in legs.items():
+            res, elapsed, served = _run_elastic(n_nodes, rate, n_jobs, **kw)
+            if elapsed < best[name][0]:
+                best[name] = (elapsed, res, served)
+    assert _elastic_schedule_of(best["batched"][1]) == _elastic_schedule_of(
+        best["solo"][1]
+    ), f"batched COMPLETE path diverged from per-job loop at {n_nodes} nodes"
+    assert best["batched"][1].total_energy == best["solo"][1].total_energy
+    events = best["batched"][1].decision_events + 2 * n_jobs
+    for name, (t_best, res, served) in best.items():
+        out[f"{name}_s"] = t_best
+        out[f"{name}_events_per_s"] = events / t_best
+        for k, v in res.decision_phases.items():
+            out[f"{name}_phase_{k}_s"] = v
+    out["resizes"] = best["batched"][1].resizes
+    out["resize_stage_served"] = best["batched"][2]
+    # the headline: the fast COMPLETE path (batched resize plane +
+    # burst staging + shared cache) vs the pre-PR per-job loop, end to
+    # end — phase columns above show where the time moved
+    out["speedup"] = out["solo_s"] / out["batched_s"]
+    return out
+
+
 def jax_parity_case(n_jobs: int = 48) -> Dict[str, float]:
     """Cross-node batched scoring vs the solo per-node kernel path: same
     4-node jax-engine fleet, same bursty stream, staging on vs off."""
@@ -263,6 +465,26 @@ def run(csv: Csv, verbose: bool = True, smoke: bool = False) -> Dict:
             1e6 / r["hier_events_per_s"],
             f"speedup={r['speedup']:.2f}x;frag={r['frag_time_avg']:.3f}",
         )
+    esweep = ELASTIC_SMOKE if smoke else ELASTIC_SWEEP
+    results["elastic"] = {}
+    for n_nodes, rate, n_jobs in esweep:
+        er = elastic_case(n_nodes, rate, n_jobs, repeats=1 if smoke else 2)
+        results["elastic"][n_nodes] = er
+        if verbose:
+            print(
+                f"fleet elastic nodes={n_nodes:4d} rate={rate:5.2f}/s "
+                f"jobs={n_jobs}: batched {er['batched_events_per_s']:7.0f} "
+                f"ev/s  solo {er['solo_events_per_s']:7.0f} ev/s "
+                f"({er['speedup']:4.2f}x)  "
+                f"(resizes={er['resizes']}, "
+                f"staged={er['resize_stage_served']})  parity OK"
+            )
+        csv.add(
+            f"fleet_elastic_n{n_nodes}",
+            1e6 / er["batched_events_per_s"],
+            f"speedup={er['speedup']:.2f}x;"
+            f"resizes={er['resizes']}",
+        )
     if not smoke:
         jp = jax_parity_case()
         results["jax_parity"] = jp
@@ -286,8 +508,15 @@ def write_json(path: str, results: Dict) -> None:
             "pods_per_region": PODS_PER_REGION,
             "chips": [c.name for c in CHIP_CYCLE],
         },
-        "gate": {"nodes": GATE_NODES, "min_events_per_s": MIN_EVENTS_PER_S},
+        "gate": {
+            "nodes": GATE_NODES,
+            "min_events_per_s": MIN_EVENTS_PER_S,
+            "min_elastic_speedup": MIN_ELASTIC_SPEEDUP,
+        },
         "cases": {str(k): v for k, v in results["cases"].items()},
+        "elastic": {
+            str(k): v for k, v in results.get("elastic", {}).items()
+        },
     }
     if "jax_parity" in results:
         payload["jax_parity"] = results["jax_parity"]
@@ -321,4 +550,11 @@ if __name__ == "__main__":
             raise SystemExit(
                 f"fleet throughput target missed: {ev:.0f} ev/s < "
                 f"{MIN_EVENTS_PER_S:.0f} at {GATE_NODES} nodes"
+            )
+        egate = res["elastic"][GATE_NODES]
+        if egate["speedup"] < MIN_ELASTIC_SPEEDUP:
+            raise SystemExit(
+                f"fast COMPLETE path target missed: "
+                f"{egate['speedup']:.2f}x < "
+                f"{MIN_ELASTIC_SPEEDUP:.1f}x at {GATE_NODES} nodes"
             )

@@ -52,6 +52,7 @@ tests/test_decision_cache.py).
 """
 from __future__ import annotations
 
+import time as _time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -447,9 +448,14 @@ class FleetIndex:
     pod keeps the aggregates a router needs to *lower-bound* every
     member's score without touching it:
 
-      - drain proxy pieces: min Σ end·g, max Σ g, min waiting min-work,
-        max alive units — combined into a valid per-pod lower bound on
-        ``outstanding(now)`` (min of sums ≥ sum of mins, and now ≥ 0);
+      - load-skew drain pieces (ISSUE 10): the exact per-member
+        ``outstanding`` minimum at the refresh instant, the fastest
+        member drain rate (max Σg/units) and the waiting-work floor
+        (min wait/units) — combined into a per-pod lower bound on
+        ``outstanding(now)`` that is *tight* right after a refresh and
+        decays admissibly between refreshes (a member's backlog can
+        shrink no faster than its committed drain rate, and never below
+        its waiting work);
       - per-app feasibility (any member fits);
       - per-app min best-mode energy E* and min E*/t* over fitting
         members, giving  score_i = E*_i + (E*_i/t*_i)·out_i
@@ -458,11 +464,11 @@ class FleetIndex:
     ``ClusterState`` hooks mark the index dirty; ``refresh``
     re-aggregates with a handful of vectorized ``reduceat`` passes over
     the rank-ordered arrays (one memory sweep, no per-pod Python loop).
-    Load aggregates (Σ end·g, Σ g, waiting work) move on every
-    launch/complete and refresh often; the per-app capacity tables
-    (fits, E*, E*/t*, units) only move on capacity events
+    Load aggregates (outstanding, drain rate, waiting floor) move on
+    every launch/complete and refresh often; the per-app capacity tables
+    (fits, E*, E*/t*) only move on capacity events
     (``set_alive_units``) and refresh separately, so steady routing pays
-    three reduceats, not seven.
+    three reduceats, not six.
     """
 
     def __init__(self, state: ClusterState, pod_size: int = 16,
@@ -477,10 +483,10 @@ class FleetIndex:
         self.pod_hi = np.minimum(self.pod_lo + self.pod_size, N)
         self.pod_of = state.rank // self.pod_size  # node index -> pod
         self.region_lo = np.arange(0, P, int(pods_per_region), dtype=np.int64)
-        self.amin = np.zeros(P)  # min Σ end·g
-        self.bmax = np.zeros(P)  # max Σ g
-        self.wmin = np.zeros(P)  # min waiting min-work
-        self.umax = np.ones(P)  # max alive units
+        self.outmin = np.zeros(P)  # min outstanding(t_load) over members
+        self.rate_max = np.zeros(P)  # max Σg/units (fastest member drain)
+        self.wmin_rate = np.zeros(P)  # min waiting-work/units (floor)
+        self._t_load = 0.0  # instant the load aggregates were taken at
         self.pod_fits = np.zeros((P, A), dtype=bool)
         self.emin = np.full((P, A), np.inf)
         self.eot_min = np.full((P, A), np.inf)
@@ -495,13 +501,12 @@ class FleetIndex:
         self._load_dirty = True
         self._caps_dirty = True
 
-    def refresh(self) -> None:
+    def refresh(self, now: float = 0.0) -> None:
         st = self.state
         if len(st.order) == 0:
             return
         order, lo = st.order, self.pod_lo
         if self._caps_dirty:
-            self.umax = np.maximum.reduceat(st.units[order], lo)
             fit = st.fits[order]
             self.pod_fits = np.logical_or.reduceat(fit, lo, axis=0)
             self.emin = np.minimum.reduceat(
@@ -513,16 +518,30 @@ class FleetIndex:
             )
             self._caps_dirty = False
         if self._load_dirty:
-            self.amin = np.minimum.reduceat(st.sum_end_g[order], lo)
-            self.bmax = np.maximum.reduceat(st.sum_g[order], lo)
-            self.wmin = np.minimum.reduceat(st.wait_units_s[order], lo)
+            # exact per-member outstanding at the refresh instant, so the
+            # pod bound is *tight* here (min over members, not a min of
+            # sums) — on loaded fleets this is what lets pruning win
+            # instead of every pod tying at a slack bound
+            self.outmin = np.minimum.reduceat(st.outstanding(now)[order], lo)
+            self.rate_max = np.maximum.reduceat(
+                st.sum_g[order] / st.units[order], lo
+            )
+            self.wmin_rate = np.minimum.reduceat(
+                st.wait_units_s[order] / st.units[order], lo
+            )
+            self._t_load = now
             self._load_dirty = False
 
     def out_lb(self, now: float) -> np.ndarray:
-        """Per-pod lower bound on every member's ``outstanding(now)``."""
-        return (
-            np.maximum(self.amin - now * self.bmax, 0.0) + self.wmin
-        ) / self.umax
+        """Per-pod lower bound on every member's ``outstanding(now)``.
+
+        A member's backlog decays at most at its committed drain rate
+        (Σg/units) and never below its waiting work, so
+        ``outmin - dt·rate_max`` clipped to the waiting floor stays
+        admissible for any ``now >= t_load`` (and for ``now < t_load``
+        the dt clamp keeps the stale-but-valid refresh-time bound)."""
+        dt = max(now - self._t_load, 0.0)
+        return np.maximum(self.outmin - dt * self.rate_max, self.wmin_rate)
 
 
 class HierarchicalDispatcher:
@@ -584,7 +603,7 @@ class HierarchicalDispatcher:
         ):
             return inner.route_indexed(ai, state, now)
         fleet = self._fleet(state)
-        fleet.refresh()
+        fleet.refresh(now)
         if isinstance(inner, RoundRobinDispatcher):
             return self._route_rr(ai, state, fleet)
         if isinstance(inner, (LeastLoadedDispatcher, EnergyAwareDispatcher)):
@@ -634,6 +653,14 @@ class HierarchicalDispatcher:
             )
         else:
             lb[ok] = out_lb[ok]
+        # one-sided float guard: the tight load-skew bound computes the
+        # same quantity as a lone member's score through a *different*
+        # rounding path (e + (e/t)·out vs e·(out+t)/t), so reassociation
+        # can land lb a few ulps above a tying member — which would prune
+        # its pod and break flat parity.  Shaving a relative 1e-12 (three
+        # orders above the ~6·eps worst case) keeps the bound admissible
+        # in floats too; the cost is only an occasional extra pod scan.
+        lb[ok] *= 1.0 - 1e-12
         order = state.order
         sum_end_g, sum_g = state.sum_end_g, state.sum_g
         wait, units, fits = state.wait_units_s, state.units, state.fits
@@ -1010,6 +1037,11 @@ class ClusterRun:
         self._frag_t = 0.0
         self._frag_cur = 0.0
         self._frag_peak = 0.0
+        # run-level decision-phase clocks (ISSUE 10): dispatch routing and
+        # cross-node kernel staging are cluster work, not node work — the
+        # per-node clocks (launch/resize/migrate) live on each NodeSim
+        self._dispatch_time = 0.0
+        self._stage_time = 0.0
         if max_events is None:
             max_events = _auto_max_events(self.n_jobs, floor=1_000_000)
         self.loop = EventLoop(
@@ -1032,6 +1064,7 @@ class ClusterRun:
             migrate_candidate=self._migrate_candidate,
             reroute_waiting=self._reroute_waiting,
             prepare_batch=self._prepare_batch,
+            prepare_complete=self._prepare_complete_batch,
         )
 
     # -- job registry --------------------------------------------------------
@@ -1131,6 +1164,20 @@ class ClusterRun:
             self._frag_peak = cur
 
     def _prepare_batch(self, names: Sequence[str], t: float) -> None:
+        t0 = _time.perf_counter()
+        try:
+            self._stage_arrival_batch(names, t)
+        finally:
+            self._stage_time += _time.perf_counter() - t0
+
+    def _prepare_complete_batch(self, pairs, t: float) -> None:
+        t0 = _time.perf_counter()
+        try:
+            self._stage_complete_batch(pairs, t)
+        finally:
+            self._stage_time += _time.perf_counter() - t0
+
+    def _stage_arrival_batch(self, names: Sequence[str], t: float) -> None:
         """Fleet-batched decision staging (ISSUE 9): when a same-instant
         event batch touches several nodes, run every pending Eq. (1)
         reduction as ONE cross-node kernel launch
@@ -1177,12 +1224,94 @@ class ClusterRun:
             for (pol, _), (_, best) in zip(second, out2):
                 pol.stage_round2(int(best))
 
+    def _stage_complete_batch(self, pairs, t: float) -> None:
+        """COMPLETE-burst decision staging (ISSUE 10 tentpole): when a
+        same-instant COMPLETE burst spans several nodes, predict each
+        node's post-completion view (the completing job's units freed,
+        clock at the burst instant) and collect every Eq. (1) reduction
+        that view implies — the backfill launch scoring and, where the
+        elastic ordering allows, the whole resize candidate table — into
+        ONE cross-node multi-window kernel launch
+        (``repro.kernels.score_reduce_multi``).  Pure staging, exactly
+        like the arrival path: the multi-window kernel is bitwise-locked
+        to the solo kernel and every policy re-checks its decision-state
+        signature at consumption time inside the strictly-ordered
+        per-completion processing, so any prediction miss (a fault's
+        capacity change, a migration, an earlier completion's backfill
+        touching the node) falls back to the solo recomputation —
+        schedules are bit-identical either way.
+
+        Resize staging is attempted only when the resize phase will run
+        against the post-completion view unchanged: either
+        ``resize_before_backfill`` or an empty backfill queue.  In the
+        other orderings the backfill launch would invalidate the
+        signature anyway, so staging would be pure waste."""
+        cfg = self.elastic
+        launch_staged: List[Tuple[object, dict]] = []
+        resize_staged: List[Tuple[object, List[dict]]] = []
+        for nm, rj in pairs:
+            sim = self.sims[nm]
+            pol = sim.policy
+            if getattr(pol, "engine", None) != "jax":
+                continue
+            if getattr(pol, "stage_score", None) is None or (
+                getattr(pol, "_freed_view", None) is None
+            ):
+                continue
+            view = pol._freed_view(sim.node_view(), rj, t=t, scratch=False)
+            if sim.waiting:
+                req = pol.stage_score(view, list(sim.waiting))
+                if req is not None:
+                    launch_staged.append((pol, req))
+            if (
+                cfg is not None
+                and cfg.resize
+                and (cfg.resize_before_backfill or not sim.waiting)
+                and getattr(pol, "stage_resize", None) is not None
+            ):
+                reqs = pol.stage_resize(
+                    view, frac_of=lambda r, _t=t: r.frac_at(_t), cfg=cfg
+                )
+                if reqs:
+                    resize_staged.append((pol, reqs))
+        if len(launch_staged) + len(resize_staged) < 2:
+            # a lone node's decisions gain nothing from cross-node
+            # batching (its resize table is already one multi-window
+            # launch inside propose_resizes)
+            for pol, _ in launch_staged:
+                pol.stage_drop()
+            for pol, _ in resize_staged:
+                pol.stage_resize_drop()
+            return
+        from repro.kernels.score_reduce import score_reduce_multi
+
+        reqs_all = [req for _, req in launch_staged]
+        k_launch = len(reqs_all)
+        for _, rl in resize_staged:
+            reqs_all.extend(rl)
+        bests = [b for _, b in score_reduce_multi(reqs_all)]
+        second: List[Tuple[object, dict]] = []
+        for (pol, _), best in zip(launch_staged, bests[:k_launch]):
+            req2 = pol.stage_round1(int(best))
+            if req2 is not None:
+                second.append((pol, req2))
+        if second:  # idle-node deadlock guards, themselves batched
+            out2 = score_reduce_multi([req for _, req in second])
+            for (pol, _), (_, best2) in zip(second, out2):
+                pol.stage_round2(int(best2))
+        i = k_launch
+        for pol, rl in resize_staged:
+            pol.stage_resize_results(bests[i:i + len(rl)])
+            i += len(rl)
+
     def route(self, arr: Arrival, t: float) -> Optional[str]:
         if arr.name in self._cancelled:
             return None  # cancelled between submit and its ARRIVAL pop
         state = self.state
         ai = state.app_index[arr.app]
+        t0 = _time.perf_counter()
         ni = self.dispatcher.route_indexed(ai, self._dispatch_state, t)
+        self._dispatch_time += _time.perf_counter() - t0
         if ni < 0:
             if self.faults is not None and bool(self._fits_healthy[:, ai].any()):
                 # every node that can host this app is currently failed or
@@ -1432,4 +1561,11 @@ class ClusterRun:
             tail_idle_energy=tail_idle,
             forecast=self.plane.summary() if self.plane is not None else {},
             fragmentation=frag,
+            decision_phases={
+                "dispatch": self._dispatch_time,
+                "launch": sum(r.decision_time_s for r in per_node.values()),
+                "resize": sum(r.resize_time_s for r in per_node.values()),
+                "migrate": sum(r.migrate_time_s for r in per_node.values()),
+                "stage": self._stage_time,
+            },
         )

@@ -51,7 +51,6 @@ Beyond-paper options (all default-off; §Perf ablations):
 """
 from __future__ import annotations
 
-from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -75,7 +74,9 @@ class EcoSched:
         beam: int = 64,
         lookahead: float = 0.0,
         engine: str = "vector",
-        cache: bool = True,
+        cache=True,
+        resize_batch: bool = True,
+        launch_share: bool = True,
     ):
         if engine not in ("vector", "python", "jax"):
             raise ValueError(f"unknown scoring engine {engine!r}")
@@ -92,15 +93,45 @@ class EcoSched:
         self.beam = beam
         self.lookahead = lookahead
         self.engine = engine
-        self._cache = DecisionCache() if (cache and engine != "python") else None
+        # ``cache`` accepts a shared ``DecisionCache`` instance (ISSUE 10):
+        # every cache key is name-free and structure-interned, so policies
+        # on identically-shaped nodes can pool one cache and serve each
+        # other's first-sight enumerations — at fleet scale each node sees
+        # only a handful of jobs, so private caches never warm up.  The
+        # decision is a pure function of the key either way: sharing
+        # changes hit rates, never schedules.
+        if isinstance(cache, DecisionCache):
+            self._cache = cache if engine != "python" else None
+        else:
+            self._cache = (
+                DecisionCache() if (cache and engine != "python") else None
+            )
         self._filtered: Dict[str, JobSpec] = {}  # job -> τ-filtered spec
-        # launch-level memo: decision state -> [(window position, g, f)].
-        # The chosen action is a pure function of the (name-free) decision
-        # state, so a repeated state skips scoring outright and only
-        # rebinds window positions to the current job names.
-        self._launch_memo: "OrderedDict[Tuple, Tuple]" = OrderedDict()
-        self._launch_epoch = 0
+        # launch-level memo layers (stored *in* the DecisionCache, so fleet
+        # peers pooling one cache replay each other's decisions too):
+        #   * raw layer — exact decision state (token order included) ->
+        #     final launch pairs; the chosen action is a pure function of
+        #     the (name-free) state, so a repeat skips scoring outright.
+        #   * tie-frontier layer (ISSUE 10 fast path, ``launch_share``) —
+        #     *canonical* (token-sorted) state -> every argmin-optimal row
+        #     (min score, max total count) in canonical slot form.  A
+        #     permuted window re-breaks the tie in its own reference
+        #     enumeration order (size, then ascending position tuple, then
+        #     mode tuple) — exactly what its cold argmin would do — so the
+        #     replay is bit-identical to scoring from scratch while
+        #     skipping the enumeration *and* the kernel launch.  A
+        #     single-winner canonical entry is unsound: exact
+        #     cross-structure ties are structural here (normalized best
+        #     modes all score dev=0) and the winner depends on window
+        #     order.  ``launch_share=False`` disables the layer (the
+        #     bench's pre-batching reference leg).
+        self.launch_share = launch_share
         self.launch_hits = 0
+        self.frontier_hits = 0
+        # (batch, used_nonempty, chosen row) of the engine decision that
+        # produced the current action — the frontier store reads it right
+        # after engine dispatch; None when the python reference ran
+        self._last_decision = None
         # fleet-batched decision staging (ISSUE 9): a coordinator
         # (repro.core.cluster.ClusterRun) may pre-run this node's Eq. (1)
         # reduction inside one cross-node kernel launch and park the
@@ -109,6 +140,18 @@ class EcoSched:
         # consumed stagings (observability + test hook).
         self._staged: Optional[dict] = None
         self.stage_served = 0
+        # batched elastic resize scoring (ISSUE 10 tentpole): collect every
+        # eligible running job's candidate window and score them through
+        # one multi-window kernel launch instead of one launch per job.
+        # ``resize_batch=False`` keeps the per-job loop (the measured
+        # pre-batching baseline; schedules are bit-identical either way).
+        self.resize_batch = resize_batch
+        self._staged_resize: Optional[dict] = None
+        self.resize_stage_served = 0
+        # scratch free-unit mask for the resize hot path (_freed_view):
+        # reused across candidates instead of allocating a fresh list +
+        # per-unit Python loop per candidate per COMPLETE event
+        self._free_scratch: Optional[np.ndarray] = None
         # forecast plane (repro.core.forecast): attached by the simulation
         # entry points when a ForecastConfig is enabled; None otherwise
         self._plane = None
@@ -126,7 +169,8 @@ class EcoSched:
             return {}
         s = self._cache.stats()
         s["launch_hits"] = self.launch_hits
-        h = self.launch_hits + s["decision_hits"]
+        s["frontier_hits"] = self.frontier_hits
+        h = self.launch_hits + self.frontier_hits + s["decision_hits"]
         m = s["decision_misses"]
         s["event_hit_rate"] = h / (h + m) if h + m else 0.0
         return s
@@ -168,21 +212,10 @@ class EcoSched:
         specs = [s for s in specs if s.modes]
         if not specs:
             return []
-        key = None
-        order = None
+        key = ckey = order = None
         if self._cache is not None and view.domain_jobs:
-            if self._launch_epoch != self._cache.epoch:
-                # token tables were reset; stale token keys could alias
-                self._launch_memo.clear()
-                self._launch_epoch = self._cache.epoch
             toks = tuple(self._cache.spec_token(s) for s in specs)
-            # order-canonical memo key (stable sort): permuted windows with
-            # the same structure multiset share one entry; stored pairs are
-            # (canonical slot, g), mapped back through the current order
-            order = DecisionCache.canonical_order(toks)
-            ctoks = toks if order is None else tuple(toks[i] for i in order)
-            key = (
-                ctoks,
+            rest = (
                 _mask_of(view.free_map),
                 tuple(view.domain_jobs),
                 bool(view.running),  # the deadlock guard reads this
@@ -190,21 +223,36 @@ class EcoSched:
                 view.dead_units,  # degraded capacity changes the argmin
                 view.domains,
             )
-            hit = self._launch_memo.get(key)
+            # raw (order-sensitive) layer first: the chosen action breaks
+            # exact score ties by window position, so a permuted window is
+            # a *different* decision — a single-winner canonical key here
+            # replayed the producer's tie order, which diverged from a cold
+            # evaluation whenever two structures tied exactly
+            key = (toks,) + rest
+            hit = self._cache.launch(key)
             if hit is not None:
-                self._launch_memo.move_to_end(key)
                 self.launch_hits += 1
-                if order is None:
-                    pairs = [(c, g, f) for c, g, f in hit]
-                else:
-                    pairs = [(order[c], g, f) for c, g, f in hit]
-                # normalize equal-g ties to current-window position so a
-                # permuted hit replays the order a cold evaluation of THIS
-                # window would produce (cache purity)
-                pairs.sort(key=lambda pg: (-pg[1], pg[0]))
                 return [
-                    Launch(job=specs[p].name, g=g, f=f) for p, g, f in pairs
+                    Launch(job=specs[p].name, g=g, f=f) for p, g, f in hit
                 ]
+            if self.launch_share:
+                # canonical tie-frontier layer: permuted windows share the
+                # full optimal set and re-break the tie in *this* window's
+                # enumeration order — pure, unlike a single stored winner
+                order = DecisionCache.canonical_order(toks)
+                ckey = (
+                    toks if order is None else tuple(toks[i] for i in order),
+                ) + rest
+                cands = self._cache.frontier(ckey)
+                if cands is not None:
+                    self.frontier_hits += 1
+                    pairs = _replay_frontier(cands, order, specs)
+                    self._cache.store_launch(key, pairs)
+                    return [
+                        Launch(job=specs[p].name, g=g, f=f)
+                        for p, g, f in pairs
+                    ]
+        self._last_decision = None
         if self.engine == "python":
             action = self._best_python(specs, view)
         elif self.engine == "jax":
@@ -212,27 +260,56 @@ class EcoSched:
         else:
             action = self._best_vector(specs, view)
         # descending count — the order the feasibility replay allocated;
-        # equal counts break toward the earlier window position, which is
-        # exactly what the stable sort over ascending-position action
-        # tuples produced, but stays well-defined when a cached action is
-        # rebound to a permuted window
+        # equal counts break toward the earlier window position
         pos_of = {id(sp): i for i, sp in enumerate(specs)}
         pairs = sorted(
             ((pos_of[id(sp)], m.g, m.f) for sp, m in action),
             key=lambda pg: (-pg[1], pg[0]),
         )
         if key is not None:
-            if order is None:
-                stored = tuple(pairs)
-            else:  # window position -> canonical slot
-                inv = [0] * len(specs)
-                for c, p in enumerate(order):
-                    inv[p] = c
-                stored = tuple((inv[p], g, f) for p, g, f in pairs)
-            self._launch_memo[key] = stored
-            if len(self._launch_memo) > 8192:
-                self._launch_memo.popitem(last=False)
+            self._cache.store_launch(key, tuple(pairs))
+            if ckey is not None and self._last_decision is not None:
+                self._store_frontier(ckey, order, *self._last_decision)
         return [Launch(job=specs[p].name, g=g, f=f) for p, g, f in pairs]
+
+    def _store_frontier(self, ckey, order, batch, used_nonempty, chosen):
+        """Store the decision's full argmin frontier — every row attaining
+        (min biased score, max total count), restricted to non-empty rows
+        when the idle-node guard re-scored — keyed on the canonical decision
+        state.  Scores, totals and the frontier *set* are order-free; only
+        the tie-break among members depends on window order, so the replay
+        (`_replay_frontier`) re-breaks it per consumer.  Skipped for beam
+        batches (their row *set* is window-order dependent) and when the
+        engine's winner is not the frontier's producer-order minimum (a
+        float32 kernel argmin diverging from the float64 frontier would
+        make replay unsound — never observed, but cheap to guard)."""
+        if not getattr(batch, "exact", False):
+            return
+        sc = batch.scores
+        if self.lookahead:
+            sc = sc + self.lookahead * batch.spread
+        if used_nonempty:
+            idxs = np.flatnonzero(batch.n_jobs > 0)
+            if idxs.size == 0:
+                return
+            sub = sc[idxs]
+            tie = idxs[sub == sub.min()]
+        else:
+            tie = np.flatnonzero(sc == sc.min())
+        tot = batch.total_g[tie]
+        frontier = tie[tot == tot.max()]
+        if frontier.size > 64 or int(frontier[0]) != chosen:
+            return
+        J = len(batch.specs)
+        slot_of = list(range(J))
+        if order is not None:
+            for c, p in enumerate(order):
+                slot_of[p] = c
+        cands = tuple(
+            tuple(sorted((slot_of[p], m) for p, m in batch.row_pairs(int(r))))
+            for r in frontier
+        )
+        self._cache.store_frontier(ckey, cands)
 
     def _enumerate(self, specs, view: NodeView):
         # free_map is only read (mask/bitmask replay) — no defensive copy
@@ -250,12 +327,15 @@ class EcoSched:
             # windows too wide for the engine's int64 action-set keys
             # (never the pod-scale target); the reference path has no limit
             return self._best_python(specs, view)
+        used_nonempty = False
         i = batch.best_cached(self.lookahead)
         # row 0 is always the empty action; any other row is non-empty
         if i == 0 and not view.running:
             j = batch.best_cached(self.lookahead, nonempty=True)
             if j is not None:
                 i = j
+                used_nonempty = True
+        self._last_decision = (batch, used_nonempty, int(i))
         return batch.action(i)
 
     # -- fleet-batched decisions (ISSUE 9) ---------------------------------
@@ -298,14 +378,8 @@ class EcoSched:
         if not specs:
             return None
         if self._cache is not None and view.domain_jobs:
-            if self._launch_epoch != self._cache.epoch:
-                self._launch_memo.clear()
-                self._launch_epoch = self._cache.epoch
             toks = tuple(self._cache.spec_token(s) for s in specs)
-            order = DecisionCache.canonical_order(toks)
-            ctoks = toks if order is None else tuple(toks[i] for i in order)
-            key = (
-                ctoks,
+            rest = (
                 _mask_of(view.free_map),
                 tuple(view.domain_jobs),
                 bool(view.running),
@@ -313,8 +387,15 @@ class EcoSched:
                 view.dead_units,
                 view.domains,
             )
-            if key in self._launch_memo:
+            if self._cache.launch((toks,) + rest) is not None:
                 return None  # on_event replays the memo; no kernel runs
+            if self.launch_share:
+                order = DecisionCache.canonical_order(toks)
+                ckey = (
+                    toks if order is None else tuple(toks[i] for i in order),
+                ) + rest
+                if self._cache.frontier(ckey) is not None:
+                    return None  # on_event re-breaks the frontier tie
         try:
             batch = self._enumerate(specs, view)
         except OverflowError:
@@ -351,6 +432,7 @@ class EcoSched:
         st = self._staged
         if st is not None and best >= 0:
             st["best"] = int(best)
+            st["nonempty"] = True  # guard re-score chose this row
 
     def stage_drop(self) -> None:
         self._staged = None
@@ -364,7 +446,12 @@ class EcoSched:
         ):
             self.stage_served += 1
             i = staged["best"]
-            return staged["batch"].action(i) if i >= 0 else ()
+            if i >= 0:
+                self._last_decision = (
+                    staged["batch"], staged.get("nonempty", False), int(i)
+                )
+                return staged["batch"].action(i)
+            return ()
         try:
             batch = self._enumerate(specs, view)
         except OverflowError:
@@ -383,6 +470,7 @@ class EcoSched:
         )
         if i < 0:  # unreachable: the empty action is always feasible
             return ()
+        used_nonempty = False
         if i == 0 and not view.running:  # row 0 is the empty action
             _, j = score_reduce(
                 dev, g, n,
@@ -391,6 +479,8 @@ class EcoSched:
             )
             if j >= 0:
                 i = j
+                used_nonempty = True
+        self._last_decision = (batch, used_nonempty, int(i))
         return batch.action(i)
 
     def _best_python(self, specs, view: NodeView):
@@ -409,7 +499,7 @@ class EcoSched:
                 best_s, best_a = nonempty[0]
         return best_a
 
-    # -- elastic GPU resizing (ISSUE 4) ------------------------------------
+    # -- elastic GPU resizing (ISSUE 4; batched scoring ISSUE 10) ----------
     def propose_resizes(self, view: NodeView, *, frac_of, cfg) -> List[Launch]:
         """Substrate hook (``repro.core.events``): on a COMPLETE event,
         propose preempt-and-relaunch of one running job at a now-better
@@ -427,11 +517,17 @@ class EcoSched:
         ``cfg.min_gain_s`` — energy-better-but-slower moves never degrade
         makespan.  Returns at most one proposal (the largest predicted
         gain); the substrate enforces its own guards on top.
+
+        With ``resize_batch`` (the default for the array engines) every
+        candidate window is scored in ONE kernel/vector reduction instead
+        of one per running job, and a fleet coordinator may have pre-run
+        the whole reduction inside a cross-node COMPLETE-burst launch
+        (``stage_resize``) — consumed only on an exact decision-state
+        signature match, so schedules are bit-identical either way.
         """
+        staged, self._staged_resize = self._staged_resize, None
         if view.free_units <= 0 or not view.running:
             return []
-        best: Optional[Tuple[float, Launch]] = None
-        overhead = cfg.ckpt_time + cfg.restart_time
         # forecast-conditioned switch cost: under burst risk / queue
         # pressure the freed units are about to be needed, so changing a
         # count must clear a larger margin (identical to cfg.switch_cost
@@ -441,6 +537,40 @@ class EcoSched:
             if self._plane is None
             else self._plane.resize_switch_cost(self._node, cfg.switch_cost, view.t)
         )
+        if (
+            staged is not None
+            and staged["bests"] is not None
+            and staged["sig"] == self._resize_sig(view, switch_cost, cfg)
+        ):
+            self.resize_stage_served += 1
+            return self._pick_resize(staged["cands"], staged["bests"], cfg)
+        if not self.resize_batch or self.engine == "python":
+            return self._propose_solo(view, frac_of, cfg, switch_cost)
+        cands = self._resize_candidates(view, frac_of, cfg)
+        if not cands:
+            return []
+        reqs = self._resize_requests(cands, switch_cost)
+        if self.engine == "jax":
+            from repro.kernels.score_reduce import score_reduce_multi
+
+            bests = [b for _, b in score_reduce_multi(reqs)]
+        else:  # vector: the same per-window argmin, batched numpy
+            bests = [
+                c["batch"].best_index(
+                    c["batch"].scores + c["bias"], nonempty=True
+                )
+                for c in cands
+            ]
+        return self._pick_resize(cands, bests, cfg)
+
+    def _propose_solo(
+        self, view: NodeView, frac_of, cfg, switch_cost: float
+    ) -> List[Launch]:
+        """The pre-batching per-job loop: one enumeration + one scoring
+        reduction per eligible running job (kept as the reference/baseline
+        leg; also the ``python`` engine's path)."""
+        best: Optional[Tuple[float, Launch]] = None
+        overhead = cfg.ckpt_time + cfg.restart_time
         for rj in view.running:
             if rj.preempted or frac_of(rj) >= 1.0:
                 continue
@@ -472,18 +602,197 @@ class EcoSched:
                 best = (gain, Launch(job=rj.job, g=g_new, f=f_new))
         return [best[1]] if best is not None else []
 
-    @staticmethod
-    def _freed_view(view: NodeView, rj: RunningJob) -> NodeView:
+    def _resize_candidates(self, view: NodeView, frac_of, cfg) -> List[dict]:
+        """The guard prefix of the per-job loop, shared by the batched and
+        staged paths: collect every eligible running job's candidate
+        window (same guards, same order) with its enumeration done but the
+        scoring deferred."""
+        overhead = cfg.ckpt_time + cfg.restart_time
+        cands: List[dict] = []
+        for rj in view.running:
+            if rj.preempted or frac_of(rj) >= 1.0:
+                continue
+            rem_t = rj.end - view.t
+            useful_rem = rj.end - max(view.t, rj.start + rj.restart)
+            if useful_rem <= overhead + cfg.min_gain_s:
+                continue
+            spec = self._spec(rj.job)
+            if len(spec.modes) < 2:
+                continue
+            try:
+                cur = spec.mode(rj.g, rj.f)
+            except KeyError:
+                continue
+            hypo = self._freed_view(view, rj)
+            try:
+                batch = self._enumerate([spec], hypo)
+            except OverflowError:  # pragma: no cover - single-job windows
+                continue
+            # single-job window: each non-empty row's total_g IS its count
+            # and slot 0 of the padded f plane IS its frequency level
+            moved = (batch.total_g != rj.g) | (
+                batch.padded_f()[:, 0].astype(np.int64) != rj.f
+            )
+            cands.append(
+                dict(
+                    rj=rj, cur=cur, batch=batch, moved=moved,
+                    rem_t=rem_t, useful_rem=useful_rem,
+                    g_free=hypo.free_units, M=hypo.alive_units,
+                )
+            )
+        return cands
+
+    def _resize_requests(
+        self, cands: List[dict], switch_cost: float
+    ) -> List[dict]:
+        """Kernel request dict per candidate window (the
+        ``score_reduce_multi`` shape); also materializes each window's
+        switch-cost bias on the candidate entry."""
+        reqs = []
+        for c in cands:
+            batch = c["batch"]
+            bias = np.where(
+                c["moved"] & (batch.n_jobs > 0), switch_cost, 0.0
+            )
+            c["bias"] = bias
+            dev, g, n = batch.padded_cols()
+            reqs.append(
+                dict(
+                    dev=dev, g=g, n=n, lam=self.lam,
+                    g_free=c["g_free"], M=c["M"],
+                    f=batch.padded_f() if self.lam_f else None,
+                    lam_f=self.lam_f, bias=bias, mask=batch.n_jobs > 0,
+                )
+            )
+        return reqs
+
+    def _pick_resize(
+        self, cands: List[dict], bests: Sequence[Optional[int]], cfg
+    ) -> List[Launch]:
+        """Apply the post-score guards (joint-mode identity, predicted
+        min-gain) to the per-window argmins and keep the largest-gain
+        proposal — the exact tail of the per-job loop."""
+        best: Optional[Tuple[float, Launch]] = None
+        overhead = cfg.ckpt_time + cfg.restart_time
+        for c, i in zip(cands, bests):
+            if i is None or i < 0:
+                continue
+            action = c["batch"].action(int(i))
+            if not action:
+                continue
+            m = action[0][1]
+            rj = c["rj"]
+            if (m.g, m.f) == (rj.g, rj.f):
+                continue
+            pred_rem = overhead + c["useful_rem"] * (
+                m.t_norm / c["cur"].t_norm
+            )
+            gain = c["rem_t"] - pred_rem
+            if gain <= cfg.min_gain_s:
+                continue
+            if best is None or gain > best[0]:
+                best = (gain, Launch(job=rj.job, g=m.g, f=m.f))
+        return [best[1]] if best is not None else []
+
+    # -- COMPLETE-burst staging (ISSUE 10) ---------------------------------
+
+    def _resize_sig(self, view: NodeView, switch_cost: float, cfg) -> Tuple:
+        """Everything the resize decision is a pure function of: the node
+        state the candidate windows were built from, every running job's
+        mode/timing fields (candidacy guards and gain predictions read
+        them), the effective switch cost (forecast planes condition it on
+        mutable queue-pressure state), the cfg knobs, and the perf-model
+        version (spec tables).  A staged result is consumed only on an
+        exact match, so any drift between the predicted post-COMPLETE
+        state and the real one falls back to the solo recomputation."""
+        return (
+            view.t,
+            _mask_of(view.free_map),
+            tuple(view.domain_jobs),
+            view.total_units,
+            view.dead_units,
+            view.domains,
+            view.free_units,
+            tuple(
+                (rj.job, rj.g, rj.f, rj.end, rj.start, rj.restart,
+                 rj.frac0, rj.preempted, rj.failed, rj.domain,
+                 tuple(rj.units))
+                for rj in view.running
+            ),
+            switch_cost,
+            (cfg.ckpt_time, cfg.restart_time, cfg.min_gain_s,
+             cfg.switch_cost),
+            getattr(self.perf_model, "version", 0),
+        )
+
+    def stage_resize(self, view: NodeView, *, frac_of, cfg):
+        """Phase 1 of a fleet-coordinated COMPLETE burst: build this
+        node's resize candidate windows against the *predicted*
+        post-completion view and return their kernel requests for the
+        coordinator's single cross-node ``score_reduce_multi`` launch.
+        Returns None when the imminent solo pass would not launch kernels
+        anyway (non-jax engine, batching off, no eligible candidates)."""
+        self._staged_resize = None
+        if self.engine != "jax" or not self.resize_batch:
+            return None
+        if view.free_units <= 0 or not view.running:
+            return None
+        switch_cost = (
+            cfg.switch_cost
+            if self._plane is None
+            else self._plane.resize_switch_cost(self._node, cfg.switch_cost, view.t)
+        )
+        cands = self._resize_candidates(view, frac_of, cfg)
+        if not cands:
+            return None
+        reqs = self._resize_requests(cands, switch_cost)
+        self._staged_resize = {
+            "sig": self._resize_sig(view, switch_cost, cfg),
+            "cands": cands,
+            "bests": None,
+        }
+        return reqs
+
+    def stage_resize_results(self, bests: Sequence[int]) -> None:
+        """Phase 2: park the batched per-window argmins for consumption
+        by the next ``propose_resizes`` call (signature-guarded)."""
+        st = self._staged_resize
+        if st is not None:
+            st["bests"] = [int(b) for b in bests]
+
+    def stage_resize_drop(self) -> None:
+        self._staged_resize = None
+
+    def _freed_view(
+        self, view: NodeView, rj: RunningJob, t: Optional[float] = None,
+        scratch: bool = True,
+    ) -> NodeView:
         """Hypothetical node state with ``rj``'s units and home domain
-        freed — what the node looks like the instant the resize relaunches."""
-        free_map = list(view.free_map)
-        for u in rj.units:
-            free_map[u] = True
+        freed — what the node looks like the instant the resize relaunches
+        (or, with ``t``, the predicted post-COMPLETE state a burst
+        coordinator stages against).  With ``scratch`` (the resize hot
+        path) the returned ``free_map`` aliases a per-policy numpy buffer
+        and is valid only until the next scratch call — candidates are
+        built and enumerated one at a time; pass ``scratch=False`` for a
+        view that must outlive the loop."""
+        if scratch:
+            nu = view.total_units
+            buf = self._free_scratch
+            if buf is None or buf.shape[0] < nu:
+                buf = self._free_scratch = np.empty(nu, dtype=bool)
+            free_map = buf[:nu]
+            free_map[:] = view.free_map
+            for u in rj.units:
+                free_map[u] = True
+        else:
+            free_map = list(view.free_map)
+            for u in rj.units:
+                free_map[u] = True
         occ = list(view.domain_jobs) if view.domain_jobs else [0] * view.domains
         if occ and 0 <= rj.domain < len(occ) and occ[rj.domain] > 0:
             occ[rj.domain] -= 1
         return NodeView(
-            t=view.t,
+            t=view.t if t is None else t,
             total_units=view.total_units,
             domains=view.domains,
             free_units=view.free_units + rj.g,
@@ -563,3 +872,33 @@ class EcoSched:
         loads = [m.t_norm * m.g for _, m in action]
         spread = (max(loads) - min(loads)) / max(max(loads), 1e-9)
         return self.lookahead * spread
+
+
+def _replay_frontier(cands, order, specs) -> Tuple:
+    """Re-break a stored tie frontier in the consumer window's order.
+
+    ``cands`` holds every argmin-optimal action of the decision in
+    canonical slot form; the cold argmin picks whichever of them the
+    consumer's reference enumeration generates first — rows enumerate by
+    ascending action size, then lexicographically by (ascending position
+    tuple, mode tuple) — so mapping slots onto this window's positions
+    (slot ``c`` holds position ``order[c]``) and taking the minimum of
+    that key reproduces the cold choice exactly.  Returns the launch-memo
+    pair tuple ((position, g, f), ...) sorted the way ``on_event`` emits
+    launches (descending count, then position)."""
+    best_key = best = None
+    for cand in cands:
+        mapped = sorted((c if order is None else order[c], m) for c, m in cand)
+        k = (
+            len(mapped),
+            tuple(p for p, _ in mapped),
+            tuple(m for _, m in mapped),
+        )
+        if best_key is None or k < best_key:
+            best_key, best = k, mapped
+    return tuple(
+        sorted(
+            ((p, specs[p].modes[m].g, specs[p].modes[m].f) for p, m in best),
+            key=lambda pg: (-pg[1], pg[0]),
+        )
+    )

@@ -332,12 +332,18 @@ class DecisionCache:
                        placement replay and scoring outright and rebinds
                        the batch to the current specs — the keys sort the
                        window's tokens (stably), so permuted waiting
-                       windows share one entry (ISSUE 4 satellite).
+                       windows share one entry (ISSUE 4 satellite).  A
+                       permuted hit re-orders the stored rows into the
+                       consumer window's reference order first (row order
+                       carries the tie-break; see ``_reorder_hit``).
 
     Caching is *pure*: a hit returns arrays bit-identical to a rebuild
     (locked in tests/test_decision_cache.py), so schedules and energies are
-    unchanged.  One instance per policy (per node) — keys never mix node
-    geometries.
+    unchanged.  Every key is name-free, so one instance may be shared by
+    many policies on identically-shaped nodes (ISSUE 10): fleet peers then
+    serve each other's first-sight enumerations — at fleet scale a private
+    cache never warms, because each node only ever sees a handful of jobs.
+    Sharing changes hit rates, never schedules.
     """
 
     def __init__(
@@ -346,17 +352,35 @@ class DecisionCache:
         max_oracles: int = 4096,
         max_decisions: int = 8192,
         max_structs: int = 100_000,
+        max_launches: int = 65_536,
+        max_frontiers: int = 16_384,
     ):
         self.max_tables = max_tables
         self.max_oracles = max_oracles
         self.max_decisions = max_decisions
         self.max_structs = max_structs
+        self.max_launches = max_launches
+        self.max_frontiers = max_frontiers
         # bumped whenever the token tables reset; anything keyed on tokens
         # (here and in EcoSched's launch memo) must be dropped with them
         self.epoch = 0
         self._tables: "OrderedDict[Tuple, _SpecTable]" = OrderedDict()
         self._oracles: "OrderedDict[Tuple, PlacementOracle]" = OrderedDict()
         self._decisions: "OrderedDict[Tuple, ScoredBatch]" = OrderedDict()
+        # launch-level layers (EcoSched's memo, relocated here so fleet
+        # peers sharing one cache serve each other's *decisions*, not just
+        # each other's enumerations — a single node rarely repeats a
+        # decision state, but 256 identically-shaped nodes repeat each
+        # other's constantly):
+        #   * _launches  — raw (order-sensitive) decision state -> final
+        #     ((window position, g, f), ...) launch pairs; exact replay.
+        #   * _frontiers — canonical (token-sorted) decision state -> the
+        #     full argmin tie frontier in canonical-slot form; a permuted
+        #     consumer re-breaks the tie in its own enumeration order
+        #     (see ecosched._replay_frontier), which is exactly what its
+        #     cold argmin would do.
+        self._launches: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+        self._frontiers: "OrderedDict[Tuple, Tuple]" = OrderedDict()
         # structure interning: each distinct per-job mode structure gets a
         # small int token, so window keys are tuples of ints (fast to hash
         # in the per-event hot path) instead of nested float tuples.  The
@@ -395,6 +419,8 @@ class DecisionCache:
         self._struct_ids.clear()
         self._tables.clear()
         self._decisions.clear()
+        self._launches.clear()
+        self._frontiers.clear()
         self.epoch += 1
 
     def window_key(self, specs: Sequence[JobSpec]) -> Tuple:
@@ -407,12 +433,16 @@ class DecisionCache:
         the window is already canonical (the overwhelmingly common case —
         repeats of the same window).  Keying decisions on the *sorted*
         tokens lets permuted waiting windows (same jobs, different queue
-        order) hit the same cache entry; the stored batch keeps the row
-        order of the window that produced it, and ``rebind`` maps its
-        positions onto the current window through the two permutations.
-        Stability matters: equal tokens keep their relative window order on
-        both sides, so tie-breaks between structurally identical jobs stay
-        aligned with a fresh enumeration."""
+        order) hit the same cache entry.  A same-order hit shares the
+        stored arrays outright; a *permuted* hit re-orders the stored rows
+        into the current window's reference enumeration order and re-runs
+        the (cheap, vectorized) row reductions in that order — row order
+        is load-bearing, because exact score ties break to the earliest
+        row, and normalized best modes tie by construction.  Replaying the
+        producer's row order verbatim diverged from a cold enumeration on
+        exactly those ties.  Stability matters: equal tokens keep their
+        relative window order on both sides, so the position bijection
+        between producer and consumer windows is well-defined."""
         if all(wkey[i] <= wkey[i + 1] for i in range(len(wkey) - 1)):
             return None
         return tuple(sorted(range(len(wkey)), key=wkey.__getitem__))
@@ -475,6 +505,21 @@ class DecisionCache:
     ) -> None:
         self._put(self._decisions, key, entry, self.max_decisions)
 
+    def launch(self, key: Tuple) -> Optional[Tuple]:
+        """Raw-key launch replay: the final pair tuple for an exact repeat
+        of a decision state (token order included), or None."""
+        return self._get(self._launches, key)
+
+    def store_launch(self, key: Tuple, pairs: Tuple) -> None:
+        self._put(self._launches, key, pairs, self.max_launches)
+
+    def frontier(self, key: Tuple) -> Optional[Tuple]:
+        """Canonical-key tie frontier for a permuted repeat, or None."""
+        return self._get(self._frontiers, key)
+
+    def store_frontier(self, key: Tuple, cands: Tuple) -> None:
+        self._put(self._frontiers, key, cands, self.max_frontiers)
+
     def stats(self) -> Dict[str, float]:
         def rate(h, m):
             return h / (h + m) if h + m else 0.0
@@ -492,6 +537,8 @@ class DecisionCache:
             "tables": len(self._tables),
             "oracles": len(self._oracles),
             "decisions": len(self._decisions),
+            "launches": len(self._launches),
+            "frontiers": len(self._frontiers),
         }
 
 
@@ -512,6 +559,10 @@ class ScoredBatch:
         self.specs = list(specs)
         self._blocks = blocks
         self._table = table
+        # exact-path batches carry the reference row order and can be
+        # re-ordered onto a permuted window; beam batches cannot (beam
+        # pruning is itself window-order dependent)
+        self.exact = True
         self._padded: Optional[Tuple[np.ndarray, ...]] = None
         self._padded_f: Optional[np.ndarray] = None
         self._best_memo: Dict[Tuple[float, bool], Optional[int]] = {}
@@ -604,6 +655,16 @@ class ScoredBatch:
             for j, k in zip(job_mat[row], mode_mat[row])
         )
 
+    def row_pairs(self, i: int) -> Tuple[Tuple[int, int], ...]:
+        """Name-free form of ``action(i)``: (window position, mode index)
+        pairs — what the launch-memo layers store and replay."""
+        b = int(np.searchsorted(self._starts, i, side="right")) - 1
+        row = i - self._starts[b]
+        _, _, _, job_mat, mode_mat = self._blocks[b]
+        return tuple(
+            (int(j), int(k)) for j, k in zip(job_mat[row], mode_mat[row])
+        )
+
     def to_list(self):
         """Reference-format [(score, action), ...] — for parity tests."""
         return [(float(self.scores[i]), self.action(i)) for i in range(len(self))]
@@ -681,7 +742,14 @@ def enumerate_scored(
             batch, st_order = hit
             if st_order == order:
                 return batch.rebind(specs)
-            return batch.rebind(_permute_specs(specs, order, st_order))
+            reordered = _reorder_hit(
+                batch, specs, st_order, order, cache, wkey,
+                g_free=g_free, M=M, lam=lam, lam_f=lam_f,
+            )
+            if reordered is not None:
+                return reordered
+            # beam batch on a permuted window: fall through to a fresh
+            # enumeration (beam row order is window-order dependent)
         table, warm = cache.table(wkey, specs)
         oracle = cache.oracle(mask, len(free_map), view.domains, occ)
     else:
@@ -698,27 +766,83 @@ def enumerate_scored(
             table, oracle, k_avail, g_free, M, lam, beam, lam_f=lam_f
         )
     batch = ScoredBatch(specs, [empty] + blocks, table=table)
+    batch.exact = est <= exact_limit
     if dkey is not None:
         cache.store_decision(dkey, (batch, order))
     return batch
 
 
-def _permute_specs(
+def _reorder_hit(
+    batch: "ScoredBatch",
     specs: Sequence[JobSpec],
-    order: Optional[Tuple[int, ...]],
     st_order: Optional[Tuple[int, ...]],
-) -> List[JobSpec]:
-    """Bind a cached batch (built from a *permutation* of this window) to
-    the current specs: canonical slot ``c`` holds the stored window's
-    position ``st_order[c]`` and the current window's position
-    ``order[c]`` — both carry the same token, so the swap is pure."""
+    order: Optional[Tuple[int, ...]],
+    cache: DecisionCache,
+    wkey: Tuple,
+    *,
+    g_free: int,
+    M: int,
+    lam: float,
+    lam_f: float,
+) -> Optional["ScoredBatch"]:
+    """Bind a cached batch built from a *permutation* of this window:
+    remap its rows into this window's reference enumeration order and
+    recompute the row reductions in that order.
+
+    Row order is semantic — exact score ties break to the earliest row,
+    and the reference order is a pure function of window order (size-s
+    rows sort lexicographically by (ascending position tuple, mode
+    tuple)).  Replaying the producer's rows verbatim resolved ties in the
+    *producer's* window order, which diverged from a cold enumeration
+    whenever two structures tied exactly (normalized best modes all score
+    dev=0, so cross-app ties are structural, not accidental).  The
+    reductions are also re-run here so float sums accumulate in this
+    window's slot order — everything downstream is bit-identical to a
+    fresh enumeration, at the cost of one gather per block.
+
+    Canonical slot ``c`` holds the stored window's position
+    ``st_order[c]`` and this window's position ``order[c]`` — both carry
+    the same token, so the position bijection is pure.  Returns None for
+    beam batches, whose row set itself depends on window order."""
+    if not batch.exact:
+        return None
     J = len(specs)
-    cur = order if order is not None else range(J)
-    st = st_order if st_order is not None else range(J)
-    out: List[JobSpec] = [None] * J  # type: ignore[list-item]
-    for c, p in zip(range(J), st):
-        out[p] = specs[cur[c]]
-    return out
+    cur = order if order is not None else tuple(range(J))
+    st = st_order if st_order is not None else tuple(range(J))
+    pi = np.empty(J, dtype=np.int64)
+    for c in range(J):
+        pi[st[c]] = cur[c]
+    table, _ = cache.table(wkey, specs)
+    blocks: List[_Block] = []
+    for blk in batch._blocks:
+        scores, tot, spread, job_mat, mode_mat = blk
+        s = job_mat.shape[1]
+        if s == 0:
+            blocks.append(blk)  # the empty action: state-only, order-free
+            continue
+        cpos = pi[job_mat]
+        within = np.argsort(cpos, axis=1, kind="stable")
+        cpos = np.take_along_axis(cpos, within, axis=1)
+        cmode = np.take_along_axis(mode_mat, within, axis=1)
+        # reference order = lex by (position tuple, mode tuple), most
+        # significant first; np.lexsort takes least-significant first
+        keys = tuple(cmode[:, k] for k in range(s - 1, -1, -1)) + tuple(
+            cpos[:, k] for k in range(s - 1, -1, -1)
+        )
+        perm = np.lexsort(keys)
+        job_mat = cpos[perm]
+        mode_mat = cmode[perm]
+        dev = table.mode_dev[job_mat, mode_mat]
+        tot2 = table.mode_g[job_mat, mode_mat].sum(axis=1)
+        sc = dev.sum(axis=1) / s + lam * ((g_free - tot2) / M)
+        if lam_f:
+            sc = sc + lam_f * (
+                table.mode_f[job_mat, mode_mat].sum(axis=1) / s
+            )
+        loads = table.mode_load[job_mat, mode_mat]
+        spread2 = _spread(loads.max(axis=1), loads.min(axis=1), s)
+        blocks.append((sc, tot2, spread2, job_mat, mode_mat))
+    return ScoredBatch(specs, blocks, table=table)
 
 
 def _empty_block(empty_score: float) -> _Block:

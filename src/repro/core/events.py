@@ -74,6 +74,7 @@ control-plane drivers need to resume.
 from __future__ import annotations
 
 import heapq
+import time as _time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -220,7 +221,19 @@ class EventLoop:
                    and arrival batches): owners stage every pending score
                    reduction as one cross-node kernel launch (ISSUE 9);
                    pure staging, ``_schedule`` behaves identically
-                   without it.
+                   without it,
+      prepare_complete — optional (pairs, t) hook fired once per
+                   same-instant COMPLETE burst, at the first completion's
+                   pop and *before* any of the burst is processed:
+                   ``pairs`` is [(node, running_job)] with one entry per
+                   distinct node (stale completions skipped).  Owners
+                   stage the burst's backfill-launch and elastic-resize
+                   reductions as one cross-node kernel launch (ISSUE 10).
+                   Unlike arrivals, completions are never drained
+                   together — each is still processed strictly in heap
+                   order against the live state, and staged results are
+                   signature-guarded predictions, so schedules are
+                   bit-identical with the hook absent.
     """
 
     def __init__(
@@ -245,6 +258,7 @@ class EventLoop:
         migrate_candidate: Optional[Callable] = None,
         reroute_waiting: Optional[Callable] = None,
         prepare_batch: Optional[Callable[[List[str], float], None]] = None,
+        prepare_complete: Optional[Callable] = None,
     ):
         self.sims = sims
         self.queue = EventQueue()
@@ -273,6 +287,12 @@ class EventLoop:
         # reduction as one cross-node kernel launch.  Pure staging — the
         # per-node ``_schedule`` calls behave identically without it.
         self.prepare_batch = prepare_batch
+        # COMPLETE-burst staging (ISSUE 10): fired once per same-instant
+        # completion burst with the *predicted* (node, job) pairs, before
+        # any of them is processed.  ``_staged_complete_t`` marks the
+        # instant already staged so later pops of the same burst skip it.
+        self.prepare_complete = prepare_complete
+        self._staged_complete_t: Optional[float] = None
         # global per-job retry counts: a job killed on node A and rerouted
         # to node B keeps burning the same budget
         self._fault_retry: Dict[str, int] = {}
@@ -379,6 +399,29 @@ class EventLoop:
             nm, rj = payload
             if rj.preempted or rj.failed:
                 return  # superseded by a PREEMPT event / killed by a fault
+            if (
+                self.prepare_complete is not None
+                and t != self._staged_complete_t
+                and q.next_is(t, EVT_COMPLETE)
+            ):
+                # first pop of a same-instant COMPLETE burst: peek (never
+                # pop) the rest of the burst and stage the cross-node
+                # reductions once.  Only the first completion per node is
+                # staged — later ones see a state this prediction cannot
+                # cover and recompute solo via the signature guard.
+                self._staged_complete_t = t
+                pairs = [(nm, rj)]
+                seen = {nm}
+                for tt, kk, _, p in q._heap:
+                    if tt != t or kk != EVT_COMPLETE:
+                        continue
+                    nm2, rj2 = p
+                    if nm2 in seen or rj2.preempted or rj2.failed:
+                        continue
+                    seen.add(nm2)
+                    pairs.append((nm2, rj2))
+                if len(pairs) > 1:
+                    self.prepare_complete(pairs, t)
             sim = self.sims[nm]
             sim.complete(rj)
             if self.on_complete is not None:
@@ -507,13 +550,19 @@ class EventLoop:
         cfg = self.elastic
         sim = self.sims[nm]
         if cfg.resize and cfg.resize_before_backfill:
+            t0 = _time.perf_counter()
             self._try_resize(nm, t)
+            sim.resize_time += _time.perf_counter() - t0
         if sim.waiting:
             self._schedule(nm)
         if cfg.resize and not cfg.resize_before_backfill:
+            t0 = _time.perf_counter()
             self._try_resize(nm, t)
+            sim.resize_time += _time.perf_counter() - t0
         if cfg.migrate and self.migrate_candidate is not None:
+            t0 = _time.perf_counter()
             self._try_migrate(nm, t)
+            sim.migrate_time += _time.perf_counter() - t0
 
     def _try_resize(self, nm: str, t: float) -> None:
         sim = self.sims[nm]

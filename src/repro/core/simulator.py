@@ -123,6 +123,8 @@ class NodeSim:
         self.idle_unit_seconds = 0.0
         self.decision_time = 0.0
         self.decision_events = 0
+        self.resize_time = 0.0  # wall-clock inside the resize phase
+        self.migrate_time = 0.0  # wall-clock inside the migration phase
         # elastic bookkeeping (inert unless the substrate drives it)
         self.progress: Dict[str, float] = {}  # job -> completed-work fraction
         self.needs_restart: Set[str] = set()  # next launch pays restart_time
@@ -438,6 +440,8 @@ class NodeSim:
             records=self.records,
             decision_time_s=self.decision_time,
             decision_events=self.decision_events,
+            resize_time_s=self.resize_time,
+            migrate_time_s=self.migrate_time,
             preemptions=self.preemptions,
             migrations_in=self.migrations_in,
             migrations_out=self.migrations_out,

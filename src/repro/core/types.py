@@ -211,6 +211,8 @@ class ScheduleResult:
     records: List[JobRecord]
     decision_time_s: float = 0.0  # total wall-clock spent inside the policy
     decision_events: int = 0
+    resize_time_s: float = 0.0  # wall-clock inside the elastic resize phase
+    migrate_time_s: float = 0.0  # wall-clock inside the migration phase
     # elastic substrate accounting (all zero/empty for static runs)
     preemptions: int = 0  # checkpoints taken on this node
     migrations_in: int = 0  # jobs that arrived via MIGRATE events
@@ -270,6 +272,11 @@ class ClusterResult:
     # fleet fragmentation gauge (ISSUE 9): time_avg / peak / final
     # unusable-GPU fraction given the pending mix, à la Lettich et al.
     fragmentation: Dict[str, float] = field(default_factory=dict)
+    # per-phase decision wall-clock breakdown (ISSUE 10): "dispatch"
+    # (routing), "launch" (launch scoring inside on_event), "resize"
+    # (elastic resize phase), "migrate" (migration phase), "stage"
+    # (cross-node batched kernel staging)
+    decision_phases: Dict[str, float] = field(default_factory=dict)
 
     @property
     def busy_energy(self) -> float:

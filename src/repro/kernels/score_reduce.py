@@ -332,3 +332,151 @@ def score_reduce_batch(
     scores = np.asarray(scores)
     best = np.asarray(best)
     return [(scores[k, : sizes[k][0]], int(best[k])) for k in range(D)]
+
+
+# ---------------------------------------------------------------------------
+# Multi-window reduction: many variable-size windows share one launch by
+# packing rows, not by padding every window to the widest (ISSUE 10
+# tentpole).  The COMPLETE path's windows are tiny-but-many (one per
+# eligible resize candidate, one per backfilling node); stacking them on a
+# node axis like ``score_reduce_batch`` would pad each to _BLOCK_B rows,
+# so instead the rows concatenate into one block and the per-window
+# [λ, G_free, M, λ_f] scalars ride as per-row columns.
+# ---------------------------------------------------------------------------
+
+
+def _kernel_multi(dev_ref, g_ref, f_ref, n_ref, bias_ref, mask_ref,
+                  lam_ref, gfree_ref, m_ref, lamf_ref,
+                  scores_ref, tot_ref):
+    """Grid step i: row-block i of the packed multi-window table.  Eq. (1)
+    params are per-row columns (windows straddle block boundaries freely);
+    the per-window argmin is a segmented combine outside the kernel."""
+    scores, tot = _row_scores(
+        dev_ref[:], g_ref[:], f_ref[:], n_ref[:], bias_ref[:], mask_ref[:],
+        lam_ref[:], gfree_ref[:], m_ref[:], lamf_ref[:],
+    )
+    scores_ref[:] = scores
+    tot_ref[:] = tot
+
+
+@functools.partial(jax.jit, static_argnames=("n_windows", "mode"))
+def _reduce_multi_jit(lam, gfree, m, lamf, dev, g, f, n, bias, mask,
+                      wid, starts, *, n_windows: int, mode: str):
+    b_pad, s_pad = dev.shape
+    if mode == "ref":
+        scores2, tot2 = _row_scores(
+            dev, g, f, n, bias, mask, lam, gfree, m, lamf
+        )
+    else:
+        nb = b_pad // _BLOCK_B
+        col = pl.BlockSpec((_BLOCK_B, 1), lambda i: (i, 0))
+        plane = pl.BlockSpec((_BLOCK_B, s_pad), lambda i: (i, 0))
+        scores2, tot2 = pl.pallas_call(
+            _kernel_multi,
+            grid=(nb,),
+            in_specs=[plane, plane, plane, col, col, col, col, col, col, col],
+            out_specs=[col, col],
+            out_shape=[
+                jax.ShapeDtypeStruct((b_pad, 1), jnp.float32),
+                jax.ShapeDtypeStruct((b_pad, 1), jnp.float32),
+            ],
+            interpret=(mode == "interpret"),
+        )(dev, g, f, n, bias, mask, lam, gfree, m, lamf)
+    scores = scores2[:, 0]
+    tot = tot2[:, 0]
+    # segmented tie-broken argmin — the same (min score, max count, min
+    # row) combine as _pick, scatter-reduced per window id.  Pad rows
+    # belong to a dummy window (their masked inf scores never matter).
+    seg_min = jnp.full((n_windows,), jnp.inf, dtype=scores.dtype)
+    m_w = seg_min.at[wid].min(scores)
+    tie = scores == m_w[wid]
+    seg_tot = jnp.full((n_windows,), -1.0, dtype=tot.dtype)
+    t_w = seg_tot.at[wid].max(jnp.where(tie, tot, -1.0))
+    cand = tie & (tot == t_w[wid])
+    ridx = jax.lax.iota(jnp.int32, b_pad)
+    seg_idx = jnp.full((n_windows,), b_pad, dtype=jnp.int32)
+    i_w = seg_idx.at[wid].min(jnp.where(cand, ridx, jnp.int32(b_pad)))
+    best = jnp.where(jnp.isinf(m_w), jnp.int32(-1), i_w - starts)
+    return scores, best
+
+
+def score_reduce_multi(
+    reqs: Sequence[Dict[str, Any]],
+    *,
+    mode: Optional[str] = None,
+) -> List[Tuple[np.ndarray, int]]:
+    """Reduce many independent candidate windows in one kernel launch.
+
+    Same request dicts as :func:`score_reduce_batch` (required
+    ``dev``/``g``/``n``/``lam``/``g_free``/``M``, optional
+    ``f``/``lam_f``/``bias``/``mask``), but the windows concatenate on the
+    row axis instead of stacking on a padded node axis — the right shape
+    when windows are many and small (the COMPLETE path: one window per
+    elastic resize candidate plus one per backfilling node).  Per-row
+    scores are the identical elementwise Eq. (1) ops as the solo kernel
+    (params broadcast per row instead of per launch), and the per-window
+    argmin applies the same tie-break, so each window's (scores, best)
+    pair is bit-identical to a solo :func:`score_reduce` call on it.
+    ``best`` is -1 for a window with no feasible candidate (including an
+    empty window).
+    """
+    if not reqs:
+        return []
+    sizes = [r["dev"].shape for r in reqs]
+    total = sum(b for b, _ in sizes)
+    s_max = max(s for _, s in sizes)
+    b_pad = max(_BLOCK_B, 1 << max(total - 1, 0).bit_length())
+    s_pad = max(_SLOT_PAD, -(-s_max // _SLOT_PAD) * _SLOT_PAD)
+    W = len(reqs)
+    # power-of-two window count strictly greater than W: the jit cache
+    # stays small and the last segment is always the pad rows' dummy
+    n_windows = 1 << max(W, 1).bit_length()
+    dev = np.zeros((b_pad, s_pad), dtype=np.float32)
+    g = np.zeros((b_pad, s_pad), dtype=np.float32)
+    f = np.zeros((b_pad, s_pad), dtype=np.float32)
+    n = np.zeros((b_pad, 1), dtype=np.float32)
+    bias = np.zeros((b_pad, 1), dtype=np.float32)
+    mask = np.zeros((b_pad, 1), dtype=np.float32)
+    lam = np.zeros((b_pad, 1), dtype=np.float32)
+    gfree = np.zeros((b_pad, 1), dtype=np.float32)
+    m = np.ones((b_pad, 1), dtype=np.float32)  # benign M for pad rows
+    lamf = np.zeros((b_pad, 1), dtype=np.float32)
+    wid = np.full(b_pad, n_windows - 1, dtype=np.int32)
+    starts = np.zeros(n_windows, dtype=np.int32)
+    off = 0
+    for k, r in enumerate(reqs):
+        B, S = sizes[k]
+        starts[k] = off
+        if B == 0:
+            continue  # empty window: stays all-inf, best = -1
+        rows = slice(off, off + B)
+        dev[rows, :S] = r["dev"]
+        g[rows, :S] = r["g"]
+        rf = r.get("f")
+        if rf is not None:
+            f[rows, :S] = rf
+        n[rows, 0] = np.asarray(r["n"], dtype=np.float32).reshape(B)
+        rb = r.get("bias")
+        if rb is not None:
+            bias[rows, 0] = np.asarray(rb, dtype=np.float32).reshape(B)
+        rm = r.get("mask")
+        if rm is None:
+            mask[rows, 0] = 1.0
+        else:
+            mask[rows, 0] = np.asarray(rm, dtype=np.float32).reshape(B)
+        lam[rows, 0] = r["lam"]
+        gfree[rows, 0] = r["g_free"]
+        m[rows, 0] = r["M"]
+        lamf[rows, 0] = r.get("lam_f", 0.0)
+        wid[rows] = k
+        off += B
+    scores, best = _reduce_multi_jit(
+        lam, gfree, m, lamf, dev, g, f, n, bias, mask, wid, starts,
+        n_windows=n_windows, mode=mode or _backend_mode(),
+    )
+    scores = np.asarray(scores)
+    best = np.asarray(best)
+    return [
+        (scores[int(starts[k]): int(starts[k]) + sizes[k][0]], int(best[k]))
+        for k in range(W)
+    ]

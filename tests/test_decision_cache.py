@@ -180,28 +180,26 @@ def _free_view():
 
 def test_permuted_window_hits_decision_cache():
     """[A, B] and [B, A] share one decision entry; before canonical keys the
-    permuted window was a guaranteed miss."""
+    permuted window was a guaranteed miss.  The permuted hit re-orders the
+    stored rows into the consumer window's reference order, so the batch is
+    bit-identical to a fresh enumeration — row for row, not just as a set
+    (row order carries the exact-tie break)."""
     a, b = _two_specs()
     view = _free_view()
     cache = DecisionCache()
     b1 = enumerate_scored([a, b], view, list(view.free_map), lam=0.35, cache=cache)
     b2 = enumerate_scored([b, a], view, list(view.free_map), lam=0.35, cache=cache)
     assert cache.decision_hits == 1 and cache.decision_misses == 1
-    assert b2.scores is b1.scores  # arrays shared through the rebind
-    # the permuted batch must equal a fresh enumeration of the permuted
-    # window as a scored-action *set* (purity)
     fresh = enumerate_scored([b, a], view, list(view.free_map), lam=0.35)
-    def as_set(batch):
-        return {
-            (round(s, 12), frozenset((sp.name, m.g) for sp, m in act))
-            for s, act in batch.to_list()
-        }
-    assert as_set(b2) == as_set(fresh)
-    # and the chosen action picks the same (job, g) set
-    ib, jf = b2.best_cached(), fresh.best_cached()
-    assert {(sp.name, m.g) for sp, m in b2.action(ib)} == {
-        (sp.name, m.g) for sp, m in fresh.action(jf)
-    }
+    assert np.array_equal(b2.scores, fresh.scores)  # bitwise, ordered
+    assert np.array_equal(b2.total_g, fresh.total_g)
+    for i in range(len(fresh)):
+        assert [
+            (sp.name, m.g) for sp, m in b2.action(i)
+        ] == [(sp.name, m.g) for sp, m in fresh.action(i)]
+    # an exact-order repeat still shares the stored arrays outright
+    b3 = enumerate_scored([a, b], view, list(view.free_map), lam=0.35, cache=cache)
+    assert b3.scores is b1.scores
 
 
 def test_permuted_window_rebind_binds_tokens_not_positions():
@@ -239,7 +237,12 @@ def test_canonical_keys_raise_hit_rate_on_shuffled_stream():
     assert s["decision_hit_rate"] > 0.9
 
 
-def test_launch_memo_hits_across_permuted_windows():
+def test_launch_memo_raw_layer_and_tie_frontier_share_permutations():
+    """The raw launch memo keys on exact token order (the chosen action
+    breaks exact score ties by window position, so a permuted window is a
+    different decision); the permuted window is instead served by the
+    tie-frontier layer, which re-breaks the tie in the consumer window's
+    order — no enumeration, no kernel, still bit-identical to cold."""
     truth = {
         "x#0": JobProfile(name="x#0", runtime={1: 100.0, 2: 60.0},
                           busy_power={1: 100.0, 2: 190.0}),
@@ -250,9 +253,26 @@ def test_launch_memo_hits_across_permuted_windows():
                    lam=0.35, tau=1.0)
     view = _free_view()
     l1 = pol.on_event(view, ["x#0", "y#0"])
+    assert pol.on_event(_free_view(), ["x#0", "y#0"]) == l1
+    assert pol.launch_hits == 1  # exact-order repeat hits the raw memo
     l2 = pol.on_event(_free_view(), ["y#0", "x#0"])
-    assert pol.launch_hits == 1
+    assert pol.launch_hits == 1  # permuted window misses the raw layer...
+    assert pol.frontier_hits == 1  # ...and replays the tie frontier
     assert {(l.job, l.g) for l in l1} == {(l.job, l.g) for l in l2}
+    # the frontier replay must match a cold policy on the permuted window
+    cold = EcoSched(ProfiledPerfModel(truth, noise=0.0, seed=0),
+                    lam=0.35, tau=1.0, cache=False)
+    lc = cold.on_event(_free_view(), ["y#0", "x#0"])
+    assert [(l.job, l.g) for l in l2] == [(l.job, l.g) for l in lc]
+    # with sharing off (the bench's pre-batching reference leg) the
+    # permuted window re-enumerates through the decision cache instead
+    ref = EcoSched(ProfiledPerfModel(truth, noise=0.0, seed=0),
+                   lam=0.35, tau=1.0, launch_share=False)
+    ref.on_event(_free_view(), ["x#0", "y#0"])
+    l3 = ref.on_event(_free_view(), ["y#0", "x#0"])
+    assert ref.frontier_hits == 0
+    assert ref._cache.decision_hits >= 1
+    assert [(l.job, l.g) for l in l3] == [(l.job, l.g) for l in lc]
 
 
 def test_permuted_hit_launch_order_matches_cold_evaluation():
@@ -278,7 +298,68 @@ def test_permuted_hit_launch_order_matches_cold_evaluation():
         lc = cached.on_event(view, window)
         lu = cold.on_event(view, window)
         assert [(l.job, l.g) for l in lc] == [(l.job, l.g) for l in lu], window
-    assert cached.launch_hits == 1  # the permuted window really hit
+    assert cached.frontier_hits == 1  # the permuted window really hit
+
+
+def test_permuted_hit_breaks_cross_structure_ties_in_window_order():
+    """Regression (ISSUE 10): two *different* structures whose best modes
+    both normalize to e_norm == 1.0 tie exactly on a full-node launch, so
+    the winner is whichever comes first in the window.  A canonical-key
+    replay used to resolve the tie in the producer window's order; the
+    re-ordering hit must pick the consumer window's first."""
+    a = _mk_spec("a#0", {1: 100.0, 4: 30.0}, {1: 130.0, 4: 400.0})
+    b = _mk_spec("b#0", {1: 95.0, 4: 30.0}, {1: 140.0, 4: 400.0})
+    assert DecisionCache.structure_of(a) != DecisionCache.structure_of(b)
+    view = _free_view()
+    cache = DecisionCache()
+    b1 = enumerate_scored([a, b], view, list(view.free_map), lam=0.35, cache=cache)
+    b2 = enumerate_scored([b, a], view, list(view.free_map), lam=0.35, cache=cache)
+    assert cache.decision_hits == 1  # the permuted window did hit
+    fresh = enumerate_scored([b, a], view, list(view.free_map), lam=0.35)
+    i1 = b1.best_cached(nonempty=True)
+    i2 = b2.best_cached(nonempty=True)
+    jf = fresh.best_cached(nonempty=True)
+    assert [sp.name for sp, _ in b1.action(i1)] == ["a#0"]
+    assert [sp.name for sp, _ in fresh.action(jf)] == ["b#0"]
+    assert [sp.name for sp, _ in b2.action(i2)] == ["b#0"]  # cold's pick
+
+
+def test_shared_cache_across_policies_is_pure():
+    """ISSUE 10: policies on identically-shaped nodes may pool one
+    ``DecisionCache``.  Cross-policy hits — including permuted ones over
+    tie-prone structures — must reproduce what each policy would have
+    decided with a private cache, launch for launch."""
+    truth = {
+        "x#0": JobProfile(name="x#0", runtime={1: 100.0, 4: 30.0},
+                          busy_power={1: 130.0, 4: 400.0}),
+        "y#0": JobProfile(name="y#0", runtime={1: 95.0, 4: 30.0},
+                          busy_power={1: 140.0, 4: 400.0}),
+    }
+
+    def policy(cache):
+        # τ wide enough to keep both modes: the apps then carry *distinct*
+        # structures whose best modes still tie exactly, so the permuted
+        # window goes through the tie-frontier re-break, not the raw layer
+        return EcoSched(ProfiledPerfModel(truth, noise=0.0, seed=0),
+                        lam=0.35, tau=4.0, cache=cache)
+
+    shared = DecisionCache()
+    p1, p2 = policy(shared), policy(shared)
+    c1, c2 = policy(True), policy(True)
+    for win, pooled, private in (
+        (["x#0", "y#0"], p1, c1),
+        (["y#0", "x#0"], p2, c2),  # cross-policy permuted hit
+    ):
+        lp = pooled.on_event(_free_view(), win)
+        lc = private.on_event(_free_view(), win)
+        assert [(l.job, l.g, l.f) for l in lp] == [
+            (l.job, l.g, l.f) for l in lc
+        ], win
+    # p2 really was served by p1's entry: the launch layers live in the
+    # shared cache, so the cross-policy permuted window replays p1's tie
+    # frontier without enumerating (decision layer never even consulted)
+    assert p2.frontier_hits == 1
+    assert shared.stats()["frontiers"] >= 1
 
 
 def test_exact_window_repeat_still_bit_identical():

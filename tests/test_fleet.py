@@ -391,3 +391,41 @@ def test_fleet_index_bounds_are_admissible():
     for p in range(fleet.n_pods):
         nodes = state.order[fleet.pod_lo[p]: fleet.pod_hi[p]]
         assert lb[p] <= out[nodes].min() + 1e-9
+
+
+def test_fleet_index_load_skew_bound_is_tight_then_decays_admissibly():
+    """ISSUE 10 load-skew pieces: right after a refresh the pod bound
+    equals the exact per-member outstanding minimum (tight, not a min of
+    sums), and between refreshes it decays at the fastest member drain
+    rate — staying below every member's true backlog at any later t."""
+    stream = fleet_stream(n=40, seed=13)
+    cl = fleet_cluster(
+        HierarchicalDispatcher(EnergyAwareDispatcher(), pod_size=4,
+                               pods_per_region=2)
+    )
+    run = cl.open_run(
+        apps=sorted({a.app for a in stream}),
+        jobs=[(a.name, a.app) for a in stream],
+    )
+    for a in sorted(stream, key=lambda a: a.t):
+        run.loop.queue.push(a.t, EVT_ARRIVAL, a) if a.t > 0 else run.route(a, 0.0)
+    # drain only part of the event queue so real work is still in flight
+    run.loop.run_until(sorted(a.t for a in stream)[len(stream) // 2])
+    state, fleet = run.state, run.state._fleet
+    now = run.loop.now
+    fleet.refresh(now)
+    out = state.outstanding(now)
+    lb = fleet.out_lb(now)
+    for p in range(fleet.n_pods):
+        nodes = state.order[fleet.pod_lo[p]: fleet.pod_hi[p]]
+        assert lb[p] == pytest.approx(out[nodes].min())  # tight at refresh
+    assert out.max() > out.min()  # the stream actually skews the load
+    # admissible decay: without any new event, the bound at a later
+    # instant still lower-bounds each member's true outstanding there
+    for dt in (10.0, 300.0, 5000.0):
+        later = now + dt
+        out_t = state.outstanding(later)
+        lb_t = fleet.out_lb(later)
+        for p in range(fleet.n_pods):
+            nodes = state.order[fleet.pod_lo[p]: fleet.pod_hi[p]]
+            assert lb_t[p] <= out_t[nodes].min() + 1e-9, (p, dt)

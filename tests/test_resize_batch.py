@@ -1,0 +1,187 @@
+"""Fast COMPLETE path (ISSUE 10): batched elastic resize scoring and staged
+completion bursts must be *pure* accelerations — schedules bit-identical to
+the pre-PR per-job loop across every engine, with staging on or off, under
+faults mid-burst (stale signatures refit), and with DVFS retunes in play."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Cluster,
+    EcoSched,
+    ElasticConfig,
+    EnergyAwareDispatcher,
+    FaultConfig,
+    HierarchicalDispatcher,
+    JobProfile,
+    NodeSpec,
+    ProfiledPerfModel,
+    bursty_stream,
+)
+from repro.roofline.hw import A100, H100
+
+CHIPS = [H100, A100]
+SLOW = {"h100": 1.0, "a100": 1.6}
+APPS = [f"app{i}" for i in range(6)]
+
+
+def synth(chip, *, dvfs=False, seed=5):
+    """Alternating grow/anchor apps: even apps strongly scale (worth
+    resizing up when a completion frees units), odd apps are fixed-width
+    filler that keeps the packing tight enough to force real contention."""
+    s = SLOW[chip.name]
+    rng = np.random.default_rng(seed)
+    out = {}
+    freq = (
+        dict(freq_time={1: 1.25, 2: 1.6}, freq_power={1: 0.78, 2: 0.55})
+        if dvfs
+        else {}
+    )
+    for i, name in enumerate(APPS):
+        if i % 2 == 0:
+            counts = (4, 8)
+            t1 = float(rng.uniform(3600.0, 10800.0))
+            alpha = float(rng.uniform(0.42, 0.52))
+            beta = alpha - float(rng.uniform(0.10, 0.20))
+            p0 = float(rng.uniform(250.0, 400.0))
+            rt = {g: s * t1 / g**alpha for g in counts}
+            bp = {g: (p0 / s**0.5) * g**beta for g in counts}
+        else:
+            t4 = float(rng.uniform(600.0, 1800.0))
+            p0 = float(rng.uniform(250.0, 400.0))
+            rt = {4: s * t4}
+            bp = {4: (p0 / s**0.5) * 4**0.7}
+        out[name] = JobProfile(name=name, runtime=rt, busy_power=bp, **freq)
+    return out
+
+
+def fingerprint(res):
+    recs = []
+    for nm, r in sorted(res.per_node.items()):
+        for rec in r.records:
+            recs.append(
+                (
+                    rec.job,
+                    nm,
+                    rec.g,
+                    rec.f,
+                    round(rec.start, 9),
+                    round(rec.end, 9),
+                    rec.kind,
+                    rec.segment,
+                )
+            )
+    return (
+        tuple(sorted(recs)),
+        round(res.total_energy, 6),
+        round(res.makespan, 9),
+    )
+
+
+def run_fleet(
+    engine,
+    resize_batch,
+    staged,
+    *,
+    n_nodes=12,
+    n_jobs=80,
+    faults=None,
+    dvfs=False,
+    lam_f=0.0,
+    policies=None,
+):
+    truth = {c.name: synth(c, dvfs=dvfs) for c in CHIPS}
+
+    def policy_for(spec, _truth):
+        pol = EcoSched(
+            ProfiledPerfModel(_truth, noise=0.0, seed=1),
+            lam=0.35,
+            lam_f=lam_f,
+            tau=0.45,
+            window=8,
+            engine=engine,
+            cache=True,
+            resize_batch=resize_batch,
+        )
+        if policies is not None:
+            policies.append(pol)
+        return pol
+
+    cl = Cluster(
+        [
+            NodeSpec(f"n{i:03d}", CHIPS[(i // 4) % 2], units=8, domains=2)
+            for i in range(n_nodes)
+        ],
+        truth_for=lambda spec: truth[spec.chip.name],
+        policy_for=policy_for,
+        dispatcher=HierarchicalDispatcher(
+            EnergyAwareDispatcher(), pod_size=4, pods_per_region=2
+        ),
+    )
+    run_ = cl.open_run(
+        apps=APPS,
+        elastic=ElasticConfig(resize=True, resize_before_backfill=True),
+        faults=faults,
+    )
+    if not staged:
+        run_.loop.prepare_batch = None
+        run_.loop.prepare_complete = None
+    for k, a in enumerate(
+        bursty_stream(APPS, rate=0.6, n=n_jobs, seed=7, burst=12)
+    ):
+        run_.submit(f"j{k}", a.app, a.t)
+    run_.run_to_completion()
+    return run_.finalize()
+
+
+def test_batched_complete_parity_across_engines_and_staging():
+    """Every (engine, resize_batch, staged) combination must reproduce the
+    pre-PR reference — vector engine, per-job resize loop, no staging —
+    record for record, and the fast path must actually fire."""
+    ref = fingerprint(run_fleet("vector", False, False))
+    pols = []
+    res = run_fleet("jax", True, True, policies=pols)
+    assert fingerprint(res) == ref
+    assert res.resizes > 0  # the elastic path is exercised, not idle
+    # the staged jax run must consume staged multi-window results, not
+    # silently fall back to solo kernels
+    assert sum(p.resize_stage_served for p in pols) > 0
+    for engine, rb, st in [
+        ("jax", True, False),
+        ("jax", False, False),
+        ("vector", True, True),
+        ("vector", True, False),
+        ("python", True, False),
+    ]:
+        assert fingerprint(run_fleet(engine, rb, st)) == (
+            ref
+        ), f"schedule diverged for engine={engine} resize_batch={rb} staged={st}"
+
+
+def test_faults_mid_burst_keep_batched_parity():
+    """Node failures land between a COMPLETE burst's staging and its
+    consumption: the stale signature must force a refit, never a stale
+    replay — schedules stay identical to the solo path under faults."""
+    fc = FaultConfig(
+        seed=11, node_mtbf_s=40_000.0, node_mttr_s=8_000.0, degrade_frac=0.5
+    )
+    solo = run_fleet("vector", False, False, faults=fc)
+    batched = run_fleet("jax", True, True, faults=fc)
+    assert solo.node_failures > 0  # the fault plane actually fired
+    assert fingerprint(batched) == fingerprint(solo)
+
+
+def test_dvfs_retunes_keep_batched_parity():
+    """With freq_levels > 0 and lam_f > 0 the batched resize plane scores
+    (count, frequency) retunes; batching must stay pure *per engine* (the
+    f32 jax kernel and the f64 vector engine may break exact-score DVFS
+    ties differently — that pre-existing gap is not this path's to fix)
+    and the schedule must actually use a non-base frequency somewhere."""
+    for engine in ("vector", "jax"):
+        solo = run_fleet(engine, False, False, dvfs=True, lam_f=0.25)
+        batched = run_fleet(engine, True, True, dvfs=True, lam_f=0.25)
+        assert fingerprint(batched) == fingerprint(solo), engine
+        assert any(
+            rec.f != 0
+            for r in solo.per_node.values()
+            for rec in r.records
+        )

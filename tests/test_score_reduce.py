@@ -9,7 +9,11 @@ from repro.core import EcoSched, JobProfile, Node, ProfiledPerfModel, simulate
 from repro.core.engine import enumerate_scored
 from repro.core.perfmodel import _mk_spec
 from repro.core.types import NodeView
-from repro.kernels.score_reduce import score_reduce, score_reduce_batch
+from repro.kernels.score_reduce import (
+    score_reduce,
+    score_reduce_batch,
+    score_reduce_multi,
+)
 
 LAM = 0.35
 TOL = 1e-6  # float32 kernel vs float64 numpy engine (ISSUE 3 acceptance)
@@ -195,6 +199,68 @@ def test_batch_mixed_edges(mode):
 
 def test_batch_empty_request_list():
     assert score_reduce_batch([]) == []
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_multi_matches_solo_per_window(mode):
+    """The row-packed multi-window plane (the COMPLETE path's kernel)
+    reproduces a solo ``score_reduce`` per window bitwise, including
+    heterogeneous per-window f planes, biases, and λ_f."""
+    reqs, _ = batch_cases(range(9))
+    rng = np.random.default_rng(0)
+    for k, r in enumerate(reqs):  # spice up params per window
+        r["lam"] = float(0.1 + 0.1 * k)
+        if k % 2 == 0:
+            r["f"] = np.ones_like(r["dev"])
+            r["lam_f"] = 0.25
+        if k % 3 == 0:
+            r["bias"] = rng.uniform(0.0, 0.5, size=len(r["dev"])).astype(
+                np.float32
+            )
+    out = score_reduce_multi(reqs, mode=mode)
+    assert len(out) == len(reqs)
+    for (scores, best), r in zip(out, reqs):
+        s_solo, b_solo = score_reduce(
+            r["dev"], r["g"], r["n"], f=r.get("f"), lam=r["lam"],
+            g_free=r["g_free"], M=r["M"], lam_f=r.get("lam_f", 0.0),
+            bias=r.get("bias"), mode=mode,
+        )
+        assert best == b_solo
+        finite = np.isfinite(s_solo)
+        assert np.array_equal(scores[finite], s_solo[finite])
+        assert np.all(np.isinf(scores[~finite]))
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_multi_mixed_edges(mode):
+    """Zero-row, all-masked, and healthy windows share one launch: the
+    degenerate windows return -1 without perturbing their neighbours."""
+    reqs, refs = batch_cases(range(3))
+    dead_mask = np.zeros(len(reqs[1]["dev"]), dtype=bool)
+    reqs.insert(1, dict(reqs[1], mask=dead_mask))  # all-infeasible clone
+    s = reqs[0]["dev"].shape[1]
+    reqs.append(  # a truly empty window: zero candidate rows
+        dict(dev=np.zeros((0, s), dtype=np.float32),
+             g=np.zeros((0, s), dtype=np.float32),
+             n=np.zeros((0,), dtype=np.float32), lam=LAM, g_free=8, M=8)
+    )
+    out = score_reduce_multi(reqs, mode=mode)
+    assert out[1][1] == -1 and np.all(np.isinf(out[1][0]))
+    assert out[-1][1] == -1 and out[-1][0].size == 0
+    for (scores, best), (dev, g, n, v) in zip(
+        [out[0]] + list(out[2:-1]), refs
+    ):
+        s_solo, b_solo = score_reduce(
+            dev, g, n, lam=LAM, g_free=v.free_units, M=v.total_units,
+            mode=mode,
+        )
+        assert best == b_solo
+        finite = np.isfinite(s_solo)
+        assert np.array_equal(scores[finite], s_solo[finite])
+
+
+def test_multi_empty_request_list():
+    assert score_reduce_multi([]) == []
 
 
 def test_batch_per_node_params_ride_in_smem():
